@@ -1,0 +1,134 @@
+"""Paper Table 2 — simulation-capacity test (§6.1).
+
+Four cases × two parameter sets, mirroring the paper's object counts
+(requests / services / instances / cloudlets) on a single machine.  The
+paper's engine is a Java event heap; ours is a vectorized tensor DES, so
+we report wall time (excluding one-off XLA compilation, which is also
+reported) against the paper's published runtimes.
+
+Case structure (paper's counts; our topology interpretation in brackets):
+  1: 1 service × 10³ instances, 10⁵/10⁶ requests → 1 cloudlet per request
+  2: 5×10³/5×10⁴ parallel services (star fan-out), 10³ requests
+     → 5×10⁶/5×10⁷ cloudlets [paper lists "instances 1" = 1 replica/service]
+  3: 10²/10³ services × 3 replicas, 10⁴ requests
+  4: 5×10³ services × 3 replicas, 10³/10⁴ requests
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SimCaps, SimParams, Simulation, InstanceTemplate
+from repro.core.graph import build_graph
+
+from .common import emit, header
+
+PAPER_S = {  # running time in seconds from Table 2
+    ("case1", 0): 1.95, ("case1", 1): 13.29,
+    ("case2", 0): 0.84, ("case2", 1): 2.73,
+    ("case3", 0): 0.94, ("case3", 1): 1.40,
+    ("case4", 0): 4.58, ("case4", 1): 9.56,
+}
+
+
+def flat_services(n: int, mi: float) -> "ServiceGraph":
+    """n independent services, one API entering all of them (star without
+    a gateway node — fan-out happens at request generation)."""
+    names = [f"s{i}" for i in range(n)]
+    return build_graph(names, {}, [("api", names[0], 1.0)],
+                       {nm: mi for nm in names}, d_max=1)
+
+
+def run_case(tag, n_requests, n_services, replicas, cloudlets_per_req,
+             paper_s, fanout=1):
+    """Build a capacity scenario sized to the Table 2 object counts."""
+    mi = 50.0
+    if fanout > 1:
+        graph = flat_services(n_services, mi)
+        api_entries = [[f"s{i}" for i in range(n_services)]]
+    else:
+        graph = flat_services(n_services, mi)
+        api_entries = None
+
+    n_inst = n_services * replicas
+    n_vms = max(n_inst // 64, 4)
+    dt = 0.5
+    fanout = max(fanout, 1)
+    avg_wait_ticks = 4.0 / dt
+
+    # Admission sizing: pick k_fire (requests admitted per tick) so the
+    # active-cloudlet pool holds ~2 ticks of arrivals with 2× head-room,
+    # then give the run enough ticks to admit everything + drain.
+    target_ticks = 500
+    k_fire = max(int(np.ceil(n_requests / target_ticks)), 1)
+    if 5 * k_fire * fanout > 2 * (1 << 18):
+        k_fire = max(2 * (1 << 18) // (5 * fanout), 1)
+    pool = int(min(max(4 * k_fire * fanout, 1 << 12), 1 << 18))
+    nc = int(min(max(k_fire * avg_wait_ticks, 64), 1 << 16))
+    fire_rate = min(k_fire, nc / avg_wait_ticks)       # requests per tick
+    n_ticks = int(n_requests / fire_rate * 1.25) + 60
+    duration = n_ticks * dt
+
+    caps = SimCaps(
+        n_clients=nc,
+        max_requests=n_requests + nc + 8,
+        max_cloudlets=pool,
+        max_instances=n_inst,
+        n_vms=n_vms,
+        d_max=1,
+        max_replicas=replicas,
+        k_fire=k_fire,
+    )
+    params = SimParams(
+        dt=dt, n_ticks=n_ticks, n_clients=nc,
+        spawn_rate=nc / 5.0, wait_lo=2.0, wait_hi=6.0,
+        num_limit=n_requests, seed=0,
+    )
+    # Instance speed: each tick's per-instance batch drains in ~0.4 ticks,
+    # keeping residence ≈ 2 ticks and utilization < 1 (no blow-up).
+    a_i = fire_rate * fanout / n_inst        # cloudlet arrivals/inst/tick
+    mips = max(a_i, 0.4) * mi / (0.4 * dt)
+    tmpl = InstanceTemplate(mips=mips, limit_mips=2 * mips,
+                            ram=1.0, limit_ram=2.0, bw=100.0,
+                            replicas=replicas)
+    vm_mips = np.full(n_vms, 2.0 * mips * n_inst / n_vms + 1e4, np.float32)
+    vm_ram = np.full(n_vms, 1e9, np.float32)
+    sim = Simulation(graph, caps=caps, params=params, default_template=tmpl,
+                     vm_mips=vm_mips, vm_ram=vm_ram,
+                     api_entries=api_entries)
+    res = sim.run()
+    st = res.state
+    emit(f"table2/{tag}/requests", int(st.requests.count), n_requests)
+    emit(f"table2/{tag}/cloudlets", int(st.counters.spawned),
+         cloudlets_per_req * n_requests)
+    emit(f"table2/{tag}/finished", int(st.counters.finished), "",
+         f"dropped={int(st.counters.dropped_cloudlets)}")
+    emit(f"table2/{tag}/wall_s", f"{res.wall_time_s:.2f}", f"{paper_s:.2f}",
+         f"compile_s={res.compile_time_s:.1f} "
+         f"services={n_services} instances={n_inst}")
+    return res
+
+
+def main():
+    header("Table 2: capacity test (wall seconds, compile excluded)")
+    # case 1: requests-dominated (1 service × 10³ replicas)
+    run_case("case1a", 10 ** 5, 1, 1000, 1, PAPER_S[("case1", 0)])
+    run_case("case1b", 10 ** 6, 1, 1000, 1, PAPER_S[("case1", 1)])
+    # case 2: services-dominated (star fan-out, 1 replica per service)
+    run_case("case2a", 10 ** 3, 5 * 10 ** 3, 1, 5 * 10 ** 3,
+             PAPER_S[("case2", 0)], fanout=5 * 10 ** 3)
+    run_case("case2b", 10 ** 3, 5 * 10 ** 4, 1, 5 * 10 ** 4,
+             PAPER_S[("case2", 1)], fanout=5 * 10 ** 4)
+    # case 3: balanced 1:3 service:instance ratio
+    run_case("case3a", 10 ** 4, 10 ** 2, 3, 10 ** 2, PAPER_S[("case3", 0)],
+             fanout=10 ** 2)
+    run_case("case3b", 10 ** 4, 10 ** 3, 3, 10 ** 3, PAPER_S[("case3", 1)],
+             fanout=10 ** 3)
+    # case 4: high-instance scenarios
+    run_case("case4a", 10 ** 3, 5 * 10 ** 3, 3, 5 * 10 ** 3,
+             PAPER_S[("case4", 0)], fanout=5 * 10 ** 3)
+    run_case("case4b", 10 ** 4, 5 * 10 ** 3, 3, 5 * 10 ** 3,
+             PAPER_S[("case4", 1)], fanout=5 * 10 ** 3)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: ref-path wall time (CPU) + interpret-mode
+validation status for each Pallas kernel.  Real-TPU timings are N/A in
+this container; the kernels' roofline behaviour is covered by §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cloudlet_step import cloudlet_step, cloudlet_step_ref
+from repro.kernels.flash_attention import attention, attention_ref
+from repro.kernels.ssd_scan import ssd, ssd_ref
+from repro.kernels.tropical import tropical_matmul
+from repro.kernels.tropical.ref import tropical_matmul as tropical_ref
+
+from .common import emit, header
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def main():
+    header("kernel micro-benchmarks (CPU ref path, µs/call)")
+    rng = np.random.default_rng(0)
+
+    # tropical: 512×512 closure-sized matmul
+    a = jnp.asarray(np.where(rng.random((1, 512, 512)) < 0.5,
+                             rng.normal(size=(1, 512, 512)), -np.inf),
+                    jnp.float32)
+    us = _time(jax.jit(lambda x: tropical_matmul(x, x, use_pallas=False)), a)
+    chk = np.allclose(
+        np.asarray(tropical_matmul(a, a, use_pallas=True, interpret=True)),
+        np.asarray(tropical_ref(a, a)), rtol=1e-6)
+    emit("kernels/tropical_512", f"{us:.0f}", "",
+         f"interpret_matches_ref={chk}")
+
+    # flash attention: B1 H8 T1024 D64
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
+    us = _time(jax.jit(lambda q: attention_ref(q, q, q)), q)
+    got = attention(q, q, q, impl="flash", interpret=True, bq=128, bk=128)
+    chk = np.allclose(np.asarray(got, np.float32),
+                      np.asarray(attention_ref(q, q, q), np.float32),
+                      rtol=3e-2, atol=3e-2)
+    emit("kernels/flash_attention_1k", f"{us:.0f}", "",
+         f"interpret_matches_ref={chk}")
+
+    # ssd: B1 T512 H4 P32 N32
+    x = jnp.asarray(rng.normal(size=(1, 512, 4, 32)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.2, (1, 512, 4)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, 4), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(1, 512, 1, 32)) / 6, jnp.float32)
+    us = _time(jax.jit(lambda x: ssd(x, dt, A, B, B, impl="chunked",
+                                     chunk=64)), x)
+    got = ssd(x, dt, A, B, B, impl="kernel", interpret=True, chunk=64)
+    chk = np.allclose(np.asarray(got), np.asarray(ssd_ref(x, dt, A, B, B)),
+                      rtol=1e-3, atol=1e-3)
+    emit("kernels/ssd_512", f"{us:.0f}", "", f"interpret_matches_ref={chk}")
+
+    # cloudlet step: C=65536 pool
+    C, I = 65536, 512
+    status = jnp.asarray(rng.choice([0, 1, 2], C, p=[.3, .2, .5]), jnp.int32)
+    rem = jnp.asarray(rng.uniform(1, 500, C), jnp.float32)
+    inst = jnp.asarray(rng.integers(0, I, C), jnp.int32)
+    rate = jnp.asarray(rng.uniform(0, 300, C), jnp.float32)
+    us = _time(jax.jit(lambda s, r, i, ra: cloudlet_step_ref(
+        s, r, i, ra, 1.0, 0.5, I)), status, rem, inst, rate)
+    got = cloudlet_step(status[:4096], rem[:4096], inst[:4096], rate[:4096],
+                        1.0, 0.5, I, use_pallas=True, interpret=True)
+    want = cloudlet_step_ref(status[:4096], rem[:4096], inst[:4096],
+                             rate[:4096], 1.0, 0.5, I)
+    chk = all(np.allclose(np.asarray(g, np.float32),
+                          np.asarray(w, np.float32), rtol=2e-5, atol=1e-4)
+              for g, w in zip(got, want))
+    emit("kernels/cloudlet_step_64k", f"{us:.0f}", "",
+         f"interpret_matches_ref={chk}")
+
+
+if __name__ == "__main__":
+    main()

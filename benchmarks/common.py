@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: CSV emission in the repo-wide format.
+
+Every benchmark prints ``name,value,paper_reference,derived`` rows so
+``benchmarks/run.py`` can aggregate one table per paper table/figure.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, value, reference="", derived=""):
+    print(f"{name},{value},{reference},{derived}")
+    sys.stdout.flush()
+
+
+def header(title: str):
+    print(f"# === {title} ===")
+    print("name,value,paper_reference,derived")
+    sys.stdout.flush()
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,53 @@
+"""Aggregate benchmark runner — one section per paper table/figure plus
+the kernel micro-benchmarks.  Prints ``name,value,paper_reference,derived``
+CSV rows (see common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run [--skip capacity,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip", default="",
+                    help="comma list: capacity,generator,response,scaling,"
+                         "kernels")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    skip = set(filter(None, args.skip.split(",")))
+    only = set(filter(None, args.only.split(",")))
+
+    from . import (bench_capacity, bench_generator, bench_kernels,
+                   bench_response, bench_scaling)
+    sections = [
+        ("generator", bench_generator.main),   # Fig 9
+        ("capacity", bench_capacity.main),     # Table 2
+        ("response", bench_response.main),     # Fig 10
+        ("scaling", bench_scaling.main),       # Fig 11
+        ("kernels", bench_kernels.main),
+    ]
+    failed = []
+    for name, fn in sections:
+        if name in skip or (only and name not in only):
+            print(f"# --- skipping {name} ---")
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            print(f"# !!! section {name} FAILED")
+            traceback.print_exc()
+        print(f"# --- {name} done in {time.perf_counter() - t0:.1f}s ---",
+              flush=True)
+    if failed:
+        sys.exit(f"failed sections: {failed}")
+
+
+if __name__ == "__main__":
+    main()

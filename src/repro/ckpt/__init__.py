@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager, load_checkpoint, save_checkpoint  # noqa: F401
+from .elastic import reshard_tree  # noqa: F401

@@ -1,0 +1,36 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``.
+
+One module per assigned architecture (exact public-literature configs) plus
+the paper's own SockShop application config (sockshop.py).
+"""
+from __future__ import annotations
+
+from .base import SHAPES, ArchConfig, ShapeCfg, shape_applies  # noqa: F401
+
+
+def _registry():
+    from . import (granite_20b, internlm2_1_8b, jamba_1_5_large,
+                   mamba2_130m, phi3_medium_14b, qwen2_moe_a2_7b,
+                   qwen2_vl_7b, qwen3_0_6b, qwen3_moe_30b_a3b, whisper_base)
+    mods = [qwen3_0_6b, granite_20b, phi3_medium_14b, internlm2_1_8b,
+            whisper_base, mamba2_130m, jamba_1_5_large, qwen2_vl_7b,
+            qwen2_moe_a2_7b, qwen3_moe_30b_a3b]
+    return {m.CONFIG.name: m.CONFIG for m in mods}
+
+
+ARCH_IDS = (
+    "qwen3-0.6b", "granite-20b", "phi3-medium-14b", "internlm2-1.8b",
+    "whisper-base", "mamba2-130m", "jamba-1.5-large-398b", "qwen2-vl-7b",
+    "qwen2-moe-a2.7b", "qwen3-moe-30b-a3b",
+)
+
+
+def get_config(name: str) -> ArchConfig:
+    reg = _registry()
+    if name not in reg:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(reg)}")
+    return reg[name]
+
+
+def all_configs():
+    return _registry()

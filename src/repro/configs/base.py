@@ -1,0 +1,100 @@
+"""Architecture configuration schema + the shape grid assigned to every arch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models.mamba2 import MambaDims
+from repro.models.moe import MoECfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    moe: Optional[MoECfg] = None
+    mamba: Optional[MambaDims] = None
+    attn_period: int = 0         # hybrid: layers per period (1 attn + rest mamba)
+    ssd_chunk: int = 128
+    n_enc_layers: int = 0        # enc-dec only
+    n_frames: int = 0            # audio/vision stub frontend length
+    tie_embeddings: bool = False
+    sub_quadratic: bool = False  # True → long_500k cell applies
+    # §Perf knob — attention sharding formulation:
+    #   grouped       : baseline GQA einsum [B, Hkv, g, S, D] (head
+    #                   sharding capped at n_kv → replication when
+    #                   n_kv ∤ model-axis)
+    #   flat          : repeat K/V to Hq heads; head dim shards when
+    #                   Hq % model == 0
+    #   flat_seqshard : flat + query-sequence sharding constraint over the
+    #                   model axis (context parallelism; works ∀ head counts)
+    attn_impl: str = "grouped"
+    # §Perf knob — decode KV cache precision: "bf16" | "int8" (halves the
+    # cache-read bytes that dominate the decode memory term)
+    kv_dtype: str = "bf16"
+
+    def reduced(self, **kw) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        base = dict(
+            name=self.name + "-smoke", family=self.family,
+            n_layers=4 if self.attn_period else min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4, n_kv=max(1, min(self.n_kv, 2)), head_dim=16,
+            d_ff=128, vocab=256, qk_norm=self.qk_norm,
+            rope_theta=self.rope_theta, mrope_sections=None,
+            moe=None, mamba=None, attn_period=self.attn_period and 4,
+            ssd_chunk=16, n_enc_layers=min(self.n_enc_layers, 2),
+            n_frames=min(self.n_frames, 8) if self.n_frames else 0,
+            tie_embeddings=self.tie_embeddings,
+            sub_quadratic=self.sub_quadratic,
+        )
+        if self.mrope_sections is not None:
+            base["mrope_sections"] = (2, 3, 3)   # sums to head_dim/2 = 8
+        if self.moe is not None:
+            base["moe"] = MoECfg(
+                n_experts=min(self.moe.n_experts, 8),
+                top_k=min(self.moe.top_k, 2),
+                d_expert=32,
+                n_shared=min(self.moe.n_shared, 1),
+                d_shared=64 if self.moe.n_shared else 0,
+                capacity_factor=self.moe.capacity_factor,
+                norm_topk=self.moe.norm_topk)
+        if self.mamba is not None:
+            base["mamba"] = MambaDims.make(64, headdim=16, d_state=16,
+                                           n_groups=1, d_conv=4)
+        base.update(kw)
+        return ArchConfig(**base)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = (
+    ShapeCfg("train_4k", 4_096, 256, "train"),
+    ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    ShapeCfg("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_applies(cfg: ArchConfig, shape: ShapeCfg) -> Tuple[bool, str]:
+    """The assignment's skip rules (documented in DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention (skip for " \
+                      "pure full-attention archs)"
+    return True, ""

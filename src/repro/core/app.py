@@ -1,0 +1,109 @@
+"""Static application description consumed by the jitted tick function.
+
+``AppStatic`` bundles the service graph tables (paper Fig 7), the API entry
+mapping, the Gaussian cloudlet-length model (paper §4.1.2) and the
+per-service instance templates (paper Fig 3b YAML: requests/limits) as jnp
+arrays that the engine closes over.  It is configuration — never mutated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .generator import api_weight_cdf
+from .graph import ServiceGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceTemplate:
+    """Per-service instance spec (paper Fig 3b)."""
+
+    mips: float = 1000.0          # requests.share → initial CPU (MI/s)
+    limit_mips: float = 2000.0    # limits.share   → VS ceiling
+    ram: float = 300.0            # requests.ram (MB)
+    limit_ram: float = 500.0
+    bw: float = 100.0             # rec/trans bandwidth (Mbps)
+    replicas: int = 1
+    ram_per_cloudlet: float = 1.0   # linear usage model (paper §5.2)
+    bytes_per_rpc: float = 0.01     # MB per inter-service call
+
+
+class AppStatic(NamedTuple):
+    succ: jnp.ndarray           # [S, d_max] i32
+    n_succ: jnp.ndarray         # [S] i32
+    len_mean: jnp.ndarray       # [S] f32 (MI)
+    len_std: jnp.ndarray        # [S] f32
+    api_entry: jnp.ndarray      # [A, E_max] i32 (-1 pad)
+    api_n_entry: jnp.ndarray    # [A] i32
+    api_cdf: jnp.ndarray        # [A] f32
+    tmpl_mips: jnp.ndarray      # [S] f32
+    tmpl_limit_mips: jnp.ndarray
+    tmpl_ram: jnp.ndarray
+    tmpl_limit_ram: jnp.ndarray
+    tmpl_bw: jnp.ndarray
+    tmpl_replicas: jnp.ndarray  # [S] i32
+    ram_per_cl: jnp.ndarray     # [S] f32
+    bytes_per_rpc: jnp.ndarray  # [S] f32
+
+    @property
+    def n_services(self) -> int:
+        return self.succ.shape[0]
+
+    @property
+    def n_apis(self) -> int:
+        return self.api_cdf.shape[0]
+
+
+def build_app(graph: ServiceGraph,
+              templates: dict[str, InstanceTemplate] | None = None,
+              default_template: InstanceTemplate | None = None,
+              api_entries: Sequence[Sequence[str]] | None = None) -> AppStatic:
+    """Assemble :class:`AppStatic` from a graph + instance templates.
+
+    ``api_entries`` optionally overrides the per-API entry services with a
+    *list* per API (fan-out at the entry, used by capacity benchmarks);
+    default is the single entry service recorded in the graph.
+    """
+    default_template = default_template or InstanceTemplate()
+    templates = templates or {}
+    S = graph.n_services
+    A = graph.n_apis
+
+    def tarr(field: str, dtype=np.float32) -> np.ndarray:
+        return np.array(
+            [getattr(templates.get(n, default_template), field)
+             for n in graph.names], dtype=dtype)
+
+    if api_entries is None:
+        e_max = 1
+        entry = graph.api_entry.reshape(A, 1).astype(np.int32)
+        n_entry = np.ones((A,), dtype=np.int32)
+    else:
+        e_max = max(len(e) for e in api_entries)
+        entry = np.full((A, e_max), -1, dtype=np.int32)
+        n_entry = np.zeros((A,), dtype=np.int32)
+        for a, names in enumerate(api_entries):
+            ids = [graph.service_id(n) for n in names]
+            entry[a, : len(ids)] = ids
+            n_entry[a] = len(ids)
+
+    return AppStatic(
+        succ=jnp.asarray(graph.succ),
+        n_succ=jnp.asarray(graph.n_succ),
+        len_mean=jnp.asarray(graph.len_mean),
+        len_std=jnp.asarray(graph.len_std),
+        api_entry=jnp.asarray(entry),
+        api_n_entry=jnp.asarray(n_entry),
+        api_cdf=api_weight_cdf(graph.api_weight),
+        tmpl_mips=jnp.asarray(tarr("mips")),
+        tmpl_limit_mips=jnp.asarray(tarr("limit_mips")),
+        tmpl_ram=jnp.asarray(tarr("ram")),
+        tmpl_limit_ram=jnp.asarray(tarr("limit_ram")),
+        tmpl_bw=jnp.asarray(tarr("bw")),
+        tmpl_replicas=jnp.asarray(tarr("replicas", np.int32)),
+        ram_per_cl=jnp.asarray(tarr("ram_per_cloudlet")),
+        bytes_per_rpc=jnp.asarray(tarr("bytes_per_rpc")),
+    )

@@ -1,0 +1,211 @@
+"""Simulation engine: one fused tick per paper event cycle, scanned over time.
+
+``make_tick`` assembles the event phases of paper §3.2 —
+Generation → Dispatching → Scheduling → Derivative → Scaling & Migration —
+into a single jitted state transition, and ``Simulation`` wraps
+``jax.lax.scan`` over it with per-tick QoS traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import scheduler
+from .app import AppStatic, InstanceTemplate, build_app
+from .generator import client_phase
+from .graph import ServiceGraph
+from .placement import initial_allocation, migrate
+from .scaling import scaling_event
+from .types import (CL_EXEC, CL_WAITING, DynParams, INST_ON, SimCaps,
+                    SimParams, SimState, TickTrace, zeros_state)
+
+
+def make_tick(caps: SimCaps, params: SimParams,
+              has_edges: bool = True) -> Callable:
+    """Build the jit-able tick function (paper event cycle, vectorized).
+
+    ``params`` supplies the *static* knobs (policy selectors — they choose
+    program structure); the swept scalars (``dyn``) and the application
+    description (``app``) are traced arguments, so load/threshold sweeps
+    and re-parameterized graphs (calibration) reuse one compilation.
+    """
+
+    def tick(state: SimState, dyn: DynParams, app: AppStatic
+             ) -> Tuple[SimState, TickTrace]:
+        rng, k_gen, k_gen2, k_lb, k_der = jax.random.split(state.rng, 5)
+        state = state._replace(rng=rng)
+
+        # --- Generation (paper Alg 1) ---------------------------------
+        gen = client_phase(state.clients.wait, state.time,
+                           state.requests.count, app.api_cdf, dyn, k_gen)
+        state, gen_res = scheduler.gen_spawn(
+            state, app, caps, gen.fired, gen.api, gen.wait_proposal, k_gen2)
+
+        # --- Dispatching (waiting → execution, load-balanced) ----------
+        state = scheduler.dispatch(state, app, caps, params, dyn, k_lb)
+
+        # --- Scheduling (time-shared execution + finish) ----------------
+        state, fin_info = scheduler.execute(state, app, caps, params, dyn)
+
+        # --- Derivative (spawn successors along the service chain) ------
+        if has_edges:  # static: edge-free graphs skip the spawn machinery
+            state = scheduler.derive(state, app, caps, fin_info, k_der)
+
+        # --- Response (critical-path completion, paper §4.3.2) ----------
+        state, n_done = scheduler.complete(state, dyn)
+
+        # --- Scaling & Migration (paper §5) ------------------------------
+        if params.scaling_policy or params.migration_enabled:
+            due = (state.tick % dyn.scale_interval) == (dyn.scale_interval - 1)
+
+            def do_scale(st: SimState) -> SimState:
+                st = scaling_event(st, app, caps, params, dyn)
+                if params.migration_enabled:
+                    st = migrate(st, app, caps, dyn)
+                return st
+
+            state = jax.lax.cond(due, do_scale, lambda st: st, state)
+
+        trace = TickTrace(
+            completed=n_done,
+            generated=gen_res.n_new_requests,
+            n_waiting=jnp.sum((state.cloudlets.status == CL_WAITING)
+                              .astype(jnp.int32)),
+            n_exec=jnp.sum((state.cloudlets.status == CL_EXEC)
+                           .astype(jnp.int32)),
+            used_mips=jnp.sum(state.instances.used_mips),
+            active_instances=jnp.sum((state.instances.status == INST_ON)
+                                     .astype(jnp.int32)),
+            active_clients=gen.n_active,
+        )
+        state = state._replace(tick=state.tick + 1, time=state.time + dyn.dt)
+        return state, trace
+
+    return tick
+
+
+@dataclasses.dataclass
+class SimResult:
+    state: SimState
+    trace: TickTrace
+    wall_time_s: float
+    compile_time_s: float
+
+    def trace_np(self) -> dict:
+        return {k: np.asarray(v) for k, v in self.trace._asdict().items()}
+
+
+class Simulation:
+    """User-facing façade (paper Fig 4 ``Application`` + ``Register``).
+
+    >>> sim = Simulation(graph, caps=SimCaps(...), params=SimParams(...))
+    >>> result = sim.run()
+    """
+
+    def __init__(self, graph: ServiceGraph,
+                 caps: SimCaps | None = None,
+                 params: SimParams | None = None,
+                 templates: dict[str, InstanceTemplate] | None = None,
+                 default_template: InstanceTemplate | None = None,
+                 vm_mips: np.ndarray | None = None,
+                 vm_ram: np.ndarray | None = None,
+                 api_entries=None):
+        self.graph = graph
+        self.caps = caps or SimCaps()
+        self.params = params or SimParams()
+        self.app = build_app(graph, templates, default_template, api_entries)
+        V = self.caps.n_vms
+        self.vm_mips = np.asarray(
+            vm_mips if vm_mips is not None
+            else np.full(V, 32_000.0), np.float32)
+        self.vm_ram = np.asarray(
+            vm_ram if vm_ram is not None
+            else np.full(V, 65_536.0), np.float32)
+        if len(self.vm_mips) != V or len(self.vm_ram) != V:
+            raise ValueError("vm_mips/vm_ram must have n_vms entries")
+        self._has_edges = bool(np.asarray(graph.n_succ).sum() > 0)
+        self._tick = make_tick(self.caps, self.params, self._has_edges)
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: Optional[int] = None) -> SimState:
+        rng = jax.random.PRNGKey(self.params.seed if seed is None else seed)
+        state = zeros_state(self.caps, self.params, rng,
+                            n_services=self.graph.n_services)
+        inst, iof, reps = initial_allocation(
+            np.asarray(self.app.tmpl_replicas),
+            np.asarray(self.app.tmpl_mips),
+            np.asarray(self.app.tmpl_limit_mips),
+            np.asarray(self.app.tmpl_ram),
+            np.asarray(self.app.tmpl_limit_ram),
+            np.asarray(self.app.tmpl_bw),
+            self.vm_mips, self.vm_ram, self.caps)
+        instances = state.instances._replace(
+            **{k: jnp.asarray(v) for k, v in inst.items()})
+        vm_used_m = np.zeros_like(self.vm_mips)
+        vm_used_r = np.zeros_like(self.vm_ram)
+        for i in range(self.caps.max_instances):
+            v = inst["vm"][i]
+            if v >= 0:
+                vm_used_m[v] += inst["mips"][i]
+                vm_used_r[v] += inst["ram"][i]
+        vms = state.vms._replace(
+            mips=jnp.asarray(self.vm_mips), ram=jnp.asarray(self.vm_ram),
+            mips_used=jnp.asarray(vm_used_m), ram_used=jnp.asarray(vm_used_r))
+        sched = state.sched._replace(inst_of_rank=jnp.asarray(iof),
+                                     svc_replicas=jnp.asarray(reps))
+        return state._replace(instances=instances, vms=vms, sched=sched)
+
+    # ------------------------------------------------------------------
+    # One compiled executable per (static knobs × pytree shapes); swept
+    # scalars (dyn) and graph parameterizations (app) are traced arguments.
+    _compiled_cache: dict = {}
+
+    @staticmethod
+    def _shape_key(tree) -> tuple:
+        return tuple((tuple(x.shape), str(x.dtype))
+                     for x in jax.tree_util.tree_leaves(tree))
+
+    def _get_compiled(self, state: SimState, dyn: DynParams):
+        key = (self.caps, self.params.lb_policy, self.params.share_policy,
+               self.params.scaling_policy, self.params.max_concurrent > 0,
+               self.params.migration_enabled, self.params.n_ticks,
+               self._has_edges,
+               self._shape_key((state, dyn, self.app)))
+        hit = Simulation._compiled_cache.get(key)
+        if hit is not None:
+            return hit, 0.0
+        t0 = _time.perf_counter()
+        tick = self._tick
+        n_ticks = self.params.n_ticks
+
+        def run_fn(st: SimState, dp: DynParams, app: AppStatic):
+            return jax.lax.scan(lambda s, _: tick(s, dp, app), st, None,
+                                length=n_ticks)
+
+        compiled = jax.jit(run_fn).lower(state, dyn, self.app).compile()
+        dt = _time.perf_counter() - t0
+        Simulation._compiled_cache[key] = compiled
+        return compiled, dt
+
+    def run(self, seed: Optional[int] = None) -> SimResult:
+        """Compile (AOT, timed separately) and execute the full scan."""
+        state = self.init_state(seed)
+        dyn = DynParams.from_params(self.params)
+        compiled, compile_s = self._get_compiled(state, dyn)
+        t1 = _time.perf_counter()
+        out_state, trace = compiled(state, dyn, self.app)
+        out_state = jax.block_until_ready(out_state)
+        t2 = _time.perf_counter()
+        return SimResult(state=out_state, trace=trace,
+                         wall_time_s=t2 - t1, compile_time_s=compile_s)
+
+    # Convenience accessors -------------------------------------------
+    def responses(self, result: SimResult) -> np.ndarray:
+        r = np.asarray(result.state.requests.response)
+        return r[r >= 0]

@@ -1,0 +1,223 @@
+"""Service-dependency graph (paper §4.1.1, Figs 6–7).
+
+A :class:`ServiceGraph` is the static description of a cloud-native
+application: named services, their call edges (a DAG), the APIs that enter
+the graph, and per-service cloudlet statistics.  It is built host-side with
+numpy (it is configuration, not state) and exposes the padded successor /
+predecessor tables ("bidirectional service hierarchy", paper Fig 7) that the
+jitted engine consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServiceGraph:
+    """Static DAG of services + API entry points.
+
+    Attributes
+    ----------
+    names : service names, index = service id.
+    succ : [S, d_max] int32 successor table, padded with -1 (forward table
+        of paper Fig 7).
+    pred : [S, d_max_in] int32 predecessor table (reverse table of Fig 7).
+    n_succ / n_pred : [S] int32 degrees.
+    api_names : API labels, index = api id.
+    api_entry : [A] int32 entry service per API.
+    api_weight : [A] float32 selection weight (paper Fig 3a "weight").
+    len_mean / len_std : [S] float32 Gaussian cloudlet length in MI
+        (paper §4.1.2 — lengths are sampled per cloudlet).
+    levels : [S] int32 topological level of each service.
+    """
+
+    names: List[str]
+    succ: np.ndarray
+    pred: np.ndarray
+    n_succ: np.ndarray
+    n_pred: np.ndarray
+    api_names: List[str]
+    api_entry: np.ndarray
+    api_weight: np.ndarray
+    len_mean: np.ndarray
+    len_std: np.ndarray
+    levels: np.ndarray
+
+    # ------------------------------------------------------------------
+    @property
+    def n_services(self) -> int:
+        return len(self.names)
+
+    @property
+    def n_apis(self) -> int:
+        return len(self.api_names)
+
+    @property
+    def d_max(self) -> int:
+        return int(self.succ.shape[1])
+
+    @property
+    def depth(self) -> int:
+        return int(self.levels.max()) + 1 if self.n_services else 0
+
+    def service_id(self, name: str) -> int:
+        return self.names.index(name)
+
+    # ------------------------------------------------------------------
+    def adjacency(self) -> np.ndarray:
+        """Dense [S, S] bool adjacency matrix (i calls j)."""
+        S = self.n_services
+        adj = np.zeros((S, S), dtype=bool)
+        for i in range(S):
+            for j in self.succ[i]:
+                if j >= 0:
+                    adj[i, int(j)] = True
+        return adj
+
+    def chains_from(self, root: int, limit: int = 4096) -> List[List[int]]:
+        """Enumerate root→leaf chains (paper §4.1.1 "service chains").
+
+        Used by analysis/tests only; the engine never enumerates paths —
+        it uses the tropical longest-path formulation (critical_path.py).
+        """
+        chains: List[List[int]] = []
+
+        def dfs(node: int, path: List[int]):
+            if len(chains) >= limit:
+                return
+            succs = [int(s) for s in self.succ[node] if s >= 0]
+            if not succs:
+                chains.append(path)
+                return
+            for s in succs:
+                dfs(s, path + [s])
+
+        dfs(root, [root])
+        return chains
+
+    def validate(self) -> None:
+        """Reject cyclic graphs (paper: service calls are acyclic)."""
+        S = self.n_services
+        indeg = self.n_pred.copy()
+        queue = [i for i in range(S) if indeg[i] == 0]
+        seen = 0
+        while queue:
+            u = queue.pop()
+            seen += 1
+            for v in self.succ[u]:
+                if v >= 0:
+                    indeg[int(v)] -= 1
+                    if indeg[int(v)] == 0:
+                        queue.append(int(v))
+        if seen != S:
+            raise ValueError("service graph contains a cycle — not a DAG")
+
+
+def build_graph(
+    services: Sequence[str],
+    calls: Dict[str, Sequence[str]],
+    apis: Sequence[Tuple[str, str, float]],
+    len_mean: Dict[str, float],
+    len_std: Dict[str, float] | None = None,
+    d_max: int | None = None,
+) -> ServiceGraph:
+    """Construct a :class:`ServiceGraph`.
+
+    Parameters
+    ----------
+    services : ordered service names.
+    calls : service name → called service names (DAG edges).
+    apis : (api_name, entry_service, weight) triples.
+    len_mean / len_std : per-service Gaussian cloudlet length (MI).
+    d_max : pad successor tables to this out-degree (default: observed max).
+    """
+    names = list(services)
+    index = {n: i for i, n in enumerate(names)}
+    S = len(names)
+    succ_lists: List[List[int]] = [[] for _ in range(S)]
+    pred_lists: List[List[int]] = [[] for _ in range(S)]
+    for src, dsts in calls.items():
+        for dst in dsts:
+            if src not in index or dst not in index:
+                raise KeyError(f"unknown service in edge {src}->{dst}")
+            succ_lists[index[src]].append(index[dst])
+            pred_lists[index[dst]].append(index[src])
+
+    obs_out = max([len(l) for l in succ_lists], default=1) or 1
+    obs_in = max([len(l) for l in pred_lists], default=1) or 1
+    d_out = max(d_max or 0, obs_out)
+    d_in = max(d_max or 0, obs_in)
+
+    succ = np.full((S, d_out), -1, dtype=np.int32)
+    pred = np.full((S, d_in), -1, dtype=np.int32)
+    for i, l in enumerate(succ_lists):
+        succ[i, : len(l)] = l
+    for i, l in enumerate(pred_lists):
+        pred[i, : len(l)] = l
+
+    n_succ = np.array([len(l) for l in succ_lists], dtype=np.int32)
+    n_pred = np.array([len(l) for l in pred_lists], dtype=np.int32)
+
+    api_names = [a[0] for a in apis]
+    api_entry = np.array([index[a[1]] for a in apis], dtype=np.int32)
+    api_weight = np.array([a[2] for a in apis], dtype=np.float32)
+    if api_weight.sum() <= 0:
+        raise ValueError("API weights must sum to a positive value")
+
+    mean = np.array([len_mean[n] for n in names], dtype=np.float32)
+    if len_std is None:
+        std = 0.1 * mean
+    else:
+        std = np.array([len_std.get(n, 0.1 * len_mean[n]) for n in names],
+                       dtype=np.float32)
+
+    # Topological levels (longest distance from any root).
+    levels = np.zeros(S, dtype=np.int32)
+    indeg = n_pred.copy()
+    queue = [i for i in range(S) if indeg[i] == 0]
+    order = []
+    while queue:
+        u = queue.pop()
+        order.append(u)
+        for v in succ[u]:
+            if v >= 0:
+                levels[v] = max(levels[v], levels[u] + 1)
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    queue.append(int(v))
+    graph = ServiceGraph(
+        names=names, succ=succ, pred=pred, n_succ=n_succ, n_pred=n_pred,
+        api_names=api_names, api_entry=api_entry, api_weight=api_weight,
+        len_mean=mean, len_std=std, levels=levels,
+    )
+    graph.validate()
+    return graph
+
+
+def linear_chain(n: int, mi: float = 1000.0, name: str = "svc") -> ServiceGraph:
+    """n-service pipeline svc0 → svc1 → … (test/benchmark helper)."""
+    names = [f"{name}{i}" for i in range(n)]
+    calls = {names[i]: [names[i + 1]] for i in range(n - 1)}
+    return build_graph(names, calls, [("GET /chain", names[0], 1.0)],
+                       {nm: mi for nm in names})
+
+
+def star(n_leaves: int, mi: float = 1000.0) -> ServiceGraph:
+    """Fan-out: gateway → n_leaves parallel services (capacity tests)."""
+    names = ["gateway"] + [f"leaf{i}" for i in range(n_leaves)]
+    calls = {"gateway": names[1:]}
+    return build_graph(names, calls, [("GET /fanout", "gateway", 1.0)],
+                       {nm: mi for nm in names}, d_max=n_leaves)
+
+
+def diamond(mi: float = 1000.0) -> ServiceGraph:
+    """Paper Fig 6: A → {B, C} → D."""
+    return build_graph(
+        ["A", "B", "C", "D"],
+        {"A": ["B", "C"], "B": ["D"], "C": ["D"]},
+        [("GET /demo", "A", 1.0)],
+        {"A": mi, "B": mi, "C": 2 * mi, "D": mi},
+    )

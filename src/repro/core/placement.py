@@ -1,0 +1,136 @@
+"""Service placement & migration (paper §5.1, Algorithm 3).
+
+Initial allocation runs host-side (numpy) at simulation build time — it is
+configuration, not simulation state.  Runtime migration (overloaded VM →
+cooler VM) is jitted and runs inside the tick loop.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import policies
+from .app import AppStatic
+from .types import DynParams, INST_FREE, INST_ON, SimCaps, SimParams, SimState
+
+
+class PlacementError(RuntimeError):
+    pass
+
+
+def initial_allocation(app_replicas: np.ndarray, tmpl_mips: np.ndarray,
+                       tmpl_limit_mips: np.ndarray, tmpl_ram: np.ndarray,
+                       tmpl_limit_ram: np.ndarray, tmpl_bw: np.ndarray,
+                       vm_mips: np.ndarray, vm_ram: np.ndarray,
+                       caps: SimCaps,
+                       policy: int = policies.PLACE_MOST_AVAILABLE,
+                       ) -> Tuple[dict, np.ndarray, np.ndarray]:
+    """Paper Algorithm 3: deploy every service's replicas onto VMs.
+
+    VMs are kept in a priority order by available CPU ("sortedQueue …
+    descending available PE resources"); each instance goes to the head VM
+    that fits.  Returns (instance field dict, inst_of_rank, svc_replicas).
+    """
+    S = len(app_replicas)
+    I, V = caps.max_instances, caps.n_vms
+    if len(vm_mips) != V:
+        raise PlacementError(f"expected {V} VMs, got {len(vm_mips)}")
+
+    inst = {
+        "status": np.zeros(I, np.int32),
+        "service": np.full(I, -1, np.int32),
+        "vm": np.full(I, -1, np.int32),
+        "mips": np.zeros(I, np.float32),
+        "limit_mips": np.zeros(I, np.float32),
+        "request_mips": np.zeros(I, np.float32),
+        "ram": np.zeros(I, np.float32),
+        "limit_ram": np.zeros(I, np.float32),
+        "bw": np.zeros(I, np.float32),
+    }
+    vm_used_mips = np.zeros(V, np.float64)
+    vm_used_ram = np.zeros(V, np.float64)
+    inst_of_rank = np.full((S, caps.max_replicas), -1, np.int32)
+    svc_replicas = np.zeros(S, np.int32)
+
+    slot = 0
+    for s in range(S):
+        n_rep = int(app_replicas[s])
+        if n_rep > caps.max_replicas:
+            raise PlacementError(
+                f"service {s}: {n_rep} replicas > max_replicas={caps.max_replicas}")
+        for r in range(n_rep):
+            if slot >= I:
+                raise PlacementError("instance pool exhausted during placement")
+            free_mips = vm_mips - vm_used_mips
+            free_ram = vm_ram - vm_used_ram
+            if policy == policies.PLACE_FIRST_FIT:
+                order = np.arange(V)
+            elif policy == policies.PLACE_BEST_FIT:
+                order = np.argsort(free_mips)            # tightest fit first
+            else:  # PLACE_MOST_AVAILABLE (paper default)
+                order = np.argsort(-free_mips)
+            placed = False
+            for v in order:
+                if (free_mips[v] >= tmpl_mips[s]
+                        and free_ram[v] >= tmpl_ram[s]):
+                    inst["status"][slot] = INST_ON
+                    inst["service"][slot] = s
+                    inst["vm"][slot] = v
+                    inst["mips"][slot] = tmpl_mips[s]
+                    inst["limit_mips"][slot] = tmpl_limit_mips[s]
+                    inst["request_mips"][slot] = tmpl_mips[s]
+                    inst["ram"][slot] = tmpl_ram[s]
+                    inst["limit_ram"][slot] = tmpl_limit_ram[s]
+                    inst["bw"][slot] = tmpl_bw[s]
+                    vm_used_mips[v] += tmpl_mips[s]
+                    vm_used_ram[v] += tmpl_ram[s]
+                    inst_of_rank[s, r] = slot
+                    svc_replicas[s] += 1
+                    slot += 1
+                    placed = True
+                    break
+            if not placed:
+                raise PlacementError(
+                    f"service {s} replica {r}: no VM fits "
+                    f"(mips={tmpl_mips[s]}, ram={tmpl_ram[s]})")
+    return inst, inst_of_rank, svc_replicas
+
+
+def migrate(state: SimState, app: AppStatic, caps: SimCaps,
+            dyn: DynParams) -> SimState:
+    """One migration step (paper §5.1): if the hottest VM exceeds the
+    utilization threshold, move its smallest instance to the coolest VM."""
+    inst, vms = state.instances, state.vms
+    util = vms.mips_used / jnp.maximum(vms.mips, 1e-9)
+    hot = jnp.argmax(util)
+    need = util[hot] > dyn.mig_vm_util_hi
+
+    on_hot = (inst.status == INST_ON) & (inst.vm == hot)
+    cand_mips = jnp.where(on_hot, inst.mips, jnp.inf)
+    mover = jnp.argmin(cand_mips)
+    movable = need & on_hot[mover]
+
+    free = jnp.where(jnp.arange(vms.mips.shape[0]) == hot, -jnp.inf,
+                     vms.mips - vms.mips_used)
+    tgt = jnp.argmax(free)
+    fits = (free[tgt] >= inst.mips[mover]) & \
+           (vms.ram[tgt] - vms.ram_used[tgt] >= inst.ram[mover])
+    # anti-ping-pong hysteresis: only move if the target ends up strictly
+    # cooler than the source was (else the next event would bounce back)
+    tgt_util_after = (vms.mips_used[tgt] + inst.mips[mover]) \
+        / jnp.maximum(vms.mips[tgt], 1e-9)
+    do = movable & fits & (tgt_util_after < util[hot] - 1e-6)
+
+    dm = jnp.where(do, inst.mips[mover], 0.0)
+    dr = jnp.where(do, inst.ram[mover], 0.0)
+    vms = vms._replace(
+        mips_used=vms.mips_used.at[hot].add(-dm).at[tgt].add(dm),
+        ram_used=vms.ram_used.at[hot].add(-dr).at[tgt].add(dr),
+    )
+    inst = inst._replace(
+        vm=inst.vm.at[mover].set(jnp.where(do, tgt, inst.vm[mover])))
+    counters = state.counters._replace(
+        migrations=state.counters.migrations + do.astype(jnp.int32))
+    return state._replace(instances=inst, vms=vms, counters=counters)

@@ -1,0 +1,64 @@
+"""Policy interfaces and built-in policy identifiers (paper §3.2, §5).
+
+CloudNativeSim exposes *new policy interfaces* for cloud-native scheduling:
+load balancing (cloudlet→instance), CPU sharing (time-slice weighting),
+service scaling (NS/HS/VS) and placement (service→VM).  Built-ins are
+selected with the integer ids below (kept static so the engine stays
+jit-compilable); custom policies plug in as pure callables with the
+signatures documented in each Protocol.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import jax.numpy as jnp
+
+# --- load balancing (paper §4.2: "maximum idle resources or random") ------
+LB_ROUND_ROBIN = 0
+LB_RANDOM = 1
+LB_LEAST_LOADED = 2
+
+# --- CPU sharing (paper §4.2: equal vs unequal time slices) ---------------
+SHARE_EQUAL = 0        # equal time slice multiplexing
+SHARE_SRPT = 1         # unequal: weight ∝ 1/remaining (best-effort short-job)
+
+# --- scaling (paper §5.3 / §6.4: NS, HS, VS) -------------------------------
+SCALE_NONE = 0
+SCALE_HORIZONTAL = 1
+SCALE_VERTICAL = 2
+SCALE_HYBRID = 3       # HS first, VS when replica cap reached (beyond-paper)
+
+# --- placement (paper §5.1 Alg 3) ------------------------------------------
+PLACE_MOST_AVAILABLE = 0   # sorted queue by descending free PEs (paper)
+PLACE_FIRST_FIT = 1
+PLACE_BEST_FIT = 2
+
+LB_NAMES = {LB_ROUND_ROBIN: "round_robin", LB_RANDOM: "random",
+            LB_LEAST_LOADED: "least_loaded"}
+SCALE_NAMES = {SCALE_NONE: "NS", SCALE_HORIZONTAL: "HS",
+               SCALE_VERTICAL: "VS", SCALE_HYBRID: "HYBRID"}
+
+
+class LoadBalancer(Protocol):
+    """Custom load-balancing hook.
+
+    Called once per tick with the per-instance load view; must return, for
+    every service, the *rank offset* added to the round-robin cursor.  See
+    ``scheduler.dispatch`` for how ranks map to replicas.
+    """
+
+    def __call__(self, inst_service: jnp.ndarray, inst_load: jnp.ndarray,
+                 rng: jnp.ndarray) -> jnp.ndarray: ...
+
+
+class ScalingPolicy(Protocol):
+    """Custom scaling hook (paper §5.3 "users can customize auto-scaling").
+
+    Receives the utilization EMA per instance and the service mapping;
+    returns per-service desired replica delta (int) and per-instance mips
+    multiplier (float).  Built-ins: HS returns ±1 deltas, VS returns
+    up/down factors.
+    """
+
+    def __call__(self, util_ema: jnp.ndarray, inst_service: jnp.ndarray,
+                 inst_status: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...

@@ -1,0 +1,110 @@
+"""Free-slot allocation for fixed-capacity tensor pools.
+
+The paper's Java engine calls ``new RpcCloudlet()``; the tensor engine
+instead assigns the r-th new cloudlet to the r-th free slot of the active
+buffer with two prefix sums and two scatters — O(pool + spawns), no sort.
+Overflow is *counted*, never silently ignored (backpressure/drop semantics
+are the caller's choice).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SlotAssignment(NamedTuple):
+    dst: jnp.ndarray       # [K] i32 destination pool slot for rank r
+    src: jnp.ndarray       # [K] i32 source descriptor index for rank r
+    live: jnp.ndarray      # [K] bool rank is actually assigned
+    n_assigned: jnp.ndarray  # scalar i32
+    n_dropped: jnp.ndarray   # scalar i32 (valid descriptors with no slot)
+
+
+def assign_free_slots(free_mask: jnp.ndarray, valid_mask: jnp.ndarray,
+                      k_static: int | None = None) -> SlotAssignment:
+    """Match the r-th valid descriptor to the r-th free pool slot.
+
+    Parameters
+    ----------
+    free_mask : [C] bool — pool slots that may be written.
+    valid_mask : [M] bool — descriptors that want a slot (flattened).
+    k_static : static cap on assignments per call (default min(C, M)).
+    """
+    C = free_mask.shape[0]
+    M = valid_mask.shape[0]
+    K = min(C, M) if k_static is None else min(k_static, C, M)
+    i32 = jnp.int32
+
+    free_rank = jnp.cumsum(free_mask.astype(i32)) - 1      # [C]
+    want_rank = jnp.cumsum(valid_mask.astype(i32)) - 1     # [M]
+    n_free = free_rank[-1] + 1
+    n_want = want_rank[-1] + 1
+    n_assigned = jnp.minimum(jnp.minimum(n_free, n_want), K)
+
+    # slot_of_rank[r] = index of the r-th free slot (ranks ≥ K dropped).
+    slot_of_rank = jnp.zeros((K,), i32).at[
+        jnp.where(free_mask & (free_rank < K), free_rank, K)
+    ].set(jnp.arange(C, dtype=i32), mode="drop")
+    # src_of_rank[r] = index of the r-th valid descriptor.
+    src_of_rank = jnp.zeros((K,), i32).at[
+        jnp.where(valid_mask & (want_rank < K), want_rank, K)
+    ].set(jnp.arange(M, dtype=i32), mode="drop")
+
+    ranks = jnp.arange(K, dtype=i32)
+    live = ranks < n_assigned
+    return SlotAssignment(dst=slot_of_rank, src=src_of_rank, live=live,
+                          n_assigned=n_assigned,
+                          n_dropped=n_want - n_assigned)
+
+
+def scatter_new(pool_field: jnp.ndarray, asg: SlotAssignment,
+                flat_values: jnp.ndarray) -> jnp.ndarray:
+    """Write ``flat_values[asg.src[r]]`` into ``pool_field[asg.dst[r]]``.
+
+    ``flat_values`` must be the RAW [M] descriptor array (same indexing as
+    the ``valid_mask`` passed to :func:`assign_free_slots`) — never
+    pre-gathered by ``asg.src`` (that would double-index).
+    """
+    C = pool_field.shape[0]
+    dst = jnp.where(asg.live, asg.dst, C)  # sentinel C → dropped
+    return pool_field.at[dst].set(flat_values[asg.src], mode="drop")
+
+
+def scatter_ranked(pool_field: jnp.ndarray, asg: SlotAssignment,
+                   rank_values: jnp.ndarray) -> jnp.ndarray:
+    """Write rank-level values (already gathered via ``asg.src``, e.g.
+    freshly sampled lengths of shape [K]) into the assigned slots."""
+    C = pool_field.shape[0]
+    dst = jnp.where(asg.live, asg.dst, C)
+    return pool_field.at[dst].set(rank_values, mode="drop")
+
+
+def scatter_const(pool_field: jnp.ndarray, asg: SlotAssignment,
+                  value) -> jnp.ndarray:
+    """Write a broadcast constant into every assigned slot."""
+    C = pool_field.shape[0]
+    dst = jnp.where(asg.live, asg.dst, C)
+    val = jnp.broadcast_to(jnp.asarray(value, pool_field.dtype),
+                           (asg.dst.shape[0],))
+    return pool_field.at[dst].set(val, mode="drop")
+
+
+def segment_rank(keys: jnp.ndarray, mask: jnp.ndarray,
+                 num_segments: int) -> jnp.ndarray:
+    """Rank of each masked element within its segment (FCFS by slot order).
+
+    Sort-based (O(n log n)); used only on the capped space-shared dispatch
+    path where intra-service ordering matters (paper §4.2 waiting queue
+    admission).  Unmasked elements get rank = n (never admitted).
+    """
+    n = keys.shape[0]
+    i32 = jnp.int32
+    big = jnp.asarray(num_segments, i32)
+    k = jnp.where(mask, keys.astype(i32), big)
+    order = jnp.argsort(k, stable=True)  # stable → slot order within segment
+    pos = jnp.zeros((n,), i32).at[order].set(jnp.arange(n, dtype=i32))
+    # first position of each segment
+    first = jnp.full((num_segments + 1,), n, i32).at[k].min(pos)
+    rank = pos - first[k]
+    return jnp.where(mask, rank, n)

@@ -1,0 +1,129 @@
+"""QoS metrics extraction — the paper's Exporter/Reporter (§3.1, Fig 4).
+
+Produces request-based metrics (response-time stats, QPS, SLO violation
+rate), instance-based metrics (utilization, milicores) and service-based
+metrics (per-node delays, the input of the critical-path analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+from .engine import SimResult, Simulation
+from .types import INST_ON, SimParams
+
+
+@dataclasses.dataclass
+class QoSReport:
+    # request-based
+    generated_requests: int
+    completed_requests: int
+    dropped_requests: int
+    avg_response_ms: float
+    p50_response_ms: float
+    p95_response_ms: float
+    p99_response_ms: float
+    max_response_ms: float
+    slo_violation_rate: float
+    qps_mean: float
+    qps_peak: float
+    # cloudlet-based
+    cloudlets_spawned: int
+    cloudlets_finished: int
+    cloudlets_dropped: int
+    # instance-based
+    active_instances: int
+    avg_milicores: float          # paper Fig 11 metric
+    avg_utilization: float
+    # scaling activity
+    scale_out: int
+    scale_in: int
+    scale_up: int
+    scale_down: int
+    migrations: int
+    # engine
+    wall_time_s: float
+    compile_time_s: float
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+
+def summarize(sim: Simulation, result: SimResult,
+              window_s: Optional[float] = None) -> QoSReport:
+    """Fold the final state + per-tick traces into a QoS report."""
+    st = result.state
+    params = sim.params
+    resp = np.asarray(st.requests.response)
+    resp = resp[resp >= 0] * 1000.0      # → ms
+    trace = result.trace_np()
+
+    dt = params.dt
+    qps_series = trace["completed"] / dt
+    # steady-state window: after the client ramp (paper Fig 9 highlights
+    # the N_c/v boundary), unless the caller overrides.
+    ramp_ticks = int(min(params.n_clients / max(params.spawn_rate, 1e-9) / dt,
+                         len(qps_series) - 1))
+    steady = qps_series[ramp_ticks:] if len(qps_series) > ramp_ticks + 1 \
+        else qps_series
+
+    inst_status = np.asarray(st.instances.status)
+    on = inst_status == INST_ON
+    usage_sum = np.asarray(st.instances.usage_sum)
+    busy = np.asarray(st.instances.busy_ticks)
+    sim_time = float(st.time)
+    # milicores: time-averaged used MIPS converted via mi_per_milicore.
+    avg_used = usage_sum / max(sim_time, 1e-9)
+    milicores = avg_used * params.mi_per_milicore * 1000.0
+    mips = np.asarray(st.instances.mips)
+    util = np.where(mips > 0, avg_used / np.maximum(mips, 1e-9), 0.0)
+
+    def pct(p):
+        return float(np.percentile(resp, p)) if len(resp) else 0.0
+
+    completed = int(st.counters.completed)
+    return QoSReport(
+        generated_requests=int(st.requests.count),
+        completed_requests=completed,
+        dropped_requests=int(st.counters.dropped_requests),
+        avg_response_ms=float(resp.mean()) if len(resp) else 0.0,
+        p50_response_ms=pct(50), p95_response_ms=pct(95),
+        p99_response_ms=pct(99),
+        max_response_ms=float(resp.max()) if len(resp) else 0.0,
+        slo_violation_rate=float(st.counters.slo_violations)
+        / max(completed, 1),
+        qps_mean=float(steady.mean()) if len(steady) else 0.0,
+        qps_peak=float(qps_series.max()) if len(qps_series) else 0.0,
+        cloudlets_spawned=int(st.counters.spawned),
+        cloudlets_finished=int(st.counters.finished),
+        cloudlets_dropped=int(st.counters.dropped_cloudlets),
+        active_instances=int(on.sum()),
+        avg_milicores=float(milicores[on].mean()) if on.any() else 0.0,
+        avg_utilization=float(util[on].mean()) if on.any() else 0.0,
+        scale_out=int(st.counters.scale_out),
+        scale_in=int(st.counters.scale_in),
+        scale_up=int(st.counters.scale_up),
+        scale_down=int(st.counters.scale_down),
+        migrations=int(st.counters.migrations),
+        wall_time_s=result.wall_time_s,
+        compile_time_s=result.compile_time_s,
+    )
+
+
+def node_delays(result: SimResult) -> np.ndarray:
+    """Mean sojourn (wait + exec) per service — the per-node ``delay(n)``
+    of paper Eq 5, measured from the simulation."""
+    st = result.state.svc_stats
+    fin = np.asarray(st.finished).astype(np.float64)
+    return np.asarray(st.delay_sum) / np.maximum(fin, 1.0)
+
+
+def report_text(rep: QoSReport) -> str:
+    """Human-readable Reporter output (paper: 'displayed in system logs')."""
+    lines = ["=== CloudNativeSim QoS report ==="]
+    for f in dataclasses.fields(rep):
+        lines.append(f"  {f.name:22s} {getattr(rep, f.name)}")
+    return "\n".join(lines)

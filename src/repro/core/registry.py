@@ -1,0 +1,91 @@
+"""File registry (paper §3.1, Fig 3): JSON APIs/services + YAML instances.
+
+Users describe a cloud-native application with two documents and never
+touch engine internals:
+
+* ``app.json`` — APIs (name, weight, entry service) and services
+  (name, labels, calls, cloudlet length stats), Fig 3a.
+* ``instances.yaml`` — instance groups (prefix, labels, replicas, size,
+  bandwidths, requests/limits), Fig 3b.
+
+``register(...)`` parses both into a ready :class:`Simulation`.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Sequence
+
+import numpy as np
+import yaml
+
+from .app import InstanceTemplate
+from .engine import Simulation
+from .graph import ServiceGraph, build_graph
+from .types import SimCaps, SimParams
+
+
+def load_app_json(path_or_dict) -> Dict[str, Any]:
+    if isinstance(path_or_dict, (str, pathlib.Path)):
+        with open(path_or_dict) as f:
+            return json.load(f)
+    return dict(path_or_dict)
+
+
+def load_instances_yaml(path_or_dict) -> Dict[str, Any]:
+    if isinstance(path_or_dict, (str, pathlib.Path)):
+        with open(path_or_dict) as f:
+            return yaml.safe_load(f)
+    return dict(path_or_dict)
+
+
+def graph_from_spec(spec: Dict[str, Any],
+                    default_mi: float = 500.0) -> ServiceGraph:
+    """Build the service DAG from the Fig 3a JSON document."""
+    services = spec["services"]
+    names = [s["name"] for s in services]
+    calls = {s["name"]: list(s.get("calls", [])) for s in services}
+    len_mean = {s["name"]: float(s.get("mi", default_mi)) for s in services}
+    len_std = {s["name"]: float(s.get("mi_std", 0.1 * len_mean[s["name"]]))
+               for s in services}
+    apis = [(a["name"], a["entry"], float(a.get("weight", 1.0)))
+            for a in spec["apis"]]
+    return build_graph(names, calls, apis, len_mean, len_std)
+
+
+def templates_from_spec(spec: Dict[str, Any],
+                        graph: ServiceGraph) -> Dict[str, InstanceTemplate]:
+    """Map Fig 3b instance groups onto services by label/prefix match."""
+    templates: Dict[str, InstanceTemplate] = {}
+    for item in spec.get("instances", []):
+        labels = set(item.get("labels", [item.get("prefix", "")]))
+        req = item.get("requests", {})
+        lim = item.get("limits", {})
+        tmpl = InstanceTemplate(
+            mips=float(req.get("share", 1000.0)),
+            limit_mips=float(lim.get("share", 2 * req.get("share", 1000.0))),
+            ram=float(req.get("ram", 300.0)),
+            limit_ram=float(lim.get("ram", 500.0)),
+            bw=float(item.get("rec_bw", item.get("trans_bw", 100.0))),
+            replicas=int(item.get("replicas", 1)),
+            ram_per_cloudlet=float(item.get("ram_per_cloudlet", 1.0)),
+            bytes_per_rpc=float(item.get("bytes_per_rpc", 0.01)),
+        )
+        for name in graph.names:
+            if name in labels or any(name.startswith(l) for l in labels if l):
+                templates[name] = tmpl
+    return templates
+
+
+def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
+             params: SimParams | None = None, vm_mips=None, vm_ram=None
+             ) -> Simulation:
+    """One-call entity registration (paper Fig 4 ``Register`` class)."""
+    spec = load_app_json(app_spec)
+    graph = graph_from_spec(spec)
+    templates = {}
+    if instance_spec is not None:
+        inst_spec = load_instances_yaml(instance_spec)
+        templates = templates_from_spec(inst_spec, graph)
+    return Simulation(graph, caps=caps, params=params, templates=templates,
+                      vm_mips=vm_mips, vm_ram=vm_ram)

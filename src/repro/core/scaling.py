@@ -1,0 +1,186 @@
+"""Service scaling policies (paper §5.3, Algorithms 4–5).
+
+* NS — no scaling (paper §6.4 baseline).
+* HS — horizontal (Alg 4): replicate the instance set of a hot service onto
+  a VM with head-room; scale-in drains the newest replica of a cold service.
+* VS — vertical (Alg 5): raise/lower the CPU share of hot/cold instances
+  within the requests/limits band, releasing resources first and restoring
+  on allocation failure (modelled by a per-VM fair-share clamp).
+* HYBRID — HS until the replica cap, then VS (beyond-paper built-in).
+
+The scaling event fires every ``scale_interval`` ticks (paper: "a service
+scaling event is triggered at regular intervals").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import policies
+from .app import AppStatic
+from .types import (DynParams, INST_DRAIN, INST_FREE, INST_ON, SimCaps,
+                    SimParams, SimState)
+
+
+def _service_util(state: SimState, n_services: int) -> jnp.ndarray:
+    """Mean utilization EMA over the ON replicas of each service."""
+    inst = state.instances
+    on = inst.status == INST_ON
+    sid = jnp.where(on, inst.service, -1)
+    idx = jnp.where(sid >= 0, sid, n_services)
+    tot = jnp.zeros((n_services,), jnp.float32).at[idx].add(
+        jnp.where(on, inst.util_ema, 0.0), mode="drop")
+    cnt = jnp.zeros((n_services,), jnp.float32).at[idx].add(
+        on.astype(jnp.float32), mode="drop")
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ===========================================================================
+# Horizontal scaling (Algorithm 4)
+# ===========================================================================
+
+def horizontal(state: SimState, app: AppStatic, caps: SimCaps,
+               dyn: DynParams) -> SimState:
+    S = app.n_services
+    util = _service_util(state, S)
+    want_out = ((util > dyn.hs_util_hi)
+                & (state.sched.svc_replicas >= 1)
+                & (state.sched.svc_replicas < caps.max_replicas))
+    want_in = (util < dyn.hs_util_lo) & (state.sched.svc_replicas > 1)
+
+    def body(s, st: SimState) -> SimState:
+        st = jax.lax.cond(want_out[s], lambda x: _scale_out(x, s, app),
+                          lambda x: x, st)
+        st = jax.lax.cond(want_in[s], lambda x: _scale_in(x, s),
+                          lambda x: x, st)
+        return st
+
+    return jax.lax.fori_loop(0, S, body, state)
+
+
+def _scale_out(state: SimState, s, app: AppStatic) -> SimState:
+    """Alg 4: create a replica; bind on success, undo (no-op) on failure."""
+    inst, vms, sched = state.instances, state.vms, state.sched
+    slot = jnp.argmax(inst.status == INST_FREE)
+    has_slot = inst.status[slot] == INST_FREE
+    # paper Alg 3 line 3: VM queue sorted by descending available resources.
+    free = vms.mips - vms.mips_used
+    vm = jnp.argmax(free)
+    need_mips = app.tmpl_mips[s]
+    need_ram = app.tmpl_ram[s]
+    fits = (free[vm] >= need_mips) & (vms.ram[vm] - vms.ram_used[vm]
+                                      >= need_ram)
+    do = has_slot & fits
+
+    def commit(st: SimState) -> SimState:
+        i = st.instances._replace(
+            status=st.instances.status.at[slot].set(INST_ON),
+            service=st.instances.service.at[slot].set(s),
+            vm=st.instances.vm.at[slot].set(vm),
+            mips=st.instances.mips.at[slot].set(need_mips),
+            limit_mips=st.instances.limit_mips.at[slot].set(
+                app.tmpl_limit_mips[s]),
+            request_mips=st.instances.request_mips.at[slot].set(need_mips),
+            ram=st.instances.ram.at[slot].set(need_ram),
+            limit_ram=st.instances.limit_ram.at[slot].set(
+                app.tmpl_limit_ram[s]),
+            bw=st.instances.bw.at[slot].set(app.tmpl_bw[s]),
+            util_ema=st.instances.util_ema.at[slot].set(0.5),
+        )
+        v = st.vms._replace(
+            mips_used=st.vms.mips_used.at[vm].add(need_mips),
+            ram_used=st.vms.ram_used.at[vm].add(need_ram))
+        rank = st.sched.svc_replicas[s]
+        sc = st.sched._replace(
+            inst_of_rank=st.sched.inst_of_rank.at[s, rank].set(slot),
+            svc_replicas=st.sched.svc_replicas.at[s].add(1))
+        c = st.counters._replace(scale_out=st.counters.scale_out + 1)
+        return st._replace(instances=i, vms=v, sched=sc, counters=c)
+
+    return jax.lax.cond(do, commit, lambda st: st, state)
+
+
+def _scale_in(state: SimState, s) -> SimState:
+    """Drain the newest replica; the slot frees once its queue empties."""
+    sched = state.sched
+    rank = sched.svc_replicas[s] - 1
+    slot = sched.inst_of_rank[s, rank]
+    ok = (rank >= 1) & (slot >= 0)
+
+    def commit(st: SimState) -> SimState:
+        i = st.instances._replace(
+            status=st.instances.status.at[slot].set(INST_DRAIN))
+        sc = st.sched._replace(
+            inst_of_rank=st.sched.inst_of_rank.at[s, rank].set(-1),
+            svc_replicas=st.sched.svc_replicas.at[s].add(-1))
+        c = st.counters._replace(scale_in=st.counters.scale_in + 1)
+        return st._replace(instances=i, sched=sc, counters=c)
+
+    return jax.lax.cond(ok, commit, lambda st: st, state)
+
+
+# ===========================================================================
+# Vertical scaling (Algorithm 5) — vectorized with per-VM fair-share clamp
+# ===========================================================================
+
+def vertical(state: SimState, app: AppStatic, caps: SimCaps,
+             dyn: DynParams) -> SimState:
+    inst, vms = state.instances, state.vms
+    V = vms.mips.shape[0]
+    on = inst.status == INST_ON
+
+    want_up = on & (inst.util_ema > dyn.vs_util_hi) & \
+        (inst.mips < inst.limit_mips)
+    want_down = on & (inst.util_ema < dyn.vs_util_lo) & \
+        (inst.mips > inst.request_mips)
+
+    target = jnp.where(
+        want_up, jnp.minimum(inst.mips * dyn.vs_up_factor,
+                             inst.limit_mips),
+        jnp.where(want_down,
+                  jnp.maximum(inst.mips * dyn.vs_down_factor,
+                              inst.request_mips),
+                  inst.mips))
+    delta = target - inst.mips
+    dec = jnp.minimum(delta, 0.0)
+    inc = jnp.maximum(delta, 0.0)
+
+    vm_idx = jnp.where(inst.vm >= 0, inst.vm, V)
+    dec_per_vm = jnp.zeros((V,), jnp.float32).at[vm_idx].add(dec, mode="drop")
+    inc_per_vm = jnp.zeros((V,), jnp.float32).at[vm_idx].add(inc, mode="drop")
+    # Alg 5: release first, then try to allocate the new request; scale the
+    # grant down per-VM when the combined asks exceed head-room ("restore
+    # instance on failure" becomes a partial/zero grant).
+    headroom = vms.mips - (vms.mips_used + dec_per_vm)
+    grant = jnp.clip(headroom / jnp.maximum(inc_per_vm, 1e-9), 0.0, 1.0)
+    inc_granted = inc * grant[jnp.minimum(vm_idx, V - 1)]
+
+    new_mips = inst.mips + dec + inc_granted
+    applied = dec + inc_granted
+    vms = vms._replace(mips_used=vms.mips_used + jnp.zeros(
+        (V,), jnp.float32).at[vm_idx].add(applied, mode="drop"))
+    i32 = jnp.int32
+    counters = state.counters._replace(
+        scale_up=state.counters.scale_up
+        + jnp.sum((want_up & (inc_granted > 0)).astype(i32)),
+        scale_down=state.counters.scale_down
+        + jnp.sum(want_down.astype(i32)))
+    return state._replace(
+        instances=inst._replace(mips=new_mips), vms=vms, counters=counters)
+
+
+# ===========================================================================
+
+def scaling_event(state: SimState, app: AppStatic, caps: SimCaps,
+                  params: SimParams, dyn: DynParams) -> SimState:
+    """Dispatch to the configured policy (paper §6.4: NS / HS / VS)."""
+    if params.scaling_policy == policies.SCALE_NONE:
+        return state
+    if params.scaling_policy == policies.SCALE_HORIZONTAL:
+        return horizontal(state, app, caps, dyn)
+    if params.scaling_policy == policies.SCALE_VERTICAL:
+        return vertical(state, app, caps, dyn)
+    if params.scaling_policy == policies.SCALE_HYBRID:
+        state = horizontal(state, app, caps, dyn)
+        return vertical(state, app, caps, dyn)
+    raise ValueError(f"unknown scaling policy {params.scaling_policy}")

@@ -1,0 +1,432 @@
+"""Cloudlet scheduler phases (paper §4.2) + derivative spawning (§4.1.2).
+
+Every tick runs, in order:
+
+  ``gen_spawn``   — new requests fire root cloudlets at API entry services
+  ``dispatch``    — waiting→execution transition with load balancing
+  ``execute``     — time-shared progress + finish detection + usage history
+  ``derive``      — finished cloudlets spawn successors along the DAG
+  ``complete``    — requests whose last cloudlet finished get a response
+
+The waiting/execution/finished "queues" of the paper are status masks on
+the active cloudlet buffer; the finished queue is folded into per-request
+and per-service aggregates (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import policies
+from ..kernels.cloudlet_step import cloudlet_step as _cloudlet_step_op
+from .app import AppStatic
+from .pool import (assign_free_slots, scatter_const, scatter_new,
+                   scatter_ranked, segment_rank)
+from .types import (CL_EXEC, CL_FREE, CL_WAITING, DynParams, INST_DRAIN,
+                    INST_FREE, INST_ON, SimCaps, SimParams, SimState)
+
+
+def _segsum(data, ids, n, valid=None):
+    """Scatter-add with -1/invalid ids dropped."""
+    if valid is None:
+        valid = ids >= 0
+    idx = jnp.where(valid, ids, n)
+    return jnp.zeros((n,), data.dtype).at[idx].add(
+        jnp.where(valid, data, jnp.zeros_like(data)), mode="drop")
+
+
+# ===========================================================================
+# Generation: new requests + root cloudlets (paper Alg 1 + "Dispatching")
+# ===========================================================================
+
+class GenResult(NamedTuple):
+    n_new_requests: jnp.ndarray
+
+
+def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
+              fired: jnp.ndarray, api: jnp.ndarray,
+              wait_proposal: jnp.ndarray, rng: jnp.ndarray
+              ) -> Tuple[SimState, GenResult]:
+    """Allocate request slots for fired clients and spawn root cloudlets."""
+    req, cl, ctr = state.requests, state.cloudlets, state.counters
+    R = req.api.shape[0]
+    C = cl.status.shape[0]
+    i32, f32 = jnp.int32, jnp.float32
+    Nc = fired.shape[0]
+    K = caps.k_fire if caps.k_fire > 0 else Nc
+    K = min(K, Nc)
+    E = app.api_entry.shape[1]
+
+    rank = jnp.cumsum(fired.astype(i32)) - 1
+    in_budget = fired & (rank < K)
+    slot = req.count + rank
+    has_slot = in_budget & (slot < R)
+    n_accept = jnp.sum(has_slot.astype(i32))
+    n_pool_drop = jnp.sum((in_budget & ~has_slot).astype(i32))
+
+    # Client wait update: accepted/pool-dropped clients rest; over-budget
+    # clients retry next tick (backpressure); others count down.
+    new_wait = jnp.where(
+        in_budget, wait_proposal,
+        jnp.where(fired, 0, jnp.maximum(state.clients.wait - 1, 0)))
+
+    # ---- write accepted requests -------------------------------------
+    dst = jnp.where(has_slot, slot, R)
+    requests = req._replace(
+        count=req.count + n_accept,
+        api=req.api.at[dst].set(api, mode="drop"),
+        arrival=req.arrival.at[dst].set(
+            jnp.full((Nc,), 0.0, f32) + state.time, mode="drop"),
+        outstanding=req.outstanding.at[dst].set(jnp.zeros((Nc,), i32),
+                                                mode="drop"),
+        spawned=req.spawned.at[dst].set(jnp.zeros((Nc,), i32), mode="drop"),
+        finish=req.finish.at[dst].set(jnp.full((Nc,), 0.0, f32) + state.time,
+                                      mode="drop"),
+        response=req.response.at[dst].set(jnp.full((Nc,), -1.0, f32),
+                                          mode="drop"),
+        critical_len=req.critical_len.at[dst].set(jnp.zeros((Nc,), i32),
+                                                  mode="drop"),
+    )
+
+    # ---- root cloudlet descriptors [K, E] ------------------------------
+    # Compact accepted clients into rank order.
+    client_of_rank = jnp.zeros((K,), i32).at[
+        jnp.where(has_slot & (rank < K), rank, K)
+    ].set(jnp.arange(Nc, dtype=i32), mode="drop")
+    ranks = jnp.arange(K, dtype=i32)
+    r_live = ranks < n_accept
+    api_r = api[client_of_rank]                      # [K]
+    req_slot_r = req.count + ranks                   # [K]
+
+    svc_d = app.api_entry[api_r]                     # [K, E]
+    n_ent = app.api_n_entry[api_r]                   # [K]
+    valid = (r_live[:, None] & (jnp.arange(E)[None, :] < n_ent[:, None])
+             & (svc_d >= 0)).reshape(-1)
+    svc_flat = svc_d.reshape(-1)
+    req_flat = jnp.broadcast_to(req_slot_r[:, None], (K, E)).reshape(-1)
+
+    asg = assign_free_slots(cl.status == CL_FREE, valid)
+    Ka = asg.dst.shape[0]
+    svc_new = svc_flat[asg.src]          # rank-level gather (for sampling)
+    req_new = req_flat[asg.src]
+    noise = jax.random.normal(rng, (Ka,), f32)
+    length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
+                         1.0)
+
+    cloudlets = cl._replace(
+        status=scatter_const(cl.status, asg, CL_WAITING),
+        req=scatter_new(cl.req, asg, req_flat),
+        service=scatter_new(cl.service, asg, svc_flat),
+        inst=scatter_const(cl.inst, asg, -1),
+        length=scatter_ranked(cl.length, asg, length),
+        rem=scatter_ranked(cl.rem, asg, length),
+        arrival=scatter_ranked(cl.arrival, asg,
+                               jnp.full((Ka,), 0.0, f32) + state.time),
+        start=scatter_const(cl.start, asg, -1.0),
+        wait_ticks=scatter_const(cl.wait_ticks, asg, 0),
+        depth=scatter_const(cl.depth, asg, 0),
+    )
+
+    spawn_per_req = _segsum(jnp.where(asg.live, 1, 0).astype(i32),
+                            jnp.where(asg.live, req_new, -1), R)
+    requests = requests._replace(
+        outstanding=requests.outstanding + spawn_per_req,
+        spawned=requests.spawned + spawn_per_req,
+    )
+    counters = ctr._replace(
+        spawned=ctr.spawned + asg.n_assigned,
+        dropped_cloudlets=ctr.dropped_cloudlets + asg.n_dropped,
+        dropped_requests=ctr.dropped_requests + n_pool_drop,
+    )
+    state = state._replace(
+        clients=state.clients._replace(wait=new_wait),
+        requests=requests, cloudlets=cloudlets, counters=counters)
+    return state, GenResult(n_new_requests=n_accept)
+
+
+# ===========================================================================
+# Dispatch: waiting → execution with load balancing (paper §4.2)
+# ===========================================================================
+
+def dispatch(state: SimState, app: AppStatic, caps: SimCaps,
+             params: SimParams, dyn: DynParams, rng: jnp.ndarray) -> SimState:
+    cl, inst, sched = state.cloudlets, state.instances, state.sched
+    C = cl.status.shape[0]
+    I = inst.status.shape[0]
+    S = app.n_services
+    i32 = jnp.int32
+
+    # An RPC hop must traverse the network before it may be scheduled
+    # (net_latency models client→service and service→service transport).
+    waiting = (cl.status == CL_WAITING) & \
+        (state.time + 1e-6 >= cl.arrival + dyn.net_latency)
+    svc = jnp.where(waiting, cl.service, 0)
+    replicas = sched.svc_replicas[svc]                      # [C]
+    has_rep = waiting & (replicas > 0)
+    rep_safe = jnp.maximum(replicas, 1)
+
+    if params.lb_policy == policies.LB_ROUND_ROBIN:
+        rank = (state.rr[svc] + jnp.arange(C, dtype=i32)) % rep_safe
+    elif params.lb_policy == policies.LB_RANDOM:
+        rank = jax.random.randint(rng, (C,), 0, 1 << 30) % rep_safe
+    else:  # LB_LEAST_LOADED: per service, replica with max idle mips
+        iof = sched.inst_of_rank                            # [S, R_max]
+        valid = iof >= 0
+        iof_safe = jnp.where(valid, iof, 0)
+        load = inst.n_exec[iof_safe] / jnp.maximum(inst.mips[iof_safe], 1e-6)
+        load = jnp.where(valid & (inst.status[iof_safe] == INST_ON),
+                         load, jnp.inf)
+        best = jnp.argmin(load, axis=1).astype(i32)         # [S]
+        rank = best[svc]
+
+    target = sched.inst_of_rank[svc, jnp.minimum(rank, caps.max_replicas - 1)]
+    ok = has_rep & (target >= 0)
+    tgt_safe = jnp.where(ok, target, 0)
+    ok = ok & (inst.status[tgt_safe] == INST_ON)
+
+    if params.max_concurrent > 0:
+        # Space-shared admission: FCFS rank within the target instance
+        # must fit in the remaining concurrency budget (paper: unselected
+        # cloudlets re-enter the waiting queue).
+        intra = segment_rank(jnp.where(ok, target, I), ok, I + 1)
+        cap_left = jnp.maximum(dyn.max_concurrent - inst.n_exec, 0)
+        admit = ok & (intra < cap_left[tgt_safe])
+    else:
+        admit = ok
+
+    new_status = jnp.where(admit, CL_EXEC, cl.status)
+    new_inst = jnp.where(admit, target, cl.inst)
+    new_start = jnp.where(admit & (cl.start < 0), state.time, cl.start)
+    new_wait_t = cl.wait_ticks + (waiting & ~admit).astype(i32)
+
+    disp_per_svc = _segsum(admit.astype(i32),
+                           jnp.where(admit, cl.service, -1), S)
+    rr = (state.rr + disp_per_svc) % jnp.maximum(sched.svc_replicas, 1)
+
+    return state._replace(
+        rr=rr,
+        cloudlets=cl._replace(status=new_status, inst=new_inst,
+                              start=new_start, wait_ticks=new_wait_t),
+    )
+
+
+# ===========================================================================
+# Execute: time-shared progress, finish detection, usage history
+# ===========================================================================
+
+class FinishInfo(NamedTuple):
+    fin: jnp.ndarray       # [C] bool finished this tick
+    tfin: jnp.ndarray      # [C] f32 sub-tick finish timestamp
+    pre_service: jnp.ndarray  # [C] i32 service ids before slot clearing
+    pre_req: jnp.ndarray
+    pre_depth: jnp.ndarray
+    pre_inst: jnp.ndarray
+
+
+def execute(state: SimState, app: AppStatic, caps: SimCaps,
+            params: SimParams, dyn: DynParams
+            ) -> Tuple[SimState, FinishInfo]:
+    cl, inst, vms = state.cloudlets, state.instances, state.vms
+    I = inst.status.shape[0]
+    S = app.n_services
+    i32, f32 = jnp.int32, jnp.float32
+    dt = dyn.dt
+
+    execm = cl.status == CL_EXEC
+    cid = jnp.where(execm, cl.inst, -1)
+    n_exec = _segsum(jnp.ones_like(cl.status), cid, I)
+
+    if params.share_policy == policies.SHARE_SRPT:
+        w = jnp.where(execm, 1.0 / (cl.rem + 1.0), 0.0)
+    else:
+        w = execm.astype(f32)
+    wsum = _segsum(w, cid, I)
+    inst_safe = jnp.where(execm, cl.inst, 0)
+    rate = jnp.where(execm,
+                     inst.mips[inst_safe] * w
+                     / jnp.maximum(wsum[inst_safe], 1e-9), 0.0)  # MI/s
+
+    if params.use_pallas_tick:
+        # fused TPU kernel (kernels/cloudlet_step): one VMEM pass computes
+        # progress, sub-tick finishes, consumption, and per-instance usage
+        new_rem, fin, tfin, consumed, used_mips = _cloudlet_step_op(
+            cl.status, cl.rem, cl.inst, rate, state.time, dt, I)
+        new_rem = jnp.where(execm, new_rem, cl.rem)
+    else:
+        prog = rate * dt
+        fin = execm & (cl.rem <= prog) & (rate > 0)
+        tfin = jnp.where(
+            fin, jnp.clip(state.time + cl.rem / jnp.maximum(rate, 1e-9),
+                          state.time, state.time + dt), 0.0)
+        consumed = jnp.minimum(prog, cl.rem)
+        new_rem = jnp.maximum(cl.rem - prog, 0.0)
+        used_mips = _segsum(consumed / dt, cid, I)
+    svc_of_inst = inst.service
+    util = jnp.where(inst.mips > 0, used_mips / jnp.maximum(inst.mips, 1e-9),
+                     0.0)
+    # Usage accounting (paper §5.2): idle floor on every ON instance plus a
+    # resize surcharge on vertically-scaled instances.  The scaling signal
+    # (util EMA) stays based on raw consumption.
+    on = inst.status == INST_ON
+    acct_mips = (used_mips * (1.0 + jnp.where(
+        inst.mips > inst.request_mips, dyn.vs_overhead_frac, 0.0))
+        + dyn.idle_mips_frac * jnp.where(on, inst.mips, 0.0))
+    a = dyn.util_ema
+    util_ema = jnp.where(inst.status != INST_FREE,
+                         a * util + (1 - a) * inst.util_ema, 0.0)
+    used_ram = jnp.where(svc_of_inst >= 0,
+                         app.ram_per_cl[jnp.maximum(svc_of_inst, 0)]
+                         * n_exec, 0.0)
+
+    # --- per-service usage history / node-delay estimates ---------------
+    st = state.svc_stats
+    fsvc = jnp.where(fin, cl.service, -1)
+    sojourn = jnp.where(fin, tfin - cl.arrival, 0.0)
+    exec_t = jnp.where(fin, tfin - jnp.maximum(cl.start, cl.arrival), 0.0)
+    wait_t = jnp.where(fin, jnp.maximum(cl.start, cl.arrival) - cl.arrival,
+                       0.0)
+    svc_stats = st._replace(
+        usage_sum=st.usage_sum + _segsum(acct_mips * dt, svc_of_inst, S),
+        finished=st.finished + _segsum(jnp.ones_like(cl.status), fsvc, S),
+        delay_sum=st.delay_sum + _segsum(sojourn, fsvc, S),
+        exec_sum=st.exec_sum + _segsum(exec_t, fsvc, S),
+        wait_sum=st.wait_sum + _segsum(wait_t, fsvc, S),
+    )
+
+    # --- request aggregates ---------------------------------------------
+    req = state.requests
+    R = req.api.shape[0]
+    frq = jnp.where(fin, cl.req, -1)
+    fin_per_req = _segsum(jnp.ones_like(cl.status), frq, R)
+    rdst = jnp.where(fin, cl.req, R)
+    finish = req.finish.at[rdst].max(tfin, mode="drop")
+    crit = req.critical_len.at[rdst].max(cl.depth + 1, mode="drop")
+    requests = req._replace(outstanding=req.outstanding - fin_per_req,
+                            finish=finish, critical_len=crit)
+
+    info = FinishInfo(fin=fin, tfin=tfin, pre_service=cl.service,
+                      pre_req=cl.req, pre_depth=cl.depth, pre_inst=cl.inst)
+
+    # --- clear finished slots (the "finished queue" is the aggregates) --
+    cloudlets = cl._replace(
+        status=jnp.where(fin, CL_FREE, cl.status),
+        rem=new_rem,
+        inst=jnp.where(fin, -1, cl.inst),
+    )
+
+    # --- drained instances release their VM share (HS scale-in) ---------
+    n_exec_after = n_exec - _segsum(jnp.ones_like(cl.status),
+                                    jnp.where(fin, cl.inst, -1), I)
+    drain_done = (inst.status == INST_DRAIN) & (n_exec_after == 0)
+    V = vms.mips.shape[0]
+    rel_mips = _segsum(jnp.where(drain_done, inst.mips, 0.0), inst.vm, V)
+    rel_ram = _segsum(jnp.where(drain_done, inst.ram, 0.0), inst.vm, V)
+    vms = vms._replace(mips_used=vms.mips_used - rel_mips,
+                       ram_used=vms.ram_used - rel_ram)
+
+    instances = inst._replace(
+        status=jnp.where(drain_done, INST_FREE, inst.status),
+        service=jnp.where(drain_done, -1, inst.service),
+        vm=jnp.where(drain_done, -1, inst.vm),
+        mips=jnp.where(drain_done, 0.0, inst.mips),
+        ram=jnp.where(drain_done, 0.0, inst.ram),
+        n_exec=n_exec_after,
+        used_mips=used_mips,
+        used_ram=used_ram,
+        util_ema=jnp.where(drain_done, 0.0, util_ema),
+        usage_sum=inst.usage_sum + acct_mips * dt,
+        busy_ticks=inst.busy_ticks + (n_exec > 0).astype(i32),
+    )
+
+    counters = state.counters._replace(
+        finished=state.counters.finished + jnp.sum(fin.astype(i32)))
+    return state._replace(cloudlets=cloudlets, instances=instances, vms=vms,
+                          requests=requests, svc_stats=svc_stats,
+                          counters=counters), info
+
+
+# ===========================================================================
+# Derive: finished cloudlets spawn successors (paper §4.1.2 "Derivative")
+# ===========================================================================
+
+def derive(state: SimState, app: AppStatic, caps: SimCaps,
+           info: FinishInfo, rng: jnp.ndarray) -> SimState:
+    cl, req, ctr = state.cloudlets, state.requests, state.counters
+    C = cl.status.shape[0]
+    R = req.api.shape[0]
+    I = state.instances.status.shape[0]
+    D = app.succ.shape[1]
+    i32, f32 = jnp.int32, jnp.float32
+
+    parent_svc = jnp.where(info.fin, info.pre_service, 0)
+    child = app.succ[parent_svc]                      # [C, D]
+    valid = (info.fin[:, None] & (child >= 0)).reshape(-1)
+    svc_flat = child.reshape(-1)
+    req_flat = jnp.broadcast_to(info.pre_req[:, None], (C, D)).reshape(-1)
+    dep_flat = jnp.broadcast_to((info.pre_depth + 1)[:, None],
+                                (C, D)).reshape(-1)
+    tf_flat = jnp.broadcast_to(info.tfin[:, None], (C, D)).reshape(-1)
+    pin_flat = jnp.broadcast_to(info.pre_inst[:, None], (C, D)).reshape(-1)
+
+    asg = assign_free_slots(cl.status == CL_FREE, valid, k_static=C)
+    Ka = asg.dst.shape[0]
+    svc_new = svc_flat[asg.src]          # rank-level gather (for sampling)
+    noise = jax.random.normal(rng, (Ka,), f32)
+    length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
+                         1.0)
+
+    cloudlets = cl._replace(
+        status=scatter_const(cl.status, asg, CL_WAITING),
+        req=scatter_new(cl.req, asg, req_flat),
+        service=scatter_new(cl.service, asg, svc_flat),
+        inst=scatter_const(cl.inst, asg, -1),
+        length=scatter_ranked(cl.length, asg, length),
+        rem=scatter_ranked(cl.rem, asg, length),
+        arrival=scatter_new(cl.arrival, asg, tf_flat),
+        start=scatter_const(cl.start, asg, -1.0),
+        wait_ticks=scatter_const(cl.wait_ticks, asg, 0),
+        depth=scatter_new(cl.depth, asg, dep_flat),
+    )
+
+    live_req = jnp.where(asg.live, req_flat[asg.src], -1)
+    spawn_per_req = _segsum(jnp.where(asg.live, 1, 0).astype(i32),
+                            live_req, R)
+    requests = req._replace(outstanding=req.outstanding + spawn_per_req,
+                            spawned=req.spawned + spawn_per_req)
+
+    # Outbound-RPC bandwidth (linear usage model, paper §5.2).
+    live_pinst = jnp.where(asg.live, pin_flat[asg.src], -1)
+    psvc = jnp.where(asg.live, jnp.maximum(
+        state.instances.service[jnp.maximum(live_pinst, 0)], 0), 0)
+    bw = _segsum(app.bytes_per_rpc[psvc] * asg.live.astype(f32),
+                 live_pinst, I)
+    instances = state.instances._replace(used_bw=bw)
+
+    counters = ctr._replace(
+        spawned=ctr.spawned + asg.n_assigned,
+        dropped_cloudlets=ctr.dropped_cloudlets + asg.n_dropped)
+    return state._replace(cloudlets=cloudlets, requests=requests,
+                          instances=instances, counters=counters)
+
+
+# ===========================================================================
+# Complete: close requests whose dependency tree drained (paper §4.3.2)
+# ===========================================================================
+
+def complete(state: SimState, dyn: DynParams) -> Tuple[SimState, jnp.ndarray]:
+    req, ctr = state.requests, state.counters
+    i32 = jnp.int32
+    done = ((req.outstanding == 0) & (req.spawned > 0) & (req.response < 0)
+            & (req.arrival >= 0))
+    resp = jnp.where(done, req.finish - req.arrival, req.response)
+    n_done = jnp.sum(done.astype(i32))
+    counters = ctr._replace(
+        completed=ctr.completed + n_done,
+        resp_sum=ctr.resp_sum + jnp.sum(jnp.where(done, resp, 0.0)),
+        slo_violations=ctr.slo_violations + jnp.sum(
+            (done & (resp * 1000.0 > dyn.slo_ms)).astype(i32)),
+    )
+    return state._replace(requests=req._replace(response=resp),
+                          counters=counters), n_done

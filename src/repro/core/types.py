@@ -1,0 +1,366 @@
+"""Core data structures for the CloudNativeSim tensor-DES engine.
+
+The paper's Java object graph (Request / RpcCloudlet / Instance / VM /
+Service) is re-expressed as fixed-shape tensor pools so that one simulator
+tick is a fused dataflow update and the whole run is a single
+``jax.lax.scan``.  See DESIGN.md §2 for the adaptation rationale.
+
+Conventions
+-----------
+* All pools use int32 / float32 (JAX default x64-disabled).
+* ``-1`` is the universal "null id" (no instance, no service, padding).
+* Pools are *fixed capacity*; requests are append-only, cloudlets use an
+  active-set buffer with free-slot recycling (finished cloudlets fold their
+  statistics into per-request / per-instance aggregates and free the slot —
+  the paper's "finished queue" is an aggregate, not an archive).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Cloudlet status codes (paper §4.2: waiting / execution / finished queues).
+# --------------------------------------------------------------------------
+CL_FREE = 0       # slot unused (or folded into the "finished" aggregate)
+CL_WAITING = 1    # in the waiting queue
+CL_EXEC = 2       # in the execution queue
+
+# Instance status codes.
+INST_FREE = 0     # slot unused
+INST_ON = 1       # active, receiving cloudlets
+INST_DRAIN = 2    # scale-in requested: no new cloudlets, frees when empty
+
+
+@dataclasses.dataclass(frozen=True)
+class SimCaps:
+    """Static pool capacities (hashable → safe to close over in jit)."""
+
+    n_clients: int = 128          # Nc upper bound (client pool size)
+    max_requests: int = 4096      # append-only request pool
+    max_cloudlets: int = 8192     # ACTIVE cloudlet buffer (waiting+exec)
+    max_instances: int = 64       # instance pool (incl. head-room for HS)
+    n_vms: int = 8
+    d_max: int = 4                # max out-degree of any service node
+    max_replicas: int = 8         # per-service replica cap (HS)
+    k_fire: int = 0               # max requests admitted per tick (0 = Nc);
+                                  # over-budget clients retry next tick
+
+    def validate(self) -> None:
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            lo = 0 if f.name == "k_fire" else 1
+            if not isinstance(v, int) or v < lo:
+                raise ValueError(f"SimCaps.{f.name} must be an int ≥ {lo}, got {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Static scalar parameters of a simulation run (closed over in jit)."""
+
+    # --- time -----------------------------------------------------------
+    dt: float = 0.1               # seconds per tick
+    n_ticks: int = 1000
+
+    # --- request generator (paper Alg 1) --------------------------------
+    n_clients: int = 100          # N_c, final number of clients
+    spawn_rate: float = 1.0       # v, clients per second
+    wait_lo: float = 5.0          # p0 (seconds)
+    wait_hi: float = 15.0         # p1 (seconds)
+    num_limit: int = 2 ** 31 - 1  # numLimit (max generated requests)
+
+    # --- scheduling (paper §4.2) ----------------------------------------
+    lb_policy: int = 0            # policies.LB_* (round-robin default)
+    share_policy: int = 0         # policies.SHARE_* (equal time slice)
+    max_concurrent: int = 0       # 0 = pure time sharing (unbounded)
+    net_latency_s: float = 0.0    # per-RPC-hop network latency (seconds)
+
+    # --- scaling (paper §5.3) -------------------------------------------
+    scaling_policy: int = 0       # policies.SCALE_* (NS default)
+    scale_interval: int = 50      # ticks between scaling events
+    hs_util_hi: float = 0.8       # HS scale-out threshold (service avg util)
+    hs_util_lo: float = 0.2       # HS scale-in threshold
+    vs_util_hi: float = 0.8       # VS scale-up threshold (instance util)
+    vs_util_lo: float = 0.2
+    vs_up_factor: float = 1.5
+    vs_down_factor: float = 0.75
+    util_ema: float = 0.2         # EMA coefficient for utilization signal
+
+    # --- migration (paper §5.1) -----------------------------------------
+    migration_enabled: bool = False
+    mig_vm_util_hi: float = 0.9
+
+    # --- usage accounting (paper §5.2 linear model) ----------------------
+    idle_mips_frac: float = 0.0   # idle floor: instances consume a small
+                                  # fraction of their allocation when ON
+    vs_overhead_frac: float = 0.0 # resize churn: vertically-scaled
+                                  # instances pay a usage surcharge
+
+    # --- backend ---------------------------------------------------------
+    use_pallas_tick: bool = False # fused cloudlet_step TPU kernel for the
+                                  # execution phase (CPU runs the jnp ref)
+
+    # --- QoS -------------------------------------------------------------
+    slo_ms: float = 1000.0        # SLO threshold on response time (ms)
+    mi_per_milicore: float = 0.001  # milicores = used_mips / mi_per_milicore
+
+    seed: int = 0
+
+
+class DynParams(NamedTuple):
+    """Traced scalar parameters — passed as a jit *argument* so sweeping
+    loads/thresholds (benchmarks, calibration) never recompiles the tick.
+
+    Static knobs that change the program structure (policy selectors,
+    pool sizes, n_ticks) stay in SimParams/SimCaps and are closed over.
+    """
+
+    dt: jnp.ndarray
+    n_clients: jnp.ndarray
+    spawn_rate: jnp.ndarray
+    wait_lo: jnp.ndarray
+    wait_hi: jnp.ndarray
+    num_limit: jnp.ndarray
+    max_concurrent: jnp.ndarray
+    scale_interval: jnp.ndarray
+    hs_util_hi: jnp.ndarray
+    hs_util_lo: jnp.ndarray
+    vs_util_hi: jnp.ndarray
+    vs_util_lo: jnp.ndarray
+    vs_up_factor: jnp.ndarray
+    vs_down_factor: jnp.ndarray
+    util_ema: jnp.ndarray
+    mig_vm_util_hi: jnp.ndarray
+    slo_ms: jnp.ndarray
+    net_latency: jnp.ndarray
+    idle_mips_frac: jnp.ndarray
+    vs_overhead_frac: jnp.ndarray
+
+    @staticmethod
+    def from_params(p: "SimParams") -> "DynParams":
+        f = lambda v: jnp.asarray(v, jnp.float32)
+        i = lambda v: jnp.asarray(v, jnp.int32)
+        return DynParams(
+            dt=f(p.dt), n_clients=i(p.n_clients), spawn_rate=f(p.spawn_rate),
+            wait_lo=f(p.wait_lo), wait_hi=f(p.wait_hi),
+            num_limit=i(p.num_limit), max_concurrent=i(p.max_concurrent),
+            scale_interval=i(p.scale_interval),
+            hs_util_hi=f(p.hs_util_hi), hs_util_lo=f(p.hs_util_lo),
+            vs_util_hi=f(p.vs_util_hi), vs_util_lo=f(p.vs_util_lo),
+            vs_up_factor=f(p.vs_up_factor), vs_down_factor=f(p.vs_down_factor),
+            util_ema=f(p.util_ema), mig_vm_util_hi=f(p.mig_vm_util_hi),
+            slo_ms=f(p.slo_ms), net_latency=f(p.net_latency_s),
+            idle_mips_frac=f(p.idle_mips_frac),
+            vs_overhead_frac=f(p.vs_overhead_frac))
+
+
+class Clients(NamedTuple):
+    """Locust-style closed-loop client pool (paper Alg 1)."""
+
+    wait: jnp.ndarray        # [Nc] i32 ticks until next request (0 = fire)
+
+
+class Requests(NamedTuple):
+    """Append-only request pool (paper §4.3)."""
+
+    count: jnp.ndarray        # scalar i32, number of allocated requests
+    api: jnp.ndarray          # [R] i32
+    arrival: jnp.ndarray      # [R] f32 seconds
+    outstanding: jnp.ndarray  # [R] i32 cloudlets in flight
+    spawned: jnp.ndarray      # [R] i32 total cloudlets ever spawned
+    finish: jnp.ndarray       # [R] f32 max cloudlet finish time so far
+    response: jnp.ndarray     # [R] f32 final response (s), -1 while open
+    critical_len: jnp.ndarray # [R] i32 nodes on the critical (longest) chain
+
+
+class Cloudlets(NamedTuple):
+    """Active-set RpcCloudlet buffer (paper §4.1.2, §4.2)."""
+
+    status: jnp.ndarray      # [C] i32 CL_*
+    req: jnp.ndarray         # [C] i32 owning request
+    service: jnp.ndarray     # [C] i32 service node
+    inst: jnp.ndarray        # [C] i32 assigned instance (-1 = unassigned)
+    length: jnp.ndarray      # [C] f32 total MI (Gaussian, paper §4.1.2)
+    rem: jnp.ndarray         # [C] f32 remaining MI
+    arrival: jnp.ndarray     # [C] f32 seconds
+    start: jnp.ndarray       # [C] f32 first-execution time (-1 = not yet)
+    wait_ticks: jnp.ndarray  # [C] i32 ticks spent in the waiting queue
+    depth: jnp.ndarray       # [C] i32 hops from the root cloudlet
+
+
+class Instances(NamedTuple):
+    """Instance pool (pods/containers; paper §3.3)."""
+
+    status: jnp.ndarray      # [I] i32 INST_*
+    service: jnp.ndarray     # [I] i32 (-1 on free slots)
+    vm: jnp.ndarray          # [I] i32
+    mips: jnp.ndarray        # [I] f32 current CPU allocation (MI/s)
+    limit_mips: jnp.ndarray  # [I] f32 vertical-scaling cap ("limits.share")
+    request_mips: jnp.ndarray# [I] f32 baseline request ("requests.share")
+    ram: jnp.ndarray         # [I] f32 current RAM allocation (MB)
+    limit_ram: jnp.ndarray   # [I] f32
+    bw: jnp.ndarray          # [I] f32 bandwidth (Mbps)
+    n_exec: jnp.ndarray      # [I] i32 executing cloudlets this tick
+    used_mips: jnp.ndarray   # [I] f32 consumed this tick
+    used_ram: jnp.ndarray    # [I] f32 linear cloudlet→RAM model (paper §5.2)
+    used_bw: jnp.ndarray     # [I] f32 linear spawn→BW model
+    util_ema: jnp.ndarray    # [I] f32 smoothed utilization (scaling signal)
+    usage_sum: jnp.ndarray   # [I] f32 ∫ used_mips dt  (usage history)
+    busy_ticks: jnp.ndarray  # [I] i32 ticks with n_exec > 0
+
+
+class VMs(NamedTuple):
+    mips: jnp.ndarray        # [V] f32 capacity
+    mips_used: jnp.ndarray   # [V] f32 allocated to instances
+    ram: jnp.ndarray         # [V] f32
+    ram_used: jnp.ndarray    # [V] f32
+
+
+class SchedState(NamedTuple):
+    """Service→replica dispatch tables, maintained incrementally.
+
+    ``inst_of_rank[s, r]`` is the instance slot of the r-th replica of
+    service ``s`` (-1 beyond ``svc_replicas[s]``).  Placement fills it,
+    HS scale-out/in mutates it, dispatch reads it every tick.
+    """
+
+    inst_of_rank: jnp.ndarray   # [S, R_max] i32
+    svc_replicas: jnp.ndarray   # [S] i32
+
+
+class SvcStats(NamedTuple):
+    """Per-service usage history (paper §5.2) and node-delay estimates
+    (feeds the critical-path analysis of §4.3.2)."""
+
+    usage_sum: jnp.ndarray   # [S] f32 ∫ used_mips dt over replicas
+    finished: jnp.ndarray    # [S] i32 cloudlets completed
+    delay_sum: jnp.ndarray   # [S] f32 Σ (finish - arrival) sojourn
+    exec_sum: jnp.ndarray    # [S] f32 Σ execution time
+    wait_sum: jnp.ndarray    # [S] f32 Σ waiting time
+
+
+class Counters(NamedTuple):
+    spawned: jnp.ndarray         # i32 cloudlets ever created
+    finished: jnp.ndarray        # i32 cloudlets ever finished
+    dropped_cloudlets: jnp.ndarray
+    dropped_requests: jnp.ndarray
+    completed: jnp.ndarray       # i32 completed requests
+    resp_sum: jnp.ndarray        # f32 Σ response
+    slo_violations: jnp.ndarray  # i32
+    migrations: jnp.ndarray      # i32
+    scale_out: jnp.ndarray       # i32 HS scale-out events
+    scale_in: jnp.ndarray        # i32 HS scale-in events
+    scale_up: jnp.ndarray        # i32 VS scale-up events
+    scale_down: jnp.ndarray      # i32 VS scale-down events
+
+
+class SimState(NamedTuple):
+    tick: jnp.ndarray       # i32
+    time: jnp.ndarray       # f32 seconds
+    rng: jnp.ndarray        # PRNG key
+    rr: jnp.ndarray         # [S] i32 round-robin cursor per service
+    clients: Clients
+    requests: Requests
+    cloudlets: Cloudlets
+    instances: Instances
+    vms: VMs
+    sched: SchedState
+    svc_stats: SvcStats
+    counters: Counters
+
+
+class TickTrace(NamedTuple):
+    """Per-tick scalar outputs of the scan (QoS time series)."""
+
+    completed: jnp.ndarray      # requests completed this tick
+    generated: jnp.ndarray      # requests generated this tick
+    n_waiting: jnp.ndarray      # cloudlets in waiting queue
+    n_exec: jnp.ndarray         # cloudlets in execution queue
+    used_mips: jnp.ndarray      # Σ instance used mips
+    active_instances: jnp.ndarray
+    active_clients: jnp.ndarray
+
+
+def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1
+                ) -> SimState:
+    """Build the initial (empty) simulation state."""
+    caps.validate()
+    f32 = jnp.float32
+    i32 = jnp.int32
+    Nc, R, C, I, V = (caps.n_clients, caps.max_requests, caps.max_cloudlets,
+                      caps.max_instances, caps.n_vms)
+    S = n_services
+    return SimState(
+        tick=jnp.zeros((), i32),
+        time=jnp.zeros((), f32),
+        rng=rng,
+        rr=jnp.zeros((S,), i32),
+        clients=Clients(wait=jnp.zeros((Nc,), i32)),
+        requests=Requests(
+            count=jnp.zeros((), i32),
+            api=jnp.full((R,), -1, i32),
+            arrival=jnp.full((R,), -1.0, f32),
+            outstanding=jnp.zeros((R,), i32),
+            spawned=jnp.zeros((R,), i32),
+            finish=jnp.zeros((R,), f32),
+            response=jnp.full((R,), -1.0, f32),
+            critical_len=jnp.zeros((R,), i32),
+        ),
+        cloudlets=Cloudlets(
+            status=jnp.zeros((C,), i32),
+            req=jnp.full((C,), -1, i32),
+            service=jnp.full((C,), -1, i32),
+            inst=jnp.full((C,), -1, i32),
+            length=jnp.zeros((C,), f32),
+            rem=jnp.zeros((C,), f32),
+            arrival=jnp.zeros((C,), f32),
+            start=jnp.full((C,), -1.0, f32),
+            wait_ticks=jnp.zeros((C,), i32),
+            depth=jnp.zeros((C,), i32),
+        ),
+        instances=Instances(
+            status=jnp.zeros((I,), i32),
+            service=jnp.full((I,), -1, i32),
+            vm=jnp.full((I,), -1, i32),
+            mips=jnp.zeros((I,), f32),
+            limit_mips=jnp.zeros((I,), f32),
+            request_mips=jnp.zeros((I,), f32),
+            ram=jnp.zeros((I,), f32),
+            limit_ram=jnp.zeros((I,), f32),
+            bw=jnp.zeros((I,), f32),
+            n_exec=jnp.zeros((I,), i32),
+            used_mips=jnp.zeros((I,), f32),
+            used_ram=jnp.zeros((I,), f32),
+            used_bw=jnp.zeros((I,), f32),
+            util_ema=jnp.zeros((I,), f32),
+            usage_sum=jnp.zeros((I,), f32),
+            busy_ticks=jnp.zeros((I,), i32),
+        ),
+        vms=VMs(
+            mips=jnp.zeros((V,), f32),
+            mips_used=jnp.zeros((V,), f32),
+            ram=jnp.zeros((V,), f32),
+            ram_used=jnp.zeros((V,), f32),
+        ),
+        sched=SchedState(
+            inst_of_rank=jnp.full((S, caps.max_replicas), -1, i32),
+            svc_replicas=jnp.zeros((S,), i32),
+        ),
+        svc_stats=SvcStats(
+            usage_sum=jnp.zeros((S,), f32),
+            finished=jnp.zeros((S,), i32),
+            delay_sum=jnp.zeros((S,), f32),
+            exec_sum=jnp.zeros((S,), f32),
+            wait_sum=jnp.zeros((S,), f32),
+        ),
+        counters=Counters(*([jnp.zeros((), i32)] * 5 + [jnp.zeros((), f32)]
+                            + [jnp.zeros((), i32)] * 6)),
+    )
+
+
+def np_or_jnp(x):
+    """Normalize config arrays to numpy (static side) for hashing safety."""
+    return np.asarray(x)

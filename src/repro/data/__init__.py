@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLM, batch_for  # noqa: F401

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels with pure-jnp oracles.
+
+Each kernel lives in its own subpackage with three files:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jitted public wrapper with backend dispatch + padding
+  ref.py    — pure-jnp oracle used for interpret-mode validation
+
+This container is CPU-only: kernels are validated with ``interpret=True``
+(tests sweep shapes/dtypes against ref) and the reference path is what the
+multi-pod dry-run lowers (DESIGN.md §4).
+"""

@@ -1,0 +1,2 @@
+from .ops import cloudlet_step  # noqa: F401
+from .ref import cloudlet_step as cloudlet_step_ref  # noqa: F401

@@ -1,0 +1,28 @@
+"""Jitted wrapper for the fused cloudlet tick with backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import cloudlet_step_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cloudlet_step(status, rem, inst, rate, time, dt, n_inst: int,
+                  use_pallas: bool | None = None, interpret: bool = False):
+    """Advance all executing cloudlets one tick (see ref.py for contract)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not (use_pallas or interpret):
+        return ref.cloudlet_step(status, rem, inst, rate, time, dt, n_inst)
+    C = status.shape[0]
+    bc = min(8192, C)
+    while C % bc:
+        bc //= 2
+    return cloudlet_step_pallas(status, rem, inst, rate, time, dt,
+                                n_inst=n_inst, bc=max(bc, 1),
+                                interpret=interpret)

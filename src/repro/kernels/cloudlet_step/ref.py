@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused cloudlet execution update (paper §4.2).
+
+One simulator tick's execution phase over the active cloudlet buffer:
+given per-cloudlet rates (already load-balanced by the scheduler), advance
+remaining work, detect sub-tick finishes, and accumulate per-instance
+consumption — the inner loop the engine runs millions of times in the
+capacity tests (Table 2).
+
+Inputs (all [C] unless noted):
+  status i32 (2 = executing), rem f32 (MI), inst i32, rate f32 (MI/s),
+  time scalar, dt scalar, n_inst static.
+Outputs:
+  new_rem f32, fin bool, tfin f32, consumed f32, used [I] f32 (MI/s).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+CL_EXEC = 2
+
+
+def cloudlet_step(status, rem, inst, rate, time, dt, n_inst: int):
+    execm = status == CL_EXEC
+    prog = rate * dt
+    fin = execm & (rem <= prog) & (rate > 0)
+    tfin = jnp.where(
+        fin, jnp.clip(time + rem / jnp.maximum(rate, 1e-9), time, time + dt),
+        0.0)
+    consumed = jnp.where(execm, jnp.minimum(prog, rem), 0.0)
+    new_rem = jnp.where(execm, jnp.maximum(rem - prog, 0.0), rem)
+    idx = jnp.where(execm & (inst >= 0), inst, n_inst)
+    used = jnp.zeros((n_inst,), jnp.float32).at[idx].add(
+        consumed / dt, mode="drop")
+    return new_rem, fin, tfin, consumed, used

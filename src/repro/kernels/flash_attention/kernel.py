@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention (forward).
+
+Prefill is the compute hot spot of the serving path (32k-token contexts);
+this kernel streams K/V blocks through VMEM with the online-softmax
+recurrence so the [Tq, Tk] logits matrix never materializes in HBM.
+
+Grid: (B, Hq, Tq/bq, Tk/bk) with the key axis innermost; the running
+max/denominator/accumulator live in VMEM scratch and persist across the
+key sweep (TPU grids execute as a sequential loop per core).  GQA is a
+pure index-map trick: the K/V BlockSpecs map query head h → kv head
+h // group, so no head replication is materialized.
+
+Causal masking aligns sequence ends (query i sees keys ≤ i + Tk - Tq),
+which serves both training (Tq == Tk) and chunked prefill (Tq < Tk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  off: int, kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)          # [bk, d]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len                          # right-padding is inert
+    if causal:
+        # end-aligned horizon of the ORIGINAL (unpadded) shapes
+        mask &= kpos <= qpos + off
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                           # [bq, 1]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                        # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)               # [bq, 1]
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        # fully-masked rows (possible when Tq > Tk + off) produce l == 0
+        denom = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "bq", "bk", "interpret",
+                     "off", "kv_len"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, scale: float | None = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False,
+                           off: int | None = None,
+                           kv_len: int | None = None) -> jnp.ndarray:
+    """q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D] → [B, Hq, Tq, D].
+
+    Tq % bq == Tk % bk == 0 (ops.py pads); D should be 128-aligned for MXU
+    efficiency.  VMEM per step: (bq + 2·bk)·D + bq·bk + bq·(D+2) floats
+    ≈ 0.33 MB at 128²×128 — leaves room for double buffering.
+    """
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, Tk, bq, bk)
+    scale_v = (D ** -0.5) if scale is None else scale
+    if off is None:
+        off = Tk - Tq
+    if kv_len is None:
+        kv_len = Tk
+
+    grid = (B, Hq, Tq // bq, Tk // bk)
+    kernel = functools.partial(_flash_kernel, scale=scale_v, causal=causal,
+                               bq=bq, bk=bk, off=off, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator l
+            pltpu.VMEM((bq, D), jnp.float32),   # weighted-V accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

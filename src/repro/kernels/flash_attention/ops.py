@@ -1,0 +1,77 @@
+"""Public attention op with kernel/ref dispatch and padding.
+
+``attention(q, k, v)`` is differentiable everywhere: the Pallas kernel is
+wired through ``jax.custom_vjp`` with a recompute backward based on the
+reference implementation (correct gradients today; a fused backward kernel
+is a listed §Perf follow-up).  On non-TPU backends (and in the multi-pod
+dry-run) the pure-jnp reference path is lowered directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_len(t: int, b: int) -> int:
+    return (-t) % b
+
+
+def _kernel_call(q, k, v, causal, scale, bq, bk, interpret):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    pq = _pad_len(Tq, bq)
+    pk = _pad_len(Tk, bk)
+    if pq or pk:
+        # Right-pad; the kernel masks with the ORIGINAL offset and kv_len,
+        # so padded keys are inert and padded-query rows are dropped here.
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        out = flash_attention_pallas(qp, kp, vp, causal=causal, scale=scale,
+                                     bq=bq, bk=bk, interpret=interpret,
+                                     off=Tk - Tq, kv_len=Tk)
+        return out[:, :, :Tq]
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  bq=bq, bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, scale, bq, bk, interpret):
+    return _kernel_call(q, k, v, causal, scale, bq, bk, interpret)
+
+
+def _flash_fwd(q, k, v, causal, scale, bq, bk, interpret):
+    return _kernel_call(q, k, v, causal, scale, bq, bk, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, scale, bq, bk, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: ref.attention(a, b, c, causal, scale),
+                     q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, scale: float | None = None,
+              impl: str | None = None, bq: int = 128, bk: int = 128,
+              interpret: bool = False) -> jnp.ndarray:
+    """Causal GQA attention.  impl: None (auto) | 'ref' | 'flash'."""
+    if impl is None:
+        impl = "flash" if (_on_tpu() or interpret) else "ref"
+    if impl == "ref":
+        return ref.attention(q, k, v, causal=causal, scale=scale)
+    if impl == "flash":
+        return _flash(q, k, v, causal, scale, bq, bk, interpret)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for causal GQA attention (the kernel's ground truth).
+
+Shapes:
+  q: [B, Hq, Tq, D]   k, v: [B, Hkv, Tk, D]   with Hq % Hkv == 0.
+Causal masking aligns the *ends* of the sequences (decode-style offset):
+query position i attends to key positions j with  j ≤ i + (Tk - Tq).
+All arithmetic in f32 regardless of input dtype (matches kernel policy).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Tq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if causal:
+        off = Tk - Tq
+        qi = jnp.arange(Tq)[:, None]
+        kj = jnp.arange(Tk)[None, :]
+        mask = kj <= qi + off
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, vf)
+    return out.reshape(B, Hq, Tq, D).astype(q.dtype)

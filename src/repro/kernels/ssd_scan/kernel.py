@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk compute.
+
+The chunked SSD algorithm (arXiv:2405.21060) splits the sequence into
+chunks of length L: a quadratic *intra-chunk* part (this kernel — the
+compute hot spot, matmul-shaped for the MXU) and a cheap inter-chunk state
+recurrence (plain ``lax.scan`` in ops.py).
+
+Per grid cell (one batch·head, one chunk) the kernel computes, in VMEM:
+
+    cum   = cumsum(log a)                               [L]
+    M     = exp(cum_i - cum_j) ⊙ causal ⊙ (C Bᵀ)        [L, L]
+    y     = M (Δ ⊙ X)                                   [L, P]
+    state = ((exp(cum_L - cum) ⊙ Δ) B)ᵀ X               [N, P]
+    extra outputs: in_decay = exp(cum), total = exp(cum_L)
+
+VMEM footprint at L=128, N=128, P=64: X/B/C/M + outputs ≈ 0.4 MB.
+The carried-state contribution (C Λ h_in) is applied outside — it depends
+on the sequential scan and would serialize the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, la_ref, b_ref, c_ref,
+                      y_ref, st_ref, dec_ref, tot_ref):
+    x = x_ref[0, 0].astype(jnp.float32)    # [L, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)  # [L, 1]
+    la = la_ref[0, 0].astype(jnp.float32)  # [L, 1]
+    b = b_ref[0, 0].astype(jnp.float32)    # [L, N]
+    c = c_ref[0, 0].astype(jnp.float32)    # [L, N]
+    L = x.shape[0]
+
+    cum = jnp.cumsum(la, axis=0)           # [L, 1]
+    seg = cum - cum.reshape(1, L)          # [L, L] log-decay i←j
+    causal = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    gate = jnp.exp(jnp.where(causal, seg, -1e30))   # mask-before-exp
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * gate
+    dx = dt * x                            # [L, P]
+    y_ref[0, 0] = jax.lax.dot_general(
+        scores, dx, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    out_decay = jnp.exp(cum[L - 1] - cum)  # [L, 1]
+    wb = out_decay * dt * b                # [L, N]
+    st_ref[0, 0] = jax.lax.dot_general(
+        wb, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(st_ref.dtype)
+    dec_ref[0, 0] = jnp.exp(cum).astype(dec_ref.dtype)
+    tot_ref[0, 0] = jnp.exp(cum[L - 1]).reshape(1, 1).astype(tot_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(x, dt, la, b, c, interpret: bool = False):
+    """Intra-chunk SSD over every (batch·head, chunk) grid cell.
+
+    x [M, K, L, P]; dt, la [M, K, L, 1]; b, c [M, K, L, N]  (M = B·H
+    flattened, K chunks).  Returns (y [M,K,L,P], state [M,K,N,P],
+    in_decay [M,K,L,1], total_decay [M,K,1,1]) — all f32.
+    """
+    M, K, L, P = x.shape
+    N = b.shape[-1]
+    grid = (M, K)
+    spec = lambda d: pl.BlockSpec((1, 1, L, d), lambda m, k: (m, k, 0, 0))
+    f32 = jnp.float32
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda m, k: (m, k, 0, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda m, k: (m, k, 0, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda m, k: (m, k, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda m, k: (m, k, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda m, k: (m, k, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda m, k: (m, k, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda m, k: (m, k, 0, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda m, k: (m, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda m, k: (m, k, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K, L, P), f32),
+            jax.ShapeDtypeStruct((M, K, N, P), f32),
+            jax.ShapeDtypeStruct((M, K, L, 1), f32),
+            jax.ShapeDtypeStruct((M, K, 1, 1), f32),
+        ],
+        interpret=interpret,
+    )(x, dt, la, b, c)

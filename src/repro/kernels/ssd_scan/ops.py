@@ -1,0 +1,109 @@
+"""Public SSD op: chunked scan with kernel/ref dispatch.
+
+``ssd(x, dt, A, B, C, D)`` computes the full Mamba-2 SSD layer output.
+The intra-chunk quadratic part runs in the Pallas kernel (TPU / interpret);
+the inter-chunk state recurrence is a cheap ``lax.scan``.  Non-TPU
+backends lower the pure-jnp chunked reference (identical math).
+Differentiable: the kernel path uses a recompute-vjp against the ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import ssd_chunk_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _kernel_ssd(x, dt, A, B, C, D, chunk, interpret):
+    Bsz, T, H, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    K = T // chunk
+    Bh = ref._expand_groups(B, H).astype(jnp.float32)
+    Ch = ref._expand_groups(C, H).astype(jnp.float32)
+    la = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]
+
+    def to_mk(v, d):
+        # [B, T, H, d] → [B·H, K, L, d]
+        return (v.reshape(Bsz, K, chunk, H, d).transpose(0, 3, 1, 2, 4)
+                .reshape(Bsz * H, K, chunk, d))
+
+    xk = to_mk(x.astype(jnp.float32), P)
+    dtk = to_mk(dt.astype(jnp.float32)[..., None], 1)
+    lak = to_mk(la[..., None], 1)
+    bk = to_mk(Bh, N)
+    ck = to_mk(Ch, N)
+
+    y_intra, states, in_decay, total = ssd_chunk_pallas(
+        xk, dtk, lak, bk, ck, interpret=interpret)
+
+    # inter-chunk recurrence over K (cheap: [B·H, N, P] carries)
+    def carry(h_prev, inp):
+        st, dec = inp
+        return dec[:, 0, 0, None, None] * h_prev + st, h_prev
+
+    _, h_ins = jax.lax.scan(carry,
+                            jnp.zeros((Bsz * H, N, P), jnp.float32),
+                            (jnp.moveaxis(states, 1, 0),
+                             jnp.moveaxis(total, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)              # [B·H, K, N, P]
+    y_carry = jnp.einsum("mkln,mklo,mknp->mklp", ck, in_decay, h_ins)
+    y = (y_intra + y_carry).reshape(Bsz, H, K, chunk, P) \
+        .transpose(0, 2, 3, 1, 4).reshape(Bsz, T, H, P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] \
+            * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _ssd_kernel_vjp(x, dt, A, B, C, D, chunk, interpret):
+    return _kernel_ssd(x, dt, A, B, C, D, chunk, interpret)
+
+
+def _fwd(x, dt, A, B, C, D, chunk, interpret):
+    return _kernel_ssd(x, dt, A, B, C, D, chunk, interpret), (x, dt, A, B, C, D)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, A, B, C, D = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.ssd_chunked_ref(*a, chunk=chunk), x, dt, A, B, C, D)
+    return vjp(g)
+
+
+_ssd_kernel_vjp.defvjp(_fwd, _bwd)
+
+
+def ssd(x, dt, A, B, C, D=None, chunk: int = 64, impl: str | None = None,
+        interpret: bool = False):
+    """Mamba-2 SSD layer.  impl: None (auto) | 'ref' | 'chunked' | 'kernel'."""
+    if impl is None:
+        impl = "kernel" if (_on_tpu() or interpret) else "chunked"
+    T = x.shape[1]
+    pad = (-T) % chunk
+    if pad and impl != "ref":
+        # zero-Δ padding is inert: a = exp(0·A) = 1 and Δ·b·x = 0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if impl == "ref":
+        out = ref.ssd_ref(x, dt, A, B, C, D)
+    elif impl == "chunked":
+        out = ref.ssd_chunked_ref(x, dt, A, B, C, D, chunk=chunk)
+    elif impl == "kernel":
+        out = _ssd_kernel_vjp(x, dt, A, B, C, D, chunk, interpret)
+    else:
+        raise ValueError(f"unknown ssd impl {impl!r}")
+    return out[:, :T] if pad else out
+
+
+ssd_decode_step = ref.ssd_decode_step

@@ -1,0 +1,153 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) scan.
+
+Semantics (per batch b, head h; arXiv:2405.21060 §6):
+
+    h_t = a_t · h_{t-1} + Δ_t · b_t ⊗ x_t        h ∈ R^{N×P}
+    y_t = c_t · h_t + D_h · x_t
+
+with a_t = exp(Δ_t · A_h) (A_h < 0 scalar per head), b_t, c_t ∈ R^N,
+x_t ∈ R^P.  ``ssd_ref`` is the sequential scan (bit-true ground truth);
+``ssd_chunked_ref`` is the chunked reformulation the Pallas kernel
+implements (intra-chunk quadratic + inter-chunk state recurrence) — the
+two must agree to float tolerance, and the kernel must match the chunked
+form block-for-block.
+
+Shapes: x [B, T, H, P], dt [B, T, H], A [H], B/C [B, T, G, N] with
+H % G == 0 (G = state groups à la GQA), D [H].  Output [B, T, H, P].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(bc: jnp.ndarray, h: int) -> jnp.ndarray:
+    """[B, T, G, N] → [B, T, H, N] by repeating each group H/G times."""
+    g = bc.shape[2]
+    assert h % g == 0
+    return jnp.repeat(bc, h // g, axis=2)
+
+
+def ssd_ref(x, dt, A, B, C, D=None):
+    """Sequential scan oracle — O(T) steps, exact semantics."""
+    Bsz, T, H, P = x.shape
+    N = B.shape[-1]
+    Bh = _expand_groups(B, H).astype(jnp.float32)
+    Ch = _expand_groups(C, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32)[None, None, :])   # [B,T,H]
+
+    def step(h_prev, inp):
+        a_t, dt_t, b_t, c_t, x_t = inp
+        # h: [B, H, N, P]
+        h_new = (a_t[..., None, None] * h_prev
+                 + (dt_t[..., None] * b_t)[..., :, None]
+                 * x_t[..., None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, h_new)
+        return h_new, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    inputs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(dtf, 1, 0),
+              jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0),
+              jnp.moveaxis(xf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1)                                 # [B,T,H,P]
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)
+
+
+def chunk_intra(x_c, dt_c, la_c, b_c, c_c):
+    """Intra-chunk quadratic part + per-chunk state summary.
+
+    Inputs are per-chunk slices (f32): x_c [L,P], dt_c [L], la_c [L]
+    (log a), b_c/c_c [L,N].  Returns (y_intra [L,P], state [N,P],
+    total_decay scalar, in_decay [L]) where
+      y_intra[i] = Σ_{j≤i} exp(cum[i]-cum[j]) (c_i·b_j) Δ_j x_j
+      state      = Σ_j exp(cum[L-1]-cum[j]) Δ_j b_j ⊗ x_j
+      in_decay[i]= exp(cum[i])   (decay applied to the carried-in state)
+    This is exactly what the Pallas kernel computes per grid cell.
+    """
+    L = x_c.shape[0]
+    cum = jnp.cumsum(la_c)                       # [L]
+    seg = cum[:, None] - cum[None, :]            # [L, L] log decay i←j
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: upper-triangle seg is positive-large and would
+    # overflow, poisoning the VJP with inf·0 NaNs
+    gate = jnp.exp(jnp.where(causal, seg, -1e30))
+    scores = (c_c @ b_c.T) * gate                # [L, L]
+    dx = dt_c[:, None] * x_c                     # [L, P]
+    y_intra = scores @ dx
+    out_decay = jnp.exp(cum[-1] - cum)           # [L]
+    state = (out_decay[:, None] * dt_c[:, None] * b_c).T @ x_c   # [N, P]
+    in_decay = jnp.exp(cum)
+    return y_intra, state, jnp.exp(cum[-1]), in_decay
+
+
+def ssd_chunked_ref(x, dt, A, B, C, D=None, chunk: int = 64):
+    """Chunked SSD — the algorithm the kernel implements.
+
+    T must be divisible by ``chunk`` (callers pad; the model uses
+    pad-to-chunk internally).
+    """
+    Bsz, T, H, P = x.shape
+    N = B.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    K = T // chunk
+    Bh = _expand_groups(B, H).astype(jnp.float32)
+    Ch = _expand_groups(C, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    la = dtf * A.astype(jnp.float32)[None, None, :]            # log a
+
+    def per_chunk(xk, dtk, lak, bk, ck):
+        return chunk_intra(xk, dtk, lak, bk, ck)
+
+    # vmap over (batch, head, chunk)
+    xr = xf.reshape(Bsz, K, chunk, H, P).transpose(0, 3, 1, 2, 4)
+    dtr = dtf.reshape(Bsz, K, chunk, H).transpose(0, 3, 1, 2)
+    lar = la.reshape(Bsz, K, chunk, H).transpose(0, 3, 1, 2)
+    br = Bh.reshape(Bsz, K, chunk, H, N).transpose(0, 3, 1, 2, 4)
+    cr = Ch.reshape(Bsz, K, chunk, H, N).transpose(0, 3, 1, 2, 4)
+    f = jax.vmap(jax.vmap(jax.vmap(per_chunk)))
+    y_intra, states, total_decay, in_decay = f(xr, dtr, lar, br, cr)
+    # y_intra [B,H,K,L,P]; states [B,H,K,N,P]; total_decay [B,H,K];
+    # in_decay [B,H,K,L]
+
+    def carry(h_prev, inp):
+        st, dec = inp                            # [B,H,N,P], [B,H]
+        h_in = h_prev
+        h_out = dec[..., None, None] * h_prev + st
+        return h_out, h_in
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, h_ins = jax.lax.scan(
+        carry, h0, (jnp.moveaxis(states, 2, 0),
+                    jnp.moveaxis(total_decay, 2, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 2)            # [B,H,K,N,P] carried in
+    y_carry = jnp.einsum("bhkln,bhkl,bhknp->bhklp", cr, in_decay, h_ins)
+    y = (y_intra + y_carry).transpose(0, 2, 3, 1, 4).reshape(Bsz, T, H, P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(h, x_t, dt_t, A, b_t, c_t, D=None):
+    """O(1) single-token decode: update state, emit one output.
+
+    h [B,H,N,P]; x_t [B,H,P]; dt_t [B,H]; b_t/c_t [B,G,N].
+    """
+    H = x_t.shape[1]
+    G = b_t.shape[1]
+    rep = H // G
+    bh = jnp.repeat(b_t, rep, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(c_t, rep, axis=1).astype(jnp.float32)
+    a_t = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None, :])
+    h_new = (a_t[..., None, None] * h
+             + (dt_t[..., None].astype(jnp.float32) * bh)[..., :, None]
+             * x_t.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", ch, h_new)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, :, None] * x_t.astype(jnp.float32)
+    return h_new, y.astype(x_t.dtype)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for max-plus (tropical) semiring linear algebra.
+
+``C[i,j] = max_k X[i,k] + A[k,j]`` — longest-path relaxation over a DAG
+adjacency (paper Alg 2: the critical path is the max-delay chain).  These
+references define the semantics the Pallas kernel must match bit-for-bit
+(same f32 arithmetic, -inf padding).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+NEG_INF = -jnp.inf
+
+
+def tropical_matmul(x: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """(…, N, K) ⊗ (…, K, M) → (…, N, M) in the (max, +) semiring."""
+    return jnp.max(x[..., :, :, None] + a[..., None, :, :], axis=-2)
+
+
+def tropical_identity(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Identity of the (max,+) semiring: 0 on the diagonal, -inf elsewhere."""
+    return jnp.where(jnp.eye(n, dtype=bool), jnp.zeros((), dtype),
+                     jnp.asarray(NEG_INF, dtype))
+
+
+def tropical_closure(a: jnp.ndarray, depth: int | None = None) -> jnp.ndarray:
+    """All-pairs longest path of a DAG: (I ⊕ A)^(2^⌈log₂ depth⌉).
+
+    ``a[i, j]`` is the edge weight i→j (NEG_INF = no edge); the result
+    ``D[i, j]`` is the maximum total weight over all i→j paths (0 for i=i).
+    Repeated squaring needs ⌈log₂ depth⌉ tropical matmuls.
+    """
+    n = a.shape[-1]
+    depth = n if depth is None else max(int(depth), 1)
+    m = jnp.maximum(a, tropical_identity(n, a.dtype))
+    for _ in range(int(np.ceil(np.log2(max(depth, 2))))):
+        m = tropical_matmul(m, m)
+    return m

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.  Never
+set that flag globally (smoke tests and benches must see 1 device).
+
+Per cell we record:
+  * compile success on the single-pod (16×16) and multi-pod (2×16×16) mesh,
+  * ``memory_analysis()`` — proves the cell fits (bytes per device),
+  * ``cost_analysis()``   — FLOPs / bytes for §Roofline,
+  * the collective-byte breakdown parsed from the partitioned HLO.
+
+Results are cached as JSON under ``results/dryrun`` so reruns are
+incremental (delete the file to force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only-sample]
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applies
+from repro.launch.hlo_analysis import _COLLECTIVES, parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+def _units(cfg) -> int:
+    """Repeated-unit count for cost extrapolation (layers or periods)."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_period
+    return cfg.n_layers
+
+
+def _variant(cfg, k: int):
+    import dataclasses as dc
+    if cfg.family == "hybrid":
+        return dc.replace(cfg, n_layers=k * cfg.attn_period)
+    if cfg.family == "encdec":
+        return dc.replace(cfg, n_layers=k, n_enc_layers=k)
+    return dc.replace(cfg, n_layers=k)
+
+
+def _compile_costs(cfg, shape, mesh) -> dict:
+    """flops/bytes/collectives of one compiled variant (unrolled scans)."""
+    cell = build_cell(cfg, shape, mesh, unroll=True)
+    with mesh:
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           donate_argnums=cell.donate).lower(
+            *cell.args).compile()
+    costs = compiled.cost_analysis()
+    if isinstance(costs, (list, tuple)):
+        costs = costs[0]
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(costs.get("flops", 0.0)),
+            "bytes_accessed": float(costs.get("bytes accessed", 0.0)),
+            "collective_bytes": float(coll["total_bytes"]),
+            "collectives": coll}
+
+
+def cost_extrapolation(cfg, shape, mesh) -> dict:
+    """XLA cost_analysis counts a while-loop body ONCE, so the scanned
+    full model under-reports by ~n_layers×.  We compile fully-unrolled
+    1- and 2-unit variants (identical shapes otherwise) and extrapolate
+    linearly: total(U) = c1 + (U-1)·(c2-c1)."""
+    u = _units(cfg)
+    c1 = _compile_costs(_variant(cfg, 1), shape, mesh)
+    c2 = _compile_costs(_variant(cfg, 2), shape, mesh)
+    out = {}
+    for k in ("flops", "bytes_accessed", "collective_bytes"):
+        slope = c2[k] - c1[k]
+        out[k] = c1[k] + (u - 1) * slope
+        out[k + "_per_unit"] = slope
+    out["units"] = u
+    out["c1"] = {k: c1[k] for k in ("flops", "bytes_accessed",
+                                    "collective_bytes")}
+    out["c2"] = {k: c2[k] for k in ("flops", "bytes_accessed",
+                                    "collective_bytes")}
+    # per-op-type collective extrapolation (for the bottleneck narrative)
+    per_op = {}
+    for op in _COLLECTIVES:
+        b1 = c1["collectives"][op]["bytes"]
+        b2 = c2["collectives"][op]["bytes"]
+        per_op[op] = b1 + (u - 1) * (b2 - b1)
+    out["collective_bytes_by_op"] = per_op
+    return out
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                force: bool = False) -> dict:
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    cache = RESULTS / f"{tag}.json"
+    if cache.exists() and not force:
+        return json.loads(cache.read_text())
+
+    cfg = get_config(arch)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    ok, why = shape_applies(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        cache.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            }
+        except Exception as e:                      # pragma: no cover
+            mem_rec = {"error": str(e)}
+        try:
+            costs = compiled.cost_analysis()
+            if isinstance(costs, (list, tuple)):
+                costs = costs[0]
+            cost_rec = {"flops": float(costs.get("flops", -1)),
+                        "bytes_accessed": float(costs.get("bytes accessed",
+                                                          -1))}
+        except Exception as e:                      # pragma: no cover
+            cost_rec = {"error": str(e)}
+        coll = parse_collectives(compiled.as_text())
+        # single-pod runs also calibrate true per-layer costs (§Roofline);
+        # the multi-pod pass is the sharding proof and skips it.
+        extra = {}
+        if not multi_pod:
+            extra = {"cost_extrapolated": cost_extrapolation(
+                get_config(arch), shape, mesh)}
+        rec.update(status="ok", lower_s=round(t1 - t0, 2),
+                   compile_s=round(t2 - t1, 2), memory=mem_rec,
+                   cost=cost_rec, collectives=coll, **extra)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    cache.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) on both meshes")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    def show(rec):
+        line = f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} " \
+               f"{rec['status']:8s}"
+        if rec["status"] == "ok":
+            line += (f" compile={rec['compile_s']:8.1f}s "
+                     f"flops={rec['cost'].get('flops', -1):.3e} "
+                     f"coll={rec['collectives']['total_bytes']:.3e}B")
+        elif rec["status"] == "error":
+            line += " " + rec["error"][:120]
+        else:
+            line += " " + rec.get("reason", "")[:80]
+        print(line, flush=True)
+
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    show(dryrun_cell(arch, shape.name, mp, args.force))
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    show(dryrun_cell(args.arch, args.shape, args.multi_pod, args.force))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Partitioned-HLO analysis helpers (no jax/device side effects).
+
+Collective-byte accounting for §Roofline: sums the result bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+in a compiled module's HLO text.
+"""
+from __future__ import annotations
+
+import re
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the partitioned HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+([a-z\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        # match e.g. all-reduce / all-gather-start / all-reduce-done
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        out[base]["count"] += 1
+        out[base]["bytes"] += _shape_bytes(m.group(1))
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+

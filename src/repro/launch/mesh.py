@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run fakes 512 host devices *before* any
+jax import; see dryrun.py).
+
+  single pod : (16, 16)    axes ("data", "model")   — 256 chips
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic-rescale tests build smaller ones)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

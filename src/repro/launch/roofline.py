@@ -1,0 +1,148 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch × shape) single-pod cell:
+    compute   = HLO_FLOPs_per_device / 197e12          (v5e bf16 peak)
+    memory    = HLO_bytes_per_device / 819e9           (HBM bandwidth)
+    collective= collective_bytes_per_device / 50e9     (ICI per link)
+plus MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (serve) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs, which exposes remat and
+sharding-replication waste (see EXPERIMENTS.md §Roofline narrative).
+
+All FLOP/byte figures use the loop-calibrated extrapolation recorded by
+dryrun.py (XLA counts while bodies once; see cost_extrapolation there).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applies
+from repro.models import build_model
+from repro.models.common import n_params
+
+PEAK_FLOPS = 197e12        # TPU v5e bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+CHIPS = 256                # single-pod mesh
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _active_fraction(cfg) -> float:
+    """Active-parameter fraction for MoE archs (6·N_active·D)."""
+    if cfg.moe is None:
+        return 1.0
+    model = build_model(cfg)
+    total = n_params(model.schema())
+    m = cfg.moe
+    routed_one = cfg.d_model * m.d_expert * 3
+    if cfg.family == "hybrid":
+        # half the period's FFNs are MoE; each picks top_k of n_experts
+        inactive = (m.n_experts - m.top_k) * routed_one * (cfg.n_layers // 2)
+    else:
+        inactive = (m.n_experts - m.top_k) * routed_one * cfg.n_layers
+    return max((total - inactive) / total, 1e-6)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) or 2·N_active·D (forward/serve), global."""
+    model = build_model(cfg)
+    total = n_params(model.schema())
+    active = total * _active_fraction(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def cell_roofline(arch: str, shape_name: str) -> dict | None:
+    path = RESULTS / f"{arch}__{shape_name}__pod1.json"
+    if not path.exists():
+        return None
+    rec = json.loads(path.read_text())
+    if rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name,
+                "status": rec.get("status"),
+                "reason": rec.get("reason") or rec.get("error", "")[:200]}
+    cfg = get_config(arch)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    ce = rec["cost_extrapolated"]
+
+    def extr(key):
+        # re-extrapolate with a non-negative per-layer slope: for decode
+        # cells the fixed (embed/head) part dominates and XLA may schedule
+        # the 2-layer variant *cheaper* on some component — a layer cannot
+        # have negative cost, so clamp.
+        c1, c2 = ce["c1"][key], ce["c2"][key]
+        return c1 + (ce["units"] - 1) * max(c2 - c1, 0.0)
+
+    flops_dev = extr("flops")
+    bytes_dev = extr("bytes_accessed")
+    coll_dev = extr("collective_bytes")
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * CHIPS
+    bound = max(terms.values())
+    # roofline fraction: useful work per second at the bound vs peak
+    frac = (mf / CHIPS / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": frac,
+        "coll_by_op": ce.get("collective_bytes_by_op", {}),
+        "memory_temp_bytes": rec["memory"].get("temp_bytes", -1),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cfg = get_config(arch)
+            ok, why = shape_applies(cfg, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape.name,
+                             "status": "skipped", "reason": why})
+                continue
+            r = cell_roofline(arch, shape.name)
+            if r:
+                rows.append(r)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>5s} {'useful':>7s} {'roofl':>6s}")
+    print(hdr)
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} -- {r.get('status')}: "
+                  f"{r.get('reason','')[:60]}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+              f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+              f"{r['dominant'][:5]:>5s} {r['useful_ratio']:7.3f} "
+              f"{r['roofline_fraction']:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

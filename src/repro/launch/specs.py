@@ -1,0 +1,197 @@
+"""Input stand-ins + step builders for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input (no device allocation); ``build_step`` pairs them with
+the function the cell lowers:
+
+  train_*   → full ``train_step`` (fwd + bwd + AdamW update)
+  prefill_* → forward logits of the last position
+  decode_*  → one-token ``serve_step`` against a seq_len KV cache/SSM state
+
+and the matching NamedShardings from the logical-axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCfg
+from ..dist import sharding as shd
+from ..models import build_model
+from ..models.attention import KVCache, QuantKVCache
+from ..models.mamba2 import MambaState
+from ..train.optimizer import AdamWCfg, abstract_opt_state
+from ..train.train_step import make_train_step
+
+i32 = jnp.int32
+bf16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ===========================================================================
+# Batch specs (train / prefill)
+# ===========================================================================
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        specs = {
+            "embeds": _sds((B, S, cfg.d_model), bf16),
+            "positions": _sds((3, B, S), i32),
+            "labels": _sds((B, S), i32),
+        }
+    elif cfg.family == "encdec":
+        specs = {
+            "frames": _sds((B, cfg.n_frames, cfg.d_model), bf16),
+            "tokens": _sds((B, S), i32),
+            "labels": _sds((B, S), i32),
+        }
+    else:
+        specs = {
+            "tokens": _sds((B, S), i32),
+            "labels": _sds((B, S), i32),
+        }
+    return specs
+
+
+def batch_logical(cfg: ArchConfig, specs: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in specs.items():
+        if k == "positions":
+            out[k] = (None, "batch", "seq")
+        elif k in ("embeds", "frames"):
+            out[k] = ("batch", "seq", None)
+        else:
+            out[k] = ("batch", "seq")
+    return out
+
+
+# ===========================================================================
+# Decode-state logical axes (mirrors each family's state structure)
+# ===========================================================================
+
+STATE_RULES = dict(shd.ACT_RULES)
+STATE_RULES["seq"] = ("model",)        # KV cache may shard its time axis
+STATE_RULES["heads"] = ("model",)
+
+def _kv_axes(quant: bool = False):
+    if quant:
+        return QuantKVCache(
+            k=("layers", "batch", "kv_heads", "seq", None),
+            v=("layers", "batch", "kv_heads", "seq", None),
+            k_scale=("layers", "batch", "kv_heads", "seq"),
+            v_scale=("layers", "batch", "kv_heads", "seq"),
+            pos=("layers",))
+    return KVCache(k=("layers", "batch", "kv_heads", "seq", None),
+                   v=("layers", "batch", "kv_heads", "seq", None),
+                   pos=("layers",))
+
+
+def _mamba_axes(extra_lead=()):
+    lead = ("layers",) + extra_lead
+    return MambaState(h=lead + ("batch", "heads", "state", None),
+                      conv=lead + ("batch", None, "mlp"))
+
+
+def decode_state_logical(model, cfg: ArchConfig):
+    from ..models.encdec import EncDec, EncDecState
+    from ..models.hybrid import HybridLM
+    from ..models.transformer import DecodeState
+    if isinstance(model, EncDec):
+        return EncDecState(
+            self_kv=_kv_axes(),
+            cross_kv={"k": ("layers", "batch", "kv_heads", "frames", None),
+                      "v": ("layers", "batch", "kv_heads", "frames", None)},
+            pos=())
+    if isinstance(model, HybridLM):
+        return DecodeState(
+            layers={"kv": _kv_axes(),
+                    "mamba": _mamba_axes(extra_lead=("layers",))},
+            pos=())
+    if model.is_mamba:
+        return DecodeState(layers=_mamba_axes(), pos=())
+    return DecodeState(layers=_kv_axes(quant=cfg.kv_dtype == "int8"),
+                       pos=())
+
+
+# ===========================================================================
+# Step builders
+# ===========================================================================
+
+@dataclasses.dataclass
+class Cell:
+    fn: Callable
+    args: Tuple           # abstract arguments (ShapeDtypeStructs)
+    in_shardings: Tuple
+    donate: Tuple = ()
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeCfg, mesh,
+               opt_cfg: AdamWCfg | None = None,
+               unroll: bool = False) -> Cell:
+    model = build_model(cfg)
+    abstract_params = model.abstract_params()
+    param_axes = model.param_logical_axes()
+    p_shard = shd.tree_shardings(mesh, abstract_params, param_axes,
+                                 shd.PARAM_RULES)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWCfg()
+        opt_abs = abstract_opt_state(abstract_params)
+        opt_axes = type(opt_abs)(step=(), mu=param_axes, nu=param_axes)
+        o_shard = shd.tree_shardings(mesh, opt_abs, opt_axes,
+                                     shd.PARAM_RULES)
+        specs = input_specs(cfg, shape)
+        b_axes = batch_logical(cfg, specs)
+        b_shard = shd.tree_shardings(mesh, specs, b_axes, shd.ACT_RULES)
+        fn = make_train_step(model, opt_cfg, unroll=unroll)
+        return Cell(fn=fn, args=(abstract_params, opt_abs, specs),
+                    in_shardings=(p_shard, o_shard, b_shard),
+                    donate=(0, 1))
+
+    if shape.kind == "prefill":
+        specs = input_specs(cfg, shape)
+        specs.pop("labels")
+        b_axes = batch_logical(cfg, specs)
+        b_shard = shd.tree_shardings(mesh, specs, b_axes, shd.ACT_RULES)
+
+        def prefill_step(params, batch):
+            if cfg.family == "encdec":
+                enc = model.encode(params, batch["frames"], remat=False,
+                                   unroll=unroll)
+                h = model.decode_train(params, batch["tokens"], enc,
+                                       remat=False, unroll=unroll)
+                from ..models.common import unembed
+                return unembed(h[:, -1:], params["embed"].T)
+            h = model.hidden_states(
+                params, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                positions=batch.get("positions"), remat=False,
+                unroll=unroll)
+            return model.logits(params, h[:, -1:])
+
+        return Cell(fn=prefill_step, args=(abstract_params, specs),
+                    in_shardings=(p_shard, b_shard))
+
+    # decode: one new token against a seq_len-deep cache/state
+    B = shape.global_batch
+    state_abs = model.init_decode_state(B, shape.seq_len,
+                                        abstract_only=True)
+    state_axes = decode_state_logical(model, cfg)
+    s_shard = shd.tree_shardings(mesh, state_abs, state_axes, STATE_RULES)
+    tok = _sds((B, 1), i32)
+    t_shard = shd.tree_shardings(mesh, {"t": tok}, {"t": ("batch", None)},
+                                 shd.ACT_RULES)["t"]
+
+    def serve_step(params, tokens, state):
+        return model.decode_step(params, tokens, state, unroll=unroll)
+
+    return Cell(fn=serve_step, args=(abstract_params, tok, state_abs),
+                in_shardings=(p_shard, t_shard, s_shard),
+                donate=(2,))

@@ -1,0 +1,15 @@
+"""Model zoo: build any assigned architecture from its ArchConfig."""
+from __future__ import annotations
+
+
+def build_model(cfg):
+    # local imports: configs.base imports models.mamba2/moe for the dims
+    # dataclasses, so the family modules must load lazily here.
+    if cfg.family == "encdec":
+        from .encdec import EncDec
+        return EncDec(cfg)
+    if cfg.family == "hybrid":
+        from .hybrid import HybridLM
+        return HybridLM(cfg)
+    from .transformer import LM
+    return LM(cfg)

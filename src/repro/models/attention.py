@@ -1,0 +1,185 @@
+"""GQA attention block: qk-norm, RoPE/M-RoPE, flash/ref dispatch, KV cache."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from ..kernels.flash_attention import attention as flash_attention
+from ..kernels.flash_attention import attention_ref
+from .common import P, apply_mrope, apply_rope, rmsnorm
+
+
+def attn_schema(d: int, n_heads: int, n_kv: int, head_dim: int,
+                qk_norm: bool, dtype=jnp.bfloat16) -> Dict[str, P]:
+    s = {
+        "wq": P((d, n_heads * head_dim), ("embed", "heads"), dtype=dtype),
+        "wk": P((d, n_kv * head_dim), ("embed", "kv_heads"), dtype=dtype),
+        "wv": P((d, n_kv * head_dim), ("embed", "kv_heads"), dtype=dtype),
+        "wo": P((n_heads * head_dim, d), ("heads", "embed"), dtype=dtype),
+    }
+    if qk_norm:
+        s["q_norm"] = P((head_dim,), (None,), init="ones", dtype=jnp.float32)
+        s["k_norm"] = P((head_dim,), (None,), init="ones", dtype=jnp.float32)
+    return s
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # [B, Hkv, S, Dh]
+    v: jnp.ndarray
+    pos: jnp.ndarray     # scalar i32 — tokens already cached
+
+
+class QuantKVCache(NamedTuple):
+    """§Perf: int8 KV cache — decode is cache-read-bound, so halving the
+    bytes per element (2→1 + 4/Dh scale) halves the dominant memory term.
+    Per-position symmetric scales keep the quantization error local."""
+
+    k: jnp.ndarray        # [B, Hkv, S, Dh] int8
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # [B, Hkv, S] f32
+    v_scale: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def _quant(x):
+    """[..., Dh] bf16/f32 → (int8, f32 scale over the last dim)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    q = jnp.round(xf / jnp.maximum(scale[..., None], 1e-9))
+    return q.astype(jnp.int8), scale
+
+
+def _project(p, x, n_heads, n_kv, head_dim, qk_norm, positions,
+             mrope_sections=None, rope_theta=1e6):
+    B, T, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, T, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, T, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, T, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if positions is not None:
+        if mrope_sections is not None:
+            q = apply_mrope(q, positions, mrope_sections, rope_theta)
+            k = apply_mrope(k, positions, mrope_sections, rope_theta)
+        else:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, *, n_heads, n_kv, head_dim, qk_norm=False,
+               positions=None, mrope_sections=None, rope_theta=1e6,
+               causal=True, impl=None, kv: Optional[jnp.ndarray] = None,
+               attn_impl: str = "grouped"):
+    """Full-sequence attention (training / prefill).
+
+    ``kv``: optional external K/V source sequence (cross-attention) given
+    as an [B, Tkv, d] tensor — projected with this block's wk/wv.
+    ``attn_impl``: sharding formulation (see ArchConfig.attn_impl).
+    """
+    B, T, _ = x.shape
+    if kv is None:
+        q, k, v = _project(p, x, n_heads, n_kv, head_dim, qk_norm,
+                           positions, mrope_sections, rope_theta)
+    else:
+        q, _, _ = _project(p, x, n_heads, n_kv, head_dim, qk_norm,
+                           positions, mrope_sections, rope_theta)
+        Tk = kv.shape[1]
+        k = (kv @ p["wk"]).reshape(B, Tk, n_kv, head_dim)
+        v = (kv @ p["wv"]).reshape(B, Tk, n_kv, head_dim)
+        if qk_norm:
+            k = rmsnorm(k, p["k_norm"])
+        causal = False
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if attn_impl in ("flat", "flat_seqshard") and n_kv < n_heads:
+        # §Perf: the grouped einsum caps head sharding at n_kv; repeating
+        # K/V to Hq flat heads restores n_heads-way parallelism.
+        g = n_heads // n_kv
+        kt = jnp.repeat(kt, g, axis=1)
+        vt = jnp.repeat(vt, g, axis=1)
+    if attn_impl == "flat_seqshard":
+        # §Perf: context parallelism — shard the QUERY sequence over the
+        # model axis; every head count divides, and the S² logits tensor
+        # is 1/model-axis per device.  K/V stay replicated across model
+        # (gathered once; small next to the S² compute).
+        qt = jax.lax.with_sharding_constraint(
+            qt, PartitionSpec("data", None, "model", None))
+    out = flash_attention(qt, kt, vt, causal=causal, impl=impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, n_heads * head_dim)
+    return out @ p["wo"]
+
+
+def attn_decode(p, x, cache, *, n_heads, n_kv, head_dim,
+                qk_norm=False, mrope_sections=None, rope_theta=1e6):
+    """One-token decode against a fixed-capacity KV cache.
+
+    x [B, 1, d].  The cache holds S slots; ``cache.pos`` tokens are valid.
+    Accepts KVCache (bf16) or QuantKVCache (int8 + scales).
+    Returns (out [B, 1, d], new cache).
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    S = cache.k.shape[2]
+    pos = cache.pos
+    quant = isinstance(cache, QuantKVCache)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k, v = _project(p, x, n_heads, n_kv, head_dim, qk_norm,
+                       positions, mrope_sections, rope_theta)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if quant:
+        kq, ks = _quant(kt)
+        vq, vs = _quant(vt)
+        k_cache = jax.lax.dynamic_update_slice(cache.k, kq, (0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, vq, (0, 0, pos, 0))
+        k_sc = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, 0, pos))
+        v_sc = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, 0, pos))
+        k_read = k_cache.astype(jnp.float32) * k_sc[..., None]
+        v_read = v_cache.astype(jnp.float32) * v_sc[..., None]
+        new_cache = QuantKVCache(k=k_cache, v=v_cache, k_scale=k_sc,
+                                 v_scale=v_sc, pos=pos + 1)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache.k, kt, (0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache.v, vt, (0, 0, pos, 0))
+        k_read = k_cache.astype(jnp.float32)
+        v_read = v_cache.astype(jnp.float32)
+        new_cache = KVCache(k=k_cache, v=v_cache, pos=pos + 1)
+
+    qt = q.transpose(0, 2, 1, 3)                       # [B, H, 1, Dh]
+    g = n_heads // n_kv
+    qg = qt.reshape(B, n_kv, g, 1, head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, k_read) \
+        * head_dim ** -0.5
+    valid = jnp.arange(S)[None, None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v_read)
+    out = out.reshape(B, n_heads, 1, head_dim).transpose(0, 2, 1, 3) \
+        .reshape(B, 1, n_heads * head_dim).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def kv_cache_schema(batch: int, n_kv: int, seq: int, head_dim: int,
+                    dtype=jnp.bfloat16, quant: bool = False):
+    """Abstract KV cache (dry-run input_specs for decode shapes)."""
+    if quant:
+        return QuantKVCache(
+            k=jax.ShapeDtypeStruct((batch, n_kv, seq, head_dim), jnp.int8),
+            v=jax.ShapeDtypeStruct((batch, n_kv, seq, head_dim), jnp.int8),
+            k_scale=jax.ShapeDtypeStruct((batch, n_kv, seq), jnp.float32),
+            v_scale=jax.ShapeDtypeStruct((batch, n_kv, seq), jnp.float32),
+            pos=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+    return KVCache(
+        k=jax.ShapeDtypeStruct((batch, n_kv, seq, head_dim), dtype),
+        v=jax.ShapeDtypeStruct((batch, n_kv, seq, head_dim), dtype),
+        pos=jax.ShapeDtypeStruct((), jnp.int32),
+    )

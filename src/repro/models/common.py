@@ -1,0 +1,168 @@
+"""Model-zoo foundations: declarative parameter schemas + shared layers.
+
+Every parameter is declared once as a :class:`P` (shape, logical axes,
+init) inside a schema tree; from that single source we derive
+  * ``abstract(schema)``   — ShapeDtypeStructs for the dry-run (no alloc),
+  * ``initialize(schema)`` — materialized arrays for smoke tests/training,
+  * ``logical_axes(schema)`` — the logical-axis tree consumed by
+    ``repro.dist.sharding`` to build NamedShardings.
+
+Logical axis vocabulary (mapped to mesh axes in dist/sharding.py):
+  batch seq embed heads kv_heads mlp experts vocab state conv frames
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter declaration."""
+
+    shape: tuple
+    axes: tuple              # logical axis name (or None) per dim
+    init: str = "normal"     # normal | zeros | ones | small_normal | alog
+    scale: float | None = None
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def tree_map_schema(f: Callable[[P], Any], schema) -> Any:
+    return jax.tree_util.tree_map(
+        f, schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract(schema):
+    return tree_map_schema(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), schema)
+
+
+def logical_axes(schema):
+    return tree_map_schema(lambda p: p.axes, schema)
+
+
+def n_params(schema) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree_map_schema(lambda p: int(np.prod(p.shape)), schema))
+    return int(sum(leaves))
+
+
+def initialize(schema, rng) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten(
+        schema, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(rng, len(flat))
+
+    def one(p: P, key):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, p.dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, p.dtype)
+        if p.init == "alog":       # mamba A_log: log of uniform [1, 16]
+            u = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(p.dtype)
+        scale = p.scale if p.scale is not None else p.shape[-1] ** -0.5
+        if p.init == "small_normal":
+            scale = 0.02
+        return (jax.random.normal(key, p.shape, jnp.float32)
+                * scale).astype(p.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, k) for p, k in zip(flat, keys)])
+
+
+# ===========================================================================
+# Shared layers (pure functions over param dicts; f32 math, bf16 storage)
+# ===========================================================================
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu(x @ w_up + b_up)
+    return h @ w_down + b_down
+
+
+def mlp_schema(d: int, f: int, dtype=jnp.bfloat16) -> Dict[str, P]:
+    return {
+        "gate": P((d, f), ("embed", "mlp"), dtype=dtype),
+        "up": P((d, f), ("embed", "mlp"), dtype=dtype),
+        "down": P((f, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def apply_mlp(p, x):
+    return swiglu(x, p["gate"], p["up"], p["down"])
+
+
+# --------------------------------------------------------------------------
+# RoPE (standard + multimodal M-RoPE of Qwen2-VL)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e6):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e6):
+    """x [B, T, H, Dh]; positions [B, T] int32."""
+    Dh = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(Dh, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * inv      # [B,T,Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 1e6):
+    """Qwen2-VL M-RoPE: positions3 [3, B, T] (t/h/w); ``sections`` is the
+    per-modality split of the Dh/2 frequency bands (e.g. (16, 24, 24))."""
+    Dh = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(Dh, theta), jnp.float32)      # [Dh/2]
+    ang_tmw = positions3.astype(jnp.float32)[..., None] * inv  # [3,B,T,Dh/2]
+    sel = np.zeros((Dh // 2,), np.int32)
+    off = 0
+    for i, s in enumerate(sections):
+        sel[off:off + s] = i
+        off += s
+    assert off == Dh // 2, (sections, Dh)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_tmw, 0, -1), jnp.asarray(sel)[None, None, :, None],
+        axis=-1)[..., 0]                                       # [B,T,Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(t: int, d: int):
+    pos = np.arange(t)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / (10000 ** (dim / d))
+    out = np.zeros((t, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def unembed(x, emb_or_head):
+    """Logits in f32 (loss stability)."""
+    return (x.astype(jnp.float32)
+            @ emb_or_head.astype(jnp.float32))

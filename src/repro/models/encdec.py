@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Encoder consumes precomputed frame embeddings (the assignment's stub
+frontend), adds sinusoidal positions, and runs non-causal self-attention
+blocks.  The decoder is a causal LM with cross-attention into the encoder
+output.  Decode shapes lower the decoder step with a self-attn KV cache of
+seq_len plus the (precomputed) cross-attention K/V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (KVCache, attn_apply, attn_decode, attn_schema,
+                        kv_cache_schema)
+from .common import P, abstract, apply_mlp, initialize, logical_axes, \
+    mlp_schema, rmsnorm, sinusoid_positions, unembed
+from .transformer import DecodeState, _stack_schema
+
+
+class EncDecState(NamedTuple):
+    self_kv: Any            # stacked per-layer KVCache over decoder seq
+    cross_kv: Any           # stacked per-layer (k, v) over encoder frames
+    pos: jnp.ndarray
+
+
+class EncDec:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---------------- schema -------------------------------------------
+    def _enc_layer(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {
+            "norm1": P((d,), ("embed",), init="ones", dtype=jnp.float32),
+            "attn": attn_schema(d, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                                cfg.qk_norm),
+            "norm2": P((d,), ("embed",), init="ones", dtype=jnp.float32),
+            "mlp": mlp_schema(d, cfg.d_ff),
+        }
+
+    def _dec_layer(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {
+            "norm1": P((d,), ("embed",), init="ones", dtype=jnp.float32),
+            "self_attn": attn_schema(d, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                                     cfg.qk_norm),
+            "norm2": P((d,), ("embed",), init="ones", dtype=jnp.float32),
+            "cross_attn": attn_schema(d, cfg.n_heads, cfg.n_kv,
+                                      cfg.head_dim, cfg.qk_norm),
+            "norm3": P((d,), ("embed",), init="ones", dtype=jnp.float32),
+            "mlp": mlp_schema(d, cfg.d_ff),
+        }
+
+    def schema(self):
+        cfg = self.cfg
+        return {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       init="small_normal"),
+            "enc_layers": _stack_schema(self._enc_layer(), cfg.n_enc_layers),
+            "enc_norm": P((cfg.d_model,), ("embed",), init="ones",
+                          dtype=jnp.float32),
+            "dec_layers": _stack_schema(self._dec_layer(), cfg.n_layers),
+            "dec_norm": P((cfg.d_model,), ("embed",), init="ones",
+                          dtype=jnp.float32),
+        }
+
+    def abstract_params(self):
+        return abstract(self.schema())
+
+    def init_params(self, rng):
+        return initialize(self.schema(), rng)
+
+    def param_logical_axes(self):
+        return logical_axes(self.schema())
+
+    # ---------------- encoder ------------------------------------------
+    def encode(self, params, frames, impl=None, remat=True, unroll=False):
+        cfg = self.cfg
+        T = frames.shape[1]
+        x = frames.astype(jnp.bfloat16) + \
+            sinusoid_positions(T, cfg.d_model).astype(jnp.bfloat16)[None]
+
+        def block(lp, h):
+            a = attn_apply(lp["attn"], rmsnorm(h, lp["norm1"]),
+                           n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                           head_dim=cfg.head_dim, causal=False,
+                           positions=None, impl=impl)
+            h = h + a
+            return h + apply_mlp(lp["mlp"], rmsnorm(h, lp["norm2"]))
+
+        fn = jax.checkpoint(block) if remat else block
+        x, _ = jax.lax.scan(lambda h, lp: (fn(lp, h), None), x,
+                            params["enc_layers"],
+                            unroll=cfg.n_enc_layers if unroll else 1)
+        return rmsnorm(x, params["enc_norm"])
+
+    # ---------------- decoder ------------------------------------------
+    def decode_train(self, params, tokens, enc_out, impl=None, remat=True,
+                     unroll=False):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B, T = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        def block(lp, h):
+            a = attn_apply(lp["self_attn"], rmsnorm(h, lp["norm1"]),
+                           n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                           head_dim=cfg.head_dim, causal=True,
+                           positions=positions,
+                           rope_theta=cfg.rope_theta, impl=impl)
+            h = h + a
+            c = attn_apply(lp["cross_attn"], rmsnorm(h, lp["norm2"]),
+                           n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                           head_dim=cfg.head_dim, positions=None,
+                           kv=enc_out, impl=impl)
+            h = h + c
+            return h + apply_mlp(lp["mlp"], rmsnorm(h, lp["norm3"]))
+
+        fn = jax.checkpoint(block) if remat else block
+        x, _ = jax.lax.scan(lambda h, lp: (fn(lp, h), None), x,
+                            params["dec_layers"],
+                            unroll=cfg.n_layers if unroll else 1)
+        return rmsnorm(x, params["dec_norm"])
+
+    def loss_fn(self, params, batch, impl=None, remat=True,
+                interpret=False, unroll=False):
+        enc_out = self.encode(params, batch["frames"], impl=impl,
+                              remat=remat, unroll=unroll)
+        h = self.decode_train(params, batch["tokens"], enc_out, impl=impl,
+                              remat=remat, unroll=unroll)
+        logits = unembed(h, params["embed"].T)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # ---------------- serving ------------------------------------------
+    def init_decode_state(self, batch: int, seq: int, abstract_only=False):
+        cfg = self.cfg
+        kv = kv_cache_schema(batch, cfg.n_kv, seq, cfg.head_dim)
+        cross = {
+            "k": jax.ShapeDtypeStruct(
+                (batch, cfg.n_kv, cfg.n_frames, cfg.head_dim), jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(
+                (batch, cfg.n_kv, cfg.n_frames, cfg.head_dim), jnp.bfloat16),
+        }
+
+        def stack(x):
+            return jax.ShapeDtypeStruct((cfg.n_layers,) + x.shape, x.dtype)
+
+        state = EncDecState(
+            self_kv=jax.tree_util.tree_map(stack, kv),
+            cross_kv=jax.tree_util.tree_map(stack, cross),
+            pos=jax.ShapeDtypeStruct((), jnp.int32))
+        if abstract_only:
+            return state
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), state)
+
+    def decode_step(self, params, tokens, state: EncDecState,
+                    unroll=False):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        pos = state.pos
+
+        def body(h, inp):
+            lp, kvc, cross = inp
+            kvc = kvc._replace(pos=pos)
+            out, new_kv = attn_decode(
+                lp["self_attn"], rmsnorm(h, lp["norm1"]),
+                kvc, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+            new_kv = new_kv._replace(pos=jnp.zeros((), jnp.int32))
+            h = h + out
+            # cross attention against precomputed encoder K/V
+            B = h.shape[0]
+            hq = rmsnorm(h, lp["norm2"])
+            q = (hq @ lp["cross_attn"]["wq"]).reshape(
+                B, 1, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            g = cfg.n_heads // cfg.n_kv
+            qg = q.reshape(B, cfg.n_kv, g, 1, cfg.head_dim) \
+                .astype(jnp.float32)
+            logits = jnp.einsum("bkgqd,bksd->bkgqs", qg,
+                                cross["k"].astype(jnp.float32)) \
+                * cfg.head_dim ** -0.5
+            w = jax.nn.softmax(logits, axis=-1)
+            c = jnp.einsum("bkgqs,bksd->bkgqd", w,
+                           cross["v"].astype(jnp.float32))
+            c = c.reshape(B, cfg.n_heads, 1, cfg.head_dim) \
+                .transpose(0, 2, 1, 3).reshape(B, 1,
+                                               cfg.n_heads * cfg.head_dim)
+            h = h + c.astype(h.dtype) @ lp["cross_attn"]["wo"]
+            h = h + apply_mlp(lp["mlp"], rmsnorm(h, lp["norm3"]))
+            return h, new_kv
+
+        x, new_kv = jax.lax.scan(
+            body, x, (params["dec_layers"], state.self_kv, state.cross_kv),
+            unroll=cfg.n_layers if unroll else 1)
+        h = rmsnorm(x, params["dec_norm"])
+        logits = unembed(h, params["embed"].T)
+        return logits, EncDecState(self_kv=new_kv, cross_kv=state.cross_kv,
+                                   pos=pos + 1)

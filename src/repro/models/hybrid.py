@@ -1,0 +1,197 @@
+"""Jamba-style hybrid: periods of (1 attention + K-1 Mamba-2) layers with
+MoE FFNs on alternating layers (arXiv:2403.19887).
+
+The model scans over *periods* (stacked period parameters), each period
+unrolling its K sub-layers — compile time O(period), run depth O(L).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attn_apply, attn_decode, attn_schema, kv_cache_schema
+from .common import P, abstract, apply_mlp, initialize, logical_axes, \
+    mlp_schema, rmsnorm, unembed
+from .mamba2 import mamba_apply, mamba_decode, mamba_schema, \
+    mamba_state_schema
+from .moe import moe_apply, moe_schema
+from .transformer import DecodeState, _stack_schema
+
+
+class HybridLM:
+    """1:(K-1) attention:mamba interleave, MoE on odd in-period layers."""
+
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.attn_period >= 2 and cfg.n_layers % cfg.attn_period == 0
+        self.cfg = cfg
+        self.period = cfg.attn_period
+        self.n_periods = cfg.n_layers // cfg.attn_period
+        self.n_mamba = self.period - 1
+        # FFN pattern inside a period: MoE on odd local indices
+        self.n_moe = self.period // 2
+        self.n_dense = self.period - self.n_moe
+
+    # ---------------- schema -------------------------------------------
+    def period_schema(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_model
+        norm = lambda: P((d,), ("embed",), init="ones", dtype=jnp.float32)
+        return {
+            "attn_norm": norm(),
+            "attn": attn_schema(d, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                                cfg.qk_norm),
+            "mamba_norm": _stack_schema({"n": norm()}, self.n_mamba)["n"],
+            "mamba": _stack_schema(mamba_schema(cfg.mamba), self.n_mamba),
+            "ffn_norm": _stack_schema({"n": norm()}, self.period)["n"],
+            "dense": _stack_schema(mlp_schema(d, cfg.d_ff), self.n_dense),
+            "moe": _stack_schema(moe_schema(d, cfg.moe), self.n_moe),
+        }
+
+    def schema(self):
+        cfg = self.cfg
+        return {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       init="small_normal"),
+            "periods": _stack_schema(self.period_schema(), self.n_periods),
+            "final_norm": P((cfg.d_model,), ("embed",), init="ones",
+                            dtype=jnp.float32),
+            "head": P((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+        }
+
+    def abstract_params(self):
+        return abstract(self.schema())
+
+    def init_params(self, rng):
+        return initialize(self.schema(), rng)
+
+    def param_logical_axes(self):
+        return logical_axes(self.schema())
+
+    # ---------------- forward ------------------------------------------
+    def _ffn(self, pp, x, local_i):
+        cfg = self.cfg
+        h = rmsnorm(x, jax.tree_util.tree_map(
+            lambda a: a[local_i], pp["ffn_norm"]))
+        if local_i % 2 == 1:
+            mp = jax.tree_util.tree_map(lambda a: a[local_i // 2], pp["moe"])
+            return x + moe_apply(mp, h, cfg.moe)
+        dp = jax.tree_util.tree_map(lambda a: a[local_i // 2], pp["dense"])
+        return x + apply_mlp(dp, h)
+
+    def _period(self, pp, x, positions, impl=None, interpret=False):
+        cfg = self.cfg
+        # local layer 0: attention mixer
+        h = rmsnorm(x, pp["attn_norm"])
+        x = x + attn_apply(pp["attn"], h, n_heads=cfg.n_heads,
+                           n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                           qk_norm=cfg.qk_norm, positions=positions,
+                           rope_theta=cfg.rope_theta, impl=impl)
+        x = self._ffn(pp, x, 0)
+        # local layers 1..K-1: mamba mixers
+        for j in range(self.n_mamba):
+            mp = jax.tree_util.tree_map(lambda a: a[j], pp["mamba"])
+            mn = jax.tree_util.tree_map(lambda a: a[j], pp["mamba_norm"])
+            h = rmsnorm(x, mn)
+            x = x + mamba_apply(mp, h, cfg.mamba, chunk=cfg.ssd_chunk,
+                                interpret=interpret)
+            x = self._ffn(pp, x, j + 1)
+        return x
+
+    def hidden_states(self, params, tokens=None, embeds=None,
+                      positions=None, impl=None, remat=True,
+                      interpret=False, unroll=False):
+        x = params["embed"][tokens] if embeds is None else embeds
+        B, T = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                         (B, T))
+        fn = functools.partial(self._period, positions=positions, impl=impl,
+                               interpret=interpret)
+        body = (lambda pp, h: fn(pp, h))
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(lambda h, pp: (body(pp, h), None), x,
+                            params["periods"],
+                            unroll=self.n_periods if unroll else 1)
+        return rmsnorm(x, params["final_norm"])
+
+    def logits(self, params, hidden):
+        return unembed(hidden, params["head"])
+
+    def loss_fn(self, params, batch, impl=None, remat=True,
+                interpret=False, unroll=False):
+        h = self.hidden_states(params, tokens=batch["tokens"], impl=impl,
+                               remat=remat, interpret=interpret,
+                               unroll=unroll)
+        logits = unembed(h, params["head"])
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # ---------------- decode -------------------------------------------
+    def init_decode_state(self, batch: int, seq: int, abstract_only=False):
+        cfg = self.cfg
+        kv = kv_cache_schema(batch, cfg.n_kv, seq, cfg.head_dim)
+        ms = mamba_state_schema(batch, cfg.mamba)
+
+        def stack(n, x):
+            return jax.ShapeDtypeStruct((n,) + x.shape, x.dtype)
+
+        per = {
+            "kv": kv,
+            "mamba": jax.tree_util.tree_map(
+                functools.partial(stack, self.n_mamba), ms),
+        }
+        stacked = jax.tree_util.tree_map(
+            functools.partial(stack, self.n_periods), per)
+        state = DecodeState(layers=stacked,
+                            pos=jax.ShapeDtypeStruct((), jnp.int32))
+        if abstract_only:
+            return state
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), state)
+
+    def decode_step(self, params, tokens, state: DecodeState,
+                    unroll=False):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        pos = state.pos
+
+        def body(h, inp):
+            pp, ls = inp
+            hn = rmsnorm(h, pp["attn_norm"])
+            kvc = ls["kv"]._replace(pos=pos)
+            out, new_kv = attn_decode(
+                pp["attn"], hn, kvc, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                head_dim=cfg.head_dim, qk_norm=cfg.qk_norm,
+                rope_theta=cfg.rope_theta)
+            new_kv = new_kv._replace(pos=jnp.zeros((), jnp.int32))
+            h = h + out
+            h = self._ffn(pp, h, 0)
+            new_ms = []
+            for j in range(self.n_mamba):
+                mp = jax.tree_util.tree_map(lambda a: a[j], pp["mamba"])
+                mn = jax.tree_util.tree_map(lambda a: a[j], pp["mamba_norm"])
+                msj = jax.tree_util.tree_map(lambda a: a[j], ls["mamba"])
+                hn = rmsnorm(h, mn)
+                out, ms_new = mamba_decode(mp, hn, msj, cfg.mamba)
+                h = h + out
+                h = self._ffn(pp, h, j + 1)
+                new_ms.append(ms_new)
+            stacked_ms = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_ms)
+            return h, {"kv": new_kv, "mamba": stacked_ms}
+
+        x, new_layers = jax.lax.scan(body, x, (params["periods"],
+                                               state.layers),
+                                     unroll=self.n_periods if unroll else 1)
+        h = rmsnorm(x, params["final_norm"])
+        return unembed(h, params["head"]), DecodeState(layers=new_layers,
+                                                       pos=pos + 1)

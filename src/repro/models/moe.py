@@ -1,0 +1,103 @@
+"""Mixture-of-Experts MLP: top-k routing, sort-based dropless-ish dispatch.
+
+Dispatch strategy (compile-friendly and EP-shardable): flatten the
+(token, k) assignments, argsort by expert id, slice each expert's segment
+into a fixed-capacity buffer, run one batched per-expert matmul
+(``ecd,edf->ecf`` — MXU shaped, expert dim sharded over the ``model``
+axis), and scatter-add the weighted outputs back.  Tokens beyond an
+expert's capacity are dropped (their router weight simply contributes
+nothing), with capacity_factor controlling the drop rate — the standard
+Switch/GShard contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import P, apply_mlp, mlp_schema
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_expert: int              # per-expert FFN width
+    n_shared: int = 0          # shared-expert count (Qwen2-MoE style)
+    d_shared: int = 0          # shared-expert FFN width (total)
+    capacity_factor: float = 1.25
+    norm_topk: bool = True
+
+
+def moe_schema(d: int, cfg: MoECfg, dtype=jnp.bfloat16) -> Dict[str, P]:
+    E, f = cfg.n_experts, cfg.d_expert
+    s = {
+        "router": P((d, E), ("embed", None), init="small_normal",
+                    dtype=jnp.float32),
+        "gate": P((E, d, f), ("experts", "embed", "mlp"), dtype=dtype),
+        "up": P((E, d, f), ("experts", "embed", "mlp"), dtype=dtype),
+        "down": P((E, f, d), ("experts", "mlp", "embed"), dtype=dtype),
+    }
+    if cfg.n_shared:
+        s["shared"] = mlp_schema(d, cfg.d_shared, dtype)
+        s["shared_gate"] = P((d, 1), ("embed", None), init="small_normal",
+                             dtype=jnp.float32)
+    return s
+
+
+def moe_apply(p, x, cfg: MoECfg):
+    """x [B, T, d] → [B, T, d]."""
+    B, T, d = x.shape
+    n_tok = B * T
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(n_tok, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]          # [n, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                 # [n, K]
+    if cfg.norm_topk:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch -----------------------------------------
+    flat_e = top_e.reshape(-1)                             # [n·K]
+    flat_t = jnp.repeat(jnp.arange(n_tok, dtype=jnp.int32), K)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sp = flat_e[order], flat_t[order], flat_p[order]
+
+    cap = int(max(1, -(-n_tok * K * cfg.capacity_factor // E)))
+    counts = jnp.bincount(se, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    # position of each sorted assignment within its expert segment
+    pos_in_e = jnp.arange(n_tok * K, dtype=jnp.int32) - offsets[se]
+    keep = pos_in_e < cap
+
+    # gather tokens into [E, cap, d]
+    slot = jnp.where(keep, se * cap + pos_in_e, E * cap)   # sentinel drop
+    tok_of_slot = jnp.full((E * cap + 1,), 0, jnp.int32).at[slot].set(
+        st_, mode="drop")
+    w_of_slot = jnp.zeros((E * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sp, 0.0), mode="drop")
+    live = jnp.zeros((E * cap + 1,), bool).at[slot].set(
+        keep, mode="drop")
+    tok_of_slot, w_of_slot, live = (a[:-1] for a in
+                                    (tok_of_slot, w_of_slot, live))
+    xe = jnp.where(live[:, None], xf[tok_of_slot], 0).reshape(E, cap, d)
+
+    # ---- batched per-expert FFN (expert dim sharded on `model`) -------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["down"]).reshape(E * cap, d)
+
+    # ---- weighted scatter-add back to tokens ---------------------------
+    contrib = ye.astype(jnp.float32) * w_of_slot[:, None]
+    out = jnp.zeros((n_tok, d), jnp.float32).at[
+        jnp.where(live, tok_of_slot, n_tok)].add(contrib, mode="drop")
+
+    if cfg.n_shared:
+        sg = jax.nn.sigmoid(xf.astype(jnp.float32) @ p["shared_gate"])
+        out = out + sg * apply_mlp(p["shared"], xf).astype(jnp.float32)
+    return out.reshape(B, T, d).astype(x.dtype)

@@ -1,0 +1,44 @@
+"""The jitted training step: loss → grads → (optional compression) → AdamW.
+
+``make_train_step`` builds the function the multi-pod dry-run lowers: it
+closes over the model and optimizer config, takes (params, opt_state,
+batch) and returns updated state + metrics.  Gradient compression (int8 +
+error feedback, dist/compression.py) is a static toggle modelling the
+cross-pod bandwidth optimization — under SPMD the quantize/dequantize
+brackets the gradient all-reduce so the cross-pod traffic is 1/4 width.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.compression import compress_decompress
+from .optimizer import AdamWCfg, AdamWState, adamw_update
+
+
+def make_train_step(model, opt_cfg: AdamWCfg,
+                    compress_grads: bool = False,
+                    impl: Optional[str] = None,
+                    remat: bool = True, unroll: bool = False) -> Callable:
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, impl=impl, remat=remat,
+                                    unroll=unroll)
+        )(params)
+        if compress_grads:
+            grads = jax.tree_util.tree_map(compress_decompress, grads)
+        new_params, new_state, stats = adamw_update(params, grads,
+                                                    opt_state, opt_cfg)
+        metrics = {"loss": loss, **stats}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, impl=None) -> Callable:
+    def eval_step(params, batch):
+        return model.loss_fn(params, batch, impl=impl, remat=False)
+
+    return eval_step

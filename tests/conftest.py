@@ -1,0 +1,15 @@
+"""Shared test fixtures. NOTE: never set XLA_FLAGS device-count here —
+smoke tests and benches must see the single real CPU device; only
+launch/dryrun.py fakes 512 devices (and only in its own process)."""
+import os
+
+# Keep test-time compilation lean and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,92 @@
+"""Critical-path analysis (Alg 2) — tropical closure vs DP oracle, and
+engine response times vs the analytic critical path on deterministic runs.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
+                        build_graph, critical_path, diamond, linear_chain,
+                        path_delay, response_times)
+from repro.core.critical_path import response_times_batched
+
+
+def _random_dag(rng, n, p=0.35):
+    """Random DAG via upper-triangular edges + random delays."""
+    names = [f"s{i}" for i in range(n)]
+    calls = {}
+    for i in range(n):
+        dst = [names[j] for j in range(i + 1, n) if rng.random() < p]
+        if dst:
+            calls[names[i]] = dst
+    delays = rng.uniform(0.5, 5.0, size=n)
+    mi = {nm: 100.0 for nm in names}
+    g = build_graph(names, calls, [("api", names[0], 1.0)], mi)
+    return g, delays
+
+
+@given(st.integers(min_value=2, max_value=12), st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=60, deadline=None)
+def test_tropical_matches_dp_oracle(n, seed):
+    rng = np.random.default_rng(seed)
+    g, delays = _random_dag(rng, n)
+    rt_trop = response_times(g, delays)[0]
+    rt_dp, path = critical_path(g, delays, 0)
+    assert np.isclose(rt_trop, rt_dp, rtol=1e-5), (rt_trop, rt_dp)
+    # Eq 5: the returned CP's delay equals the response time
+    assert np.isclose(path_delay(path, delays), rt_dp, rtol=1e-6)
+    # path must start at the API entry and follow real edges
+    assert path[0] == int(g.api_entry[0])
+    adj = g.adjacency()
+    for u, v in zip(path, path[1:]):
+        assert adj[u, v]
+
+
+def test_batched_matches_single():
+    rng = np.random.default_rng(7)
+    g, _ = _random_dag(rng, 8, p=0.5)
+    delays = rng.uniform(0.1, 3.0, size=(5, g.n_services)).astype(np.float32)
+    batched = response_times_batched(g, delays)
+    for b in range(5):
+        single = response_times(g, delays[b])
+        np.testing.assert_allclose(batched[b], single, rtol=1e-5)
+
+
+def test_diamond_critical_path_picks_heavier_branch():
+    g = diamond(mi=100.0)  # C = 2×mi, so A→C→D is critical
+    delays = np.array([1.0, 1.0, 2.0, 1.0])
+    rt, path = critical_path(g, delays, 0)
+    assert [g.names[i] for i in path] == ["A", "C", "D"]
+    assert rt == pytest.approx(4.0)
+
+
+def test_engine_response_matches_critical_path_deterministic():
+    """Deterministic single request: engine response == Alg 2 prediction
+    (execution delays + per-hop dispatch latency)."""
+    n, mi, mips, dt = 4, 800.0, 1600.0, 0.05
+    g = linear_chain(n, mi=mi)
+    g.len_std[:] = 0.0   # deterministic lengths
+    caps = SimCaps(n_clients=1, max_requests=8, max_cloudlets=64,
+                   max_instances=8, n_vms=2, d_max=1, max_replicas=1)
+    params = SimParams(dt=dt, n_ticks=400, n_clients=1, spawn_rate=100.0,
+                       wait_lo=100.0, wait_hi=101.0, num_limit=1)
+    sim = Simulation(g, caps=caps, params=params,
+                     default_template=InstanceTemplate(mips=mips,
+                                                       limit_mips=mips))
+    res = sim.run()
+    resp = np.asarray(res.state.requests.response)
+    resp = resp[resp >= 0]
+    assert len(resp) == 1
+    exec_time = n * mi / mips              # 4 × 0.5 s
+    # children dispatch at the next tick boundary after the parent finishes:
+    # per-hop latency in [0, dt]; root dispatches in its spawn tick.
+    lo = exec_time
+    hi = exec_time + n * dt + 1e-3
+    assert lo - 1e-3 <= resp[0] <= hi, (resp[0], lo, hi)
+    # Alg 2 on measured node delays reproduces the engine response
+    from repro.core import node_delays
+    rt, path = critical_path(g, node_delays(res), 0)
+    assert len(path) == n
+    assert rt == pytest.approx(float(resp[0]), rel=0.02)
+    # critical_len recorded on the request equals the chain depth
+    assert int(res.state.requests.critical_len[0]) == n

@@ -1,0 +1,129 @@
+"""End-to-end engine invariants (conservation laws + hypothesis sweeps).
+
+These are the system-level properties the tensor-DES must satisfy for any
+configuration: cloudlet conservation, request accounting, capacity limits,
+and monotonicity of the usage history.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
+                        diamond, linear_chain, star, summarize)
+from repro.core.types import CL_EXEC, CL_WAITING
+
+
+def _run(graph, caps, params, tmpl=None):
+    sim = Simulation(graph, caps=caps, params=params, default_template=tmpl)
+    return sim, sim.run()
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+    n_clients=st.integers(min_value=1, max_value=24),
+    mi=st.floats(min_value=50.0, max_value=2000.0),
+    topology=st.sampled_from(["chain", "diamond", "star"]),
+)
+@settings(max_examples=12, deadline=None)
+def test_conservation_laws(seed, n_clients, mi, topology):
+    g = {"chain": lambda: linear_chain(3, mi=mi),
+         "diamond": lambda: diamond(mi=mi),
+         "star": lambda: star(4, mi=mi)}[topology]()
+    caps = SimCaps(n_clients=32, max_requests=4096, max_cloudlets=2048,
+                   max_instances=16, n_vms=4, d_max=max(g.d_max, 1),
+                   max_replicas=2)
+    params = SimParams(dt=0.05, n_ticks=600, n_clients=n_clients,
+                       spawn_rate=4.0, wait_lo=0.5, wait_hi=2.0, seed=seed)
+    sim, res = _run(g, caps, params,
+                    InstanceTemplate(mips=8000.0, limit_mips=8000.0))
+    st_ = res.state
+    cls = np.asarray(st_.cloudlets.status)
+    in_flight = int((cls != 0).sum())
+    spawned = int(st_.counters.spawned)
+    finished = int(st_.counters.finished)
+    # Conservation: every spawned cloudlet is finished or still in flight.
+    assert spawned == finished + in_flight
+    # Request accounting: outstanding == in-flight cloudlets per request.
+    out = np.asarray(st_.requests.outstanding)
+    n = int(st_.requests.count)
+    assert (out[:n] >= 0).all()
+    assert out[:n].sum() == in_flight
+    # Completed requests have response ≥ 0 and finish ≥ arrival.
+    resp = np.asarray(st_.requests.response)[:n]
+    arr = np.asarray(st_.requests.arrival)[:n]
+    fin = np.asarray(st_.requests.finish)[:n]
+    done = resp >= 0
+    assert (fin[done] >= arr[done] - 1e-5).all()
+    assert np.allclose(resp[done], fin[done] - arr[done], atol=1e-4)
+    # Counter bookkeeping matches the pool.
+    assert int(st_.counters.completed) == int(done.sum())
+
+
+def test_capacity_is_never_oversubscribed():
+    """Instance usage ≤ allocation; VM allocations ≤ VM capacity."""
+    g = diamond(mi=300.0)
+    caps = SimCaps(n_clients=64, max_requests=8192, max_cloudlets=4096,
+                   max_instances=32, n_vms=4, d_max=2, max_replicas=4)
+    params = SimParams(dt=0.05, n_ticks=800, n_clients=50, spawn_rate=10.0,
+                       wait_lo=0.5, wait_hi=1.5, scaling_policy=1,
+                       scale_interval=40)
+    sim, res = _run(g, caps, params,
+                    InstanceTemplate(mips=1000.0, limit_mips=4000.0))
+    inst = res.state.instances
+    used = np.asarray(inst.used_mips)
+    alloc = np.asarray(inst.mips)
+    assert (used <= alloc * (1 + 1e-4) + 1e-3).all()
+    vms = res.state.vms
+    assert (np.asarray(vms.mips_used) <= np.asarray(vms.mips) + 1e-3).all()
+    assert (np.asarray(vms.ram_used) <= np.asarray(vms.ram) + 1e-3).all()
+    assert (np.asarray(vms.mips_used) >= -1e-3).all()
+
+
+def test_overload_sheds_into_waiting_queue_not_crash():
+    """Saturated system: waiting queue grows, nothing is lost."""
+    g = linear_chain(2, mi=5000.0)
+    caps = SimCaps(n_clients=32, max_requests=2048, max_cloudlets=512,
+                   max_instances=8, n_vms=2, d_max=1, max_replicas=1)
+    params = SimParams(dt=0.05, n_ticks=400, n_clients=32, spawn_rate=50.0,
+                       wait_lo=0.1, wait_hi=0.2)
+    sim, res = _run(g, caps, params,
+                    InstanceTemplate(mips=500.0, limit_mips=500.0))
+    st_ = res.state
+    spawned = int(st_.counters.spawned)
+    finished = int(st_.counters.finished)
+    in_flight = int((np.asarray(st_.cloudlets.status) != 0).sum())
+    assert spawned == finished + in_flight
+    assert in_flight > 0          # genuinely backlogged
+    rep = summarize(sim, res)
+    assert rep.cloudlets_dropped >= 0  # drops are counted, not crashes
+
+
+def test_space_shared_cap_limits_concurrency():
+    g = linear_chain(1, mi=2000.0)
+    caps = SimCaps(n_clients=16, max_requests=1024, max_cloudlets=256,
+                   max_instances=4, n_vms=2, d_max=1, max_replicas=1)
+    params = SimParams(dt=0.05, n_ticks=300, n_clients=16, spawn_rate=100.0,
+                       wait_lo=0.1, wait_hi=0.2, max_concurrent=2)
+    sim = Simulation(g, caps=caps, params=params,
+                     default_template=InstanceTemplate(mips=1000.0,
+                                                       limit_mips=1000.0))
+    res = sim.run()
+    # n_exec per instance never exceeds the cap
+    assert int(np.asarray(res.state.instances.n_exec).max()) <= 2
+    tr = res.trace_np()
+    assert tr["n_exec"].max() <= 2 * 1  # one instance
+    assert tr["n_waiting"].max() > 0    # the rest queue up
+
+
+def test_deterministic_given_seed():
+    g = diamond(mi=400.0)
+    caps = SimCaps(n_clients=16, max_requests=512, max_cloudlets=512,
+                   max_instances=8, n_vms=2, d_max=2, max_replicas=2)
+    params = SimParams(dt=0.05, n_ticks=300, n_clients=10, spawn_rate=5.0,
+                       wait_lo=0.5, wait_hi=1.5, seed=123)
+    _, r1 = _run(g, caps, params)
+    _, r2 = _run(g, caps, params)
+    np.testing.assert_array_equal(np.asarray(r1.state.requests.response),
+                                  np.asarray(r2.state.requests.response))
+    assert int(r1.state.counters.spawned) == int(r2.state.counters.spawned)

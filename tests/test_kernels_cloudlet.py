@@ -1,0 +1,53 @@
+"""Fused cloudlet-tick kernel vs oracle, including hypothesis sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cloudlet_step import cloudlet_step, cloudlet_step_ref
+from repro.kernels.cloudlet_step.kernel import cloudlet_step_pallas
+
+
+def _mk(rng, C, I):
+    status = rng.choice([0, 1, 2], size=C, p=[0.3, 0.2, 0.5]).astype(np.int32)
+    rem = rng.uniform(0.1, 500.0, size=C).astype(np.float32)
+    inst = rng.integers(0, I, size=C).astype(np.int32)
+    inst[rng.random(C) < 0.05] = -1
+    rate = rng.uniform(0.0, 300.0, size=C).astype(np.float32)
+    return (jnp.asarray(status), jnp.asarray(rem), jnp.asarray(inst),
+            jnp.asarray(rate))
+
+
+@pytest.mark.parametrize("C,I,bc", [(256, 8, 64), (1024, 33, 256),
+                                    (4096, 100, 4096)])
+def test_kernel_matches_ref(C, I, bc, rng):
+    status, rem, inst, rate = _mk(rng, C, I)
+    time, dt = 12.5, 0.25
+    got = cloudlet_step_pallas(status, rem, inst, rate, time, dt,
+                               n_inst=I, bc=bc, interpret=True)
+    want = cloudlet_step_ref(status, rem, inst, rate, time, dt, I)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), dt=st.floats(0.01, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_ops_dispatch_property(seed, dt):
+    rng = np.random.default_rng(seed)
+    status, rem, inst, rate = _mk(rng, 512, 16)
+    got = cloudlet_step(status, rem, inst, rate, 3.0, dt, 16,
+                        use_pallas=True, interpret=True)
+    want = cloudlet_step_ref(status, rem, inst, rate, 3.0, dt, 16)
+    new_rem, fin, tfin, consumed, used = (np.asarray(x) for x in got)
+    wrem, wfin, wtfin, wcons, wused = (np.asarray(x) for x in want)
+    np.testing.assert_allclose(new_rem, wrem, rtol=2e-5, atol=1e-4)
+    np.testing.assert_array_equal(fin, wfin)
+    np.testing.assert_allclose(used, wused, rtol=1e-5, atol=1e-5)
+    # physical invariants
+    assert (new_rem >= 0).all()
+    exec_mask = np.asarray(status) == 2
+    assert (consumed[exec_mask] <= np.asarray(rate)[exec_mask] * dt + 1e-5).all()
+    assert not fin[~exec_mask].any()
+    assert (tfin[fin] >= 3.0).all() and (tfin[fin] <= 3.0 + dt + 1e-6).all()

@@ -1,0 +1,86 @@
+"""Flash-attention kernel vs pure-jnp oracle — shape/dtype sweep in
+interpret mode, plus gradient wiring (custom_vjp) checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention, attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _mk(rng, B, Hq, Hkv, Tq, Tk, D, dtype):
+    q = rng.normal(size=(B, Hq, Tq, D)).astype(dtype)
+    k = rng.normal(size=(B, Hkv, Tk, D)).astype(dtype)
+    v = rng.normal(size=(B, Hkv, Tk, D)).astype(dtype)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Tq,Tk,D,bq,bk", [
+    (1, 2, 2, 128, 128, 64, 64, 64),       # MHA square
+    (1, 4, 2, 128, 128, 64, 64, 64),       # GQA group=2
+    (2, 8, 1, 128, 256, 32, 64, 128),      # MQA, Tq<Tk (chunked prefill)
+    (1, 4, 4, 256, 128, 32, 128, 64),      # Tq>Tk (some rows fully masked)
+])
+def test_kernel_vs_ref_f32(B, Hq, Hkv, Tq, Tk, D, bq, bk, rng):
+    q, k, v = _mk(rng, B, Hq, Hkv, Tq, Tk, D, np.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, bq=bq, bk=bk,
+                                 interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    # rows with no visible keys are ref-nan / kernel-zero; compare the rest
+    off = Tk - Tq
+    visible = (np.arange(Tq) + off) >= 0
+    np.testing.assert_allclose(np.asarray(got)[:, :, visible],
+                               np.asarray(want)[:, :, visible],
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(np.float32, 2e-5),
+                                        (jnp.bfloat16, 2e-2)])
+def test_kernel_dtypes(dtype, rtol, rng):
+    q, k, v = _mk(rng, 1, 4, 2, 128, 128, 64, np.float32)
+    q, k, v = (x.astype(dtype) for x in (q, k, v))
+    got = flash_attention_pallas(q, k, v, causal=True, bq=64, bk=64,
+                                 interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("Tq,Tk", [(100, 100), (77, 200), (130, 130)])
+def test_ops_padding_ragged(Tq, Tk, rng):
+    q, k, v = _mk(rng, 1, 2, 2, Tq, Tk, 32, np.float32)
+    got = attention(q, k, v, impl="flash", interpret=True, bq=64, bk=64)
+    want = attention_ref(q, k, v, causal=True)
+    off = Tk - Tq
+    visible = (np.arange(Tq) + off) >= 0
+    np.testing.assert_allclose(np.asarray(got)[:, :, visible],
+                               np.asarray(want)[:, :, visible],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_noncausal_matches_ref(rng):
+    q, k, v = _mk(rng, 1, 2, 2, 64, 128, 32, np.float32)
+    got = flash_attention_pallas(q, k, v, causal=False, bq=64, bk=64,
+                                 interpret=True)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_gradients_match_ref(rng):
+    q, k, v = _mk(rng, 1, 2, 1, 64, 64, 32, np.float32)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(attention(q, k, v, impl="flash", interpret=True,
+                                 bq=64, bk=64) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v) ** 2)
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,94 @@
+"""SSD kernel chain: sequential oracle == chunked ref == Pallas kernel
+(interpret), across shapes/dtypes; decode step consistency with the scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd, ssd_chunked_ref, ssd_decode_step, ssd_ref
+
+
+def _mk(rng, B, T, H, P, G, N, dtype=np.float32):
+    x = rng.normal(size=(B, T, H, P)).astype(dtype)
+    dt = rng.uniform(0.05, 0.3, size=(B, T, H)).astype(dtype)
+    A = -rng.uniform(0.5, 2.0, size=(H,)).astype(dtype)
+    Bm = rng.normal(size=(B, T, G, N)).astype(dtype) / np.sqrt(N)
+    Cm = rng.normal(size=(B, T, G, N)).astype(dtype) / np.sqrt(N)
+    D = rng.normal(size=(H,)).astype(dtype)
+    return tuple(jnp.asarray(a) for a in (x, dt, A, Bm, Cm, D))
+
+
+@pytest.mark.parametrize("B,T,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 16, 16),
+    (2, 128, 4, 32, 2, 32, 32),
+    (1, 96, 3, 8, 3, 64, 32),      # H == G (no grouping)
+])
+def test_chunked_ref_matches_sequential(B, T, H, P, G, N, chunk, rng):
+    x, dt, A, Bm, Cm, D = _mk(rng, B, T, H, P, G, N)
+    want = ssd_ref(x, dt, A, Bm, Cm, D)
+    got = ssd_chunked_ref(x, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,T,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 16, 32),
+    (2, 128, 4, 32, 2, 32, 64),
+])
+def test_kernel_matches_sequential(B, T, H, P, G, N, chunk, rng):
+    x, dt, A, Bm, Cm, D = _mk(rng, B, T, H, P, G, N)
+    want = ssd_ref(x, dt, A, Bm, Cm, D)
+    got = ssd(x, dt, A, Bm, Cm, D, chunk=chunk, impl="kernel",
+              interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_ragged_T_pads(rng):
+    x, dt, A, Bm, Cm, D = _mk(rng, 1, 50, 2, 8, 1, 16)
+    want = ssd_ref(x, dt, A, Bm, Cm, D)
+    got = ssd(x, dt, A, Bm, Cm, D, chunk=32, impl="kernel", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bf16_inputs(rng):
+    x, dt, A, Bm, Cm, D = _mk(rng, 1, 64, 2, 16, 1, 16)
+    xb = x.astype(jnp.bfloat16)
+    got = ssd(xb, dt, A, Bm, Cm, D, chunk=32, impl="kernel", interpret=True)
+    want = ssd_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_decode_step_matches_scan_suffix(rng):
+    """Running T decode steps must equal the parallel scan output."""
+    B, T, H, P, G, N = 1, 16, 2, 8, 1, 8
+    x, dt, A, Bm, Cm, D = _mk(rng, B, T, H, P, G, N)
+    want = ssd_ref(x, dt, A, Bm, Cm, D)
+    h = jnp.zeros((B, H, N, P), jnp.float32)
+    outs = []
+    for t in range(T):
+        h, y = ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D)
+        outs.append(y)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gradients_flow_through_kernel(rng):
+    x, dt, A, Bm, Cm, D = _mk(rng, 1, 64, 2, 8, 1, 8)
+
+    def loss(x, Bm, Cm):
+        return jnp.sum(ssd(x, dt, A, Bm, Cm, D, chunk=32, impl="kernel",
+                           interpret=True) ** 2)
+
+    def loss_ref(x, Bm, Cm):
+        return jnp.sum(ssd_ref(x, dt, A, Bm, Cm, D) ** 2)
+
+    gk = jax.grad(loss, argnums=(0, 1, 2))(x, Bm, Cm)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, Bm, Cm)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)

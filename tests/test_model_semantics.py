@@ -1,0 +1,121 @@
+"""Deep model-semantics tests.
+
+1. MoE sort-based dispatch == brute-force dense mixture oracle (when
+   capacity is not binding), and degrades gracefully (drops) when it is.
+2. Step-by-step decode == teacher-forced forward logits — the strongest
+   end-to-end consistency check of the KV-cache / SSM-state machinery.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.common import initialize
+from repro.models.moe import MoECfg, moe_apply, moe_schema
+
+
+# ---------------------------------------------------------------------------
+# 1. MoE dispatch vs oracle
+# ---------------------------------------------------------------------------
+
+def _moe_oracle(p, x, cfg: MoECfg):
+    """Dense mixture: run EVERY expert on every token, combine top-k."""
+    B, T, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # all-experts forward [E, n, d]
+    h = jax.nn.silu(jnp.einsum("nd,edf->enf", xf, p["gate"])) \
+        * jnp.einsum("nd,edf->enf", xf, p["up"])
+    ye = jnp.einsum("enf,efd->end", h, p["down"])      # [E, n, d]
+    out = jnp.zeros_like(xf, dtype=jnp.float32)
+    for k in range(cfg.top_k):
+        sel = jnp.take_along_axis(
+            ye, top_e[None, :, k, None], axis=0)[0]     # [n, d]
+        out = out + top_p[:, k, None] * sel.astype(jnp.float32)
+    return out.reshape(B, T, d).astype(x.dtype)
+
+
+@pytest.mark.parametrize("E,K,norm", [(8, 2, True), (16, 4, False)])
+def test_moe_matches_dense_oracle(E, K, norm, rng):
+    d, f = 32, 64
+    cfg = MoECfg(n_experts=E, top_k=K, d_expert=f, capacity_factor=8.0,
+                 norm_topk=norm)   # capacity never binds
+    params = initialize(moe_schema(d, cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 24, d)), jnp.float32)
+    got = moe_apply(params, x, cfg)
+    want = _moe_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_are_graceful(rng):
+    d, f = 16, 32
+    tight = MoECfg(n_experts=4, top_k=2, d_expert=f, capacity_factor=0.25)
+    params = initialize(moe_schema(d, tight), jax.random.PRNGKey(1))
+    x = jnp.asarray(rng.normal(size=(1, 64, d)), jnp.float32)
+    out = moe_apply(params, x, tight)
+    assert np.isfinite(np.asarray(out)).all()
+    # dropped tokens contribute zero, so the output norm shrinks vs
+    # an uncapped run — but never explodes
+    loose = dc.replace(tight, capacity_factor=8.0)
+    out_loose = moe_apply(params, x, loose)
+    assert float(jnp.abs(out).mean()) <= float(jnp.abs(out_loose).mean()) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# 2. decode == teacher-forced forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-130m",
+                                  "qwen3-moe-30b-a3b",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_forward(arch):
+    rng = np.random.default_rng(7)   # local: independent of test order
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        # capacity drops depend on how many tokens route together, so the
+        # teacher-forced forward (T tokens/batch) and decode (1 token)
+        # only agree when capacity never binds — that's the semantics
+        # under test here, not the (documented) drop behaviour.
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, T = 1, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+
+    # teacher-forced forward logits (no remat, full precision path)
+    h = model.hidden_states(params, tokens=tokens, remat=False)
+    fwd_logits = model.logits(params, h) if hasattr(model, "logits") else None
+    if fwd_logits is None:
+        from repro.models.common import unembed
+        fwd_logits = unembed(h, params["head"])
+
+    # step-by-step decode with state threading
+    state = model.init_decode_state(B, T + 2)
+    dec = []
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        lg, state = step(params, tokens[:, t:t + 1], state)
+        dec.append(np.asarray(lg[:, 0]))
+    dec = np.stack(dec, axis=1)            # [B, T, V]
+
+    a = np.asarray(jax.nn.softmax(jnp.asarray(dec), -1))
+    b = np.asarray(jax.nn.softmax(fwd_logits, -1))
+    diff = np.abs(a - b).max()
+    # SSM/hybrid: the chunked-scan forward and the sequential decode
+    # accumulate differently in bf16 → allow a slightly wider band and
+    # near-total (not bitwise) argmax agreement.
+    ssm = cfg.family in ("ssm", "hybrid")
+    assert diff < (5e-2 if ssm else 2e-2), (arch, diff)
+    agree = (a.argmax(-1) == b.argmax(-1)).mean()
+    # untrained smoke models have near-flat softmax → argmax is a
+    # tie-break; require strong but not bitwise agreement for ssm/hybrid
+    assert agree >= (0.8 if ssm else 1.0), (arch, agree)

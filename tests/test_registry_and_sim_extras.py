@@ -1,0 +1,107 @@
+"""File registry (paper Fig 3), SockShop config, scaling/migration
+behaviours, and kernel-path equivalence of the engine tick."""
+import json
+
+import numpy as np
+import pytest
+import yaml
+
+from repro.configs import sockshop
+from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
+                        diamond, policies, register, summarize)
+from repro.core.types import INST_ON
+
+
+def test_registry_json_yaml_roundtrip(tmp_path):
+    app = tmp_path / "app.json"
+    inst = tmp_path / "instances.yaml"
+    app.write_text(json.dumps(sockshop.app_spec()))
+    inst.write_text(yaml.safe_dump(sockshop.instance_spec(share=800.0)))
+    caps = SimCaps(n_clients=16, max_requests=1024, max_cloudlets=2048,
+                   max_instances=32, n_vms=4, d_max=5, max_replicas=2)
+    params = SimParams(dt=0.1, n_ticks=300, n_clients=10, spawn_rate=2.0,
+                       wait_lo=2.0, wait_hi=6.0)
+    sim = register(str(app), str(inst), caps=caps, params=params)
+    assert sim.graph.n_services == 13
+    assert sim.graph.n_apis == 5
+    # YAML requests.share becomes the instance MIPS
+    assert float(np.asarray(sim.app.tmpl_mips)[0]) == 800.0
+    rep = summarize(sim, sim.run())
+    assert rep.completed_requests > 0
+
+
+def test_sockshop_graph_structure():
+    sim = sockshop.make_sim(n_clients=10, duration_s=30.0)
+    g = sim.graph
+    # paper Fig 8: POST /orders triggers the deep shipping chain
+    orders = g.service_id("orders")
+    chains = g.chains_from(orders)
+    leaves = {c[-1] for c in chains}
+    assert g.service_id("queue-master") in leaves
+    assert g.depth >= 3
+
+
+def test_hs_scales_out_under_load():
+    sim = sockshop.make_sim(n_clients=300, duration_s=120.0,
+                            scaling_policy=policies.SCALE_HORIZONTAL,
+                            share=400.0, hs_util_hi=0.5, hs_util_lo=0.05,
+                            util_ema=0.2)
+    res = sim.run()
+    assert int(res.state.counters.scale_out) > 0
+    on = np.asarray(res.state.instances.status) == INST_ON
+    assert on.sum() > 13          # replicas were added
+
+
+def test_vs_raises_mips_under_load():
+    sim = sockshop.make_sim(n_clients=300, duration_s=120.0,
+                            scaling_policy=policies.SCALE_VERTICAL,
+                            share=400.0, vs_util_hi=0.5, vs_util_lo=0.05,
+                            util_ema=0.2)
+    res = sim.run()
+    assert int(res.state.counters.scale_up) > 0
+    inst = res.state.instances
+    on = np.asarray(inst.status) == INST_ON
+    assert (np.asarray(inst.mips)[on] > np.asarray(
+        inst.request_mips)[on] + 1).any()
+
+
+def test_migration_moves_instance():
+    g = diamond(mi=500.0)
+    caps = SimCaps(n_clients=8, max_requests=512, max_cloudlets=512,
+                   max_instances=8, n_vms=3, d_max=2, max_replicas=2)
+    params = SimParams(dt=0.05, n_ticks=400, n_clients=8, spawn_rate=8.0,
+                       wait_lo=0.5, wait_hi=1.0, migration_enabled=True,
+                       mig_vm_util_hi=0.5, scale_interval=20)
+    # most-available placement stacks all four instances on VM0 (its free
+    # capacity stays the largest throughout) → 90 % allocation pressure;
+    # VM1 is the only target that ends up cooler than the source
+    # (anti-ping-pong hysteresis in placement.migrate)
+    sim = Simulation(g, caps=caps, params=params,
+                     default_template=InstanceTemplate(mips=900.0,
+                                                       limit_mips=900.0),
+                     vm_mips=np.array([4000.0, 1250.0, 1200.0], np.float32),
+                     vm_ram=np.array([4096.0, 4096.0, 4096.0], np.float32))
+    res = sim.run()
+    assert int(res.state.counters.migrations) > 0
+    vms = np.asarray(res.state.instances.vm)
+    on = np.asarray(res.state.instances.status) == INST_ON
+    assert len(set(vms[on].tolist())) > 1
+
+
+def test_engine_kernel_path_matches_ref_path():
+    g = diamond(mi=400.0)
+    caps = SimCaps(n_clients=8, max_requests=512, max_cloudlets=512,
+                   max_instances=8, n_vms=2, d_max=2, max_replicas=2)
+    base = dict(dt=0.05, n_ticks=300, n_clients=6, spawn_rate=4.0,
+                wait_lo=0.5, wait_hi=1.5, seed=11)
+    tmpl = InstanceTemplate(mips=4000.0, limit_mips=8000.0)
+    r_ref = Simulation(g, caps=caps, params=SimParams(**base),
+                       default_template=tmpl).run()
+    r_krn = Simulation(g, caps=caps,
+                       params=SimParams(use_pallas_tick=True, **base),
+                       default_template=tmpl).run()
+    np.testing.assert_allclose(
+        np.asarray(r_ref.state.requests.response),
+        np.asarray(r_krn.state.requests.response), rtol=1e-5, atol=1e-5)
+    assert int(r_ref.state.counters.finished) == \
+        int(r_krn.state.counters.finished)

@@ -1,0 +1,210 @@
+"""Substrate tests: optimizer, checkpoint/restart, elastic reshard,
+gradient compression, deterministic data pipeline, sharding resolver."""
+import dataclasses
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.ckpt.checkpoint import CheckpointManager, load_checkpoint, \
+    save_checkpoint
+from repro.data.synthetic import SyntheticLM
+from repro.dist import sharding as shd
+from repro.dist.compression import compress_decompress, ef_compress, ef_init
+from repro.launch.train import PRESETS
+from repro.models import build_model
+from repro.train.optimizer import (AdamWCfg, adamw_init, adamw_update,
+                                   clip_by_global_norm, lr_schedule)
+from repro.train.train_step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    cfg = AdamWCfg(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                   total_steps=1000, clip_norm=100.0)
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_weight_decay_shrinks_without_gradient():
+    params = {"w": jnp.ones(4) * 2.0}
+    cfg = AdamWCfg(lr=0.1, weight_decay=0.5, warmup_steps=1, total_steps=100)
+    state = adamw_init(params)
+    p1, _, _ = adamw_update(params, {"w": jnp.zeros(4)}, state, cfg)
+    assert float(p1["w"][0]) < 2.0
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWCfg(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(lr_schedule(jnp.asarray(s), cfg)) for s in range(101)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6          # warmup rises
+    assert abs(lrs[10] - 1.0) < 0.01              # peak after warmup
+    assert lrs[100] == pytest.approx(0.1, rel=0.05)  # decays to floor
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones(100) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(100.0)
+    total = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restart / elastic
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    cfg = PRESETS["tiny"]
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_checkpoint_roundtrip_bf16():
+    cfg, model, params = _tiny_state()
+    opt = adamw_init(params)
+    with tempfile.TemporaryDirectory() as d:
+        path = pathlib.Path(d) / "ck.npz"
+        save_checkpoint(path, {"p": params, "o": opt}, step=7)
+        back = load_checkpoint(path, {"p": params, "o": opt})
+    for a, b in zip(jax.tree_util.tree_leaves(back["p"]),
+                    jax.tree_util.tree_leaves(params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_manager_keeps_last_k_and_restores_latest():
+    cfg, model, params = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for step in (10, 20, 30):
+            scaled = jax.tree_util.tree_map(
+                lambda x: x * (step / 10.0), params)
+            mgr.save({"p": scaled}, step, blocking=True)
+        files = sorted(pathlib.Path(d).glob("step_*.npz"))
+        assert len(files) == 2                      # pruned to keep=2
+        restored, step = mgr.restore_latest({"p": params})
+        assert step == 30
+        a = jax.tree_util.tree_leaves(restored["p"])[0]
+        b = jax.tree_util.tree_leaves(params)[0]
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32) * 3.0,
+                                   rtol=2e-2)
+
+
+def test_crash_resume_is_bit_exact():
+    """Train 6 steps straight vs 3 + checkpoint + restore + 3."""
+    cfg = PRESETS["tiny"]
+    model = build_model(cfg)
+    opt_cfg = AdamWCfg(lr=1e-3, warmup_steps=2, total_steps=10)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=2)
+
+    def run(params, opt, start, end):
+        for s in range(start, end):
+            params, opt, _ = step_fn(params, opt, data.batch(s))
+        return params, opt
+
+    p0 = model.init_params(jax.random.PRNGKey(0))
+    o0 = adamw_init(p0)
+    pa, oa = run(p0, o0, 0, 6)
+
+    pb, ob = run(p0, o0, 0, 3)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save({"p": pb, "o": ob}, 2, blocking=True)
+        restored, step = mgr.restore_latest({"p": pb, "o": ob})
+    pc, oc = run(restored["p"], restored["o"], step + 1, 6)
+
+    for a, b in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pc)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_int8_compression_error_bounded(rng):
+    x = jnp.asarray(rng.normal(size=(1024,)).astype(np.float32))
+    y = compress_decompress(x)
+    err = np.abs(np.asarray(x - y))
+    scale = np.abs(np.asarray(x)).max() / 127
+    assert err.max() <= scale * 1.01
+
+
+def test_error_feedback_reduces_bias(rng):
+    g = jnp.asarray(rng.normal(size=(2048,)).astype(np.float32)) * 1e-3
+    grads = {"w": g}
+    ef = ef_init(grads)
+    total_plain = np.zeros(2048, np.float32)
+    total_ef = np.zeros(2048, np.float32)
+    for _ in range(50):
+        total_plain += np.asarray(compress_decompress(g))
+        c, ef = ef_compress(grads, ef)
+        total_ef += np.asarray(c["w"])
+    true = np.asarray(g) * 50
+    assert np.abs(total_ef - true).mean() <= \
+        np.abs(total_plain - true).mean() + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_step_indexed():
+    ds = SyntheticLM(vocab=1000, seq_len=64, global_batch=4, seed=3)
+    b1 = ds.batch(17)
+    b2 = ds.batch(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = ds.batch(18)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert (np.asarray(b1["labels"])[:, -1] == -1).all()
+    # labels are next tokens
+    np.testing.assert_array_equal(np.asarray(b1["labels"])[:, :-1],
+                                  np.asarray(b1["tokens"])[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# sharding resolver
+# ---------------------------------------------------------------------------
+
+def test_resolver_divisibility_and_uniqueness():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # fake a 16x16 mesh by resolving against axis sizes via a real mesh is
+    # overkill on 1 device; instead exercise the guards with 1-sized axes:
+    # every rule fails divisibility unless dim % 1 == 0 (always true), so
+    # uniqueness is the interesting part here.
+    spec = shd.resolve(mesh, (64, 64), ("heads", "mlp"), shd.PARAM_RULES)
+    # both want "model"; only the first gets it
+    assert spec == PartitionSpec("model", None) or \
+        spec == PartitionSpec(*spec)  # structural sanity
+    assert spec[0] == "model" and spec[1] is None
+
+    # non-divisible dims replicate (simulate with a 2-ary axis)
+    mesh2 = jax.make_mesh((1,), ("model",))
+    spec2 = shd.resolve(mesh2, (7,), ("vocab",), shd.PARAM_RULES)
+    assert spec2[0] == "model"  # 7 % 1 == 0 → allowed on size-1 axis
+
+
+def test_resolver_batch_multi_axis():
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    spec = shd.resolve(mesh, (256, 4096), ("batch", "seq"), shd.ACT_RULES)
+    assert spec[0] == ("pod", "data")
+    assert spec[1] is None
