@@ -38,9 +38,10 @@ def flat_services(n: int, mi: float) -> "ServiceGraph":
                        {nm: mi for nm in names}, d_max=1)
 
 
-def run_case(tag, n_requests, n_services, replicas, cloudlets_per_req,
-             paper_s, fanout=1):
-    """Build a capacity scenario sized to the Table 2 object counts."""
+def build_case(n_requests, n_services, replicas, fanout=1,
+               use_pallas_interpret=False):
+    """Build a capacity Simulation sized to the Table 2 object counts;
+    returns (sim, meta) where meta records the sizing decisions."""
     mi = 50.0
     if fanout > 1:
         graph = flat_services(n_services, mi)
@@ -82,6 +83,8 @@ def run_case(tag, n_requests, n_services, replicas, cloudlets_per_req,
         dt=dt, n_ticks=n_ticks, n_clients=nc,
         spawn_rate=nc / 5.0, wait_lo=2.0, wait_hi=6.0,
         num_limit=n_requests, seed=0,
+        use_pallas_tick=use_pallas_interpret,
+        pallas_interpret=use_pallas_interpret,
     )
     # Instance speed: each tick's per-instance batch drains in ~0.4 ticks,
     # keeping residence ≈ 2 ticks and utilization < 1 (no blow-up).
@@ -95,8 +98,56 @@ def run_case(tag, n_requests, n_services, replicas, cloudlets_per_req,
     sim = Simulation(graph, caps=caps, params=params, default_template=tmpl,
                      vm_mips=vm_mips, vm_ram=vm_ram,
                      api_entries=api_entries)
+    meta = dict(n_requests=n_requests, n_services=n_services,
+                replicas=replicas, n_instances=n_inst, n_ticks=n_ticks,
+                pool=pool, k_fire=k_fire)
+    return sim, meta
+
+
+# Table 2 case registry: tag → (n_requests, n_services, replicas,
+# cloudlets_per_request, fanout)
+CASES = {
+    "case1a": (10 ** 5, 1, 1000, 1, 1),
+    "case1b": (10 ** 6, 1, 1000, 1, 1),
+    "case2a": (10 ** 3, 5 * 10 ** 3, 1, 5 * 10 ** 3, 5 * 10 ** 3),
+    "case2b": (10 ** 3, 5 * 10 ** 4, 1, 5 * 10 ** 4, 5 * 10 ** 4),
+    "case3a": (10 ** 4, 10 ** 2, 3, 10 ** 2, 10 ** 2),
+    "case3b": (10 ** 4, 10 ** 3, 3, 10 ** 3, 10 ** 3),
+    "case4a": (10 ** 3, 5 * 10 ** 3, 3, 5 * 10 ** 3, 5 * 10 ** 3),
+    "case4b": (10 ** 4, 5 * 10 ** 3, 3, 5 * 10 ** 3, 5 * 10 ** 3),
+}
+
+
+def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0) -> dict:
+    """One BENCH_perf.json record: wall seconds + ticks/sec for a Table 2
+    case.  ``scale`` shrinks the request count (pallas-interpret runs are
+    orders of magnitude slower than compiled backends)."""
+    n_requests, n_services, replicas, cpr, fanout = CASES[tag]
+    n_requests = max(int(n_requests * scale), 100)
+    sim, meta = build_case(n_requests, n_services, replicas, fanout,
+                           use_pallas_interpret=(backend
+                                                 == "pallas-interpret"))
+    res = sim.run()
+    return dict(
+        case=tag, backend=backend, scale=scale,
+        requests=int(res.state.requests.count),
+        cloudlets=int(res.state.counters.spawned),
+        n_services=n_services, n_instances=meta["n_instances"],
+        n_ticks=meta["n_ticks"],
+        wall_s=round(res.wall_time_s, 4),
+        compile_s=round(res.compile_time_s, 4),
+        ticks_per_s=round(meta["n_ticks"] / max(res.wall_time_s, 1e-9), 2),
+        paper_s=PAPER_S.get((tag[:-1], 0 if tag.endswith("a") else 1)),
+    )
+
+
+def run_case(tag, n_requests, n_services, replicas, cloudlets_per_req,
+             paper_s, fanout=1):
+    """Run one Table 2 case and emit the CSV rows."""
+    sim, meta = build_case(n_requests, n_services, replicas, fanout)
     res = sim.run()
     st = res.state
+    n_inst = meta["n_instances"]
     emit(f"table2/{tag}/requests", int(st.requests.count), n_requests)
     emit(f"table2/{tag}/cloudlets", int(st.counters.spawned),
          cloudlets_per_req * n_requests)
@@ -110,24 +161,12 @@ def run_case(tag, n_requests, n_services, replicas, cloudlets_per_req,
 
 def main():
     header("Table 2: capacity test (wall seconds, compile excluded)")
-    # case 1: requests-dominated (1 service × 10³ replicas)
-    run_case("case1a", 10 ** 5, 1, 1000, 1, PAPER_S[("case1", 0)])
-    run_case("case1b", 10 ** 6, 1, 1000, 1, PAPER_S[("case1", 1)])
-    # case 2: services-dominated (star fan-out, 1 replica per service)
-    run_case("case2a", 10 ** 3, 5 * 10 ** 3, 1, 5 * 10 ** 3,
-             PAPER_S[("case2", 0)], fanout=5 * 10 ** 3)
-    run_case("case2b", 10 ** 3, 5 * 10 ** 4, 1, 5 * 10 ** 4,
-             PAPER_S[("case2", 1)], fanout=5 * 10 ** 4)
-    # case 3: balanced 1:3 service:instance ratio
-    run_case("case3a", 10 ** 4, 10 ** 2, 3, 10 ** 2, PAPER_S[("case3", 0)],
-             fanout=10 ** 2)
-    run_case("case3b", 10 ** 4, 10 ** 3, 3, 10 ** 3, PAPER_S[("case3", 1)],
-             fanout=10 ** 3)
-    # case 4: high-instance scenarios
-    run_case("case4a", 10 ** 3, 5 * 10 ** 3, 3, 5 * 10 ** 3,
-             PAPER_S[("case4", 0)], fanout=5 * 10 ** 3)
-    run_case("case4b", 10 ** 4, 5 * 10 ** 3, 3, 5 * 10 ** 3,
-             PAPER_S[("case4", 1)], fanout=5 * 10 ** 3)
+    # cases 1: requests-dominated; 2: services-dominated star fan-out;
+    # 3: balanced 1:3 service:instance ratio; 4: high-instance scenarios
+    for tag, (n_requests, n_services, replicas, cpr, fanout) in CASES.items():
+        paper = PAPER_S[(tag[:-1], 0 if tag.endswith("a") else 1)]
+        run_case(tag, n_requests, n_services, replicas, cpr, paper,
+                 fanout=fanout)
 
 
 if __name__ == "__main__":

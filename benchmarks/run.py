@@ -3,21 +3,97 @@ the kernel micro-benchmarks.  Prints ``name,value,paper_reference,derived``
 CSV rows (see common.emit).
 
     PYTHONPATH=src python -m benchmarks.run [--skip capacity,...]
+
+``--perf-json`` additionally writes the machine-readable perf-trajectory
+file (BENCH_perf.json): wall seconds and ticks/sec for the requested
+Table 2 capacity cases on the jnp path plus a scaled-down
+pallas-interpret case, so the hot-path trend is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --only perf \
+        --perf-json BENCH_perf.json --perf-cases case1b,case2b
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+
+def write_perf_json(path: str, cases, repeats: int = 2) -> None:
+    """Best-of-N wall times per case (the capacity numbers are wall-clock
+    on a shared machine; best-of is the stable statistic).  The
+    ``seed_baseline_wall_s`` block of an existing file is carried over and
+    speedups recomputed, so regeneration preserves the cross-PR trend."""
+    import os
+
+    import jax
+
+    from . import bench_capacity
+
+    baselines = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                baselines = json.load(f).get("seed_baseline_wall_s", {})
+        except (OSError, ValueError):
+            pass
+
+    records = []
+    for tag in cases:
+        best = None
+        for _ in range(max(repeats, 1)):
+            rec = bench_capacity.perf_record(tag, backend="jnp")
+            if best is None or rec["wall_s"] < best["wall_s"]:
+                best = rec
+        records.append(best)
+        print(f"# perf {tag}: {best['wall_s']:.2f}s "
+              f"({best['ticks_per_s']:.0f} ticks/s, best of {repeats})")
+    # interpret-mode kernel trend on a scaled-down case (interpret is
+    # orders of magnitude slower — the trend matters, not the magnitude)
+    rec = bench_capacity.perf_record("case1a", backend="pallas-interpret",
+                                     scale=0.01)
+    records.append(rec)
+    print(f"# perf case1a/pallas-interpret(x0.01): {rec['wall_s']:.2f}s")
+    for rec in records:
+        base = baselines.get(rec["case"])
+        if base and rec["backend"] == "jnp" and rec.get("scale", 1.0) == 1.0:
+            rec["speedup_vs_seed"] = round(base / rec["wall_s"], 2)
+    # batched-sweep economics (see bench_scaling.sweep8_demo docstring)
+    from . import bench_scaling
+    ratio, seq_ratio = bench_scaling.sweep8_demo(duration_s=120.0)
+    records.append({
+        "case": "sweep8_hs", "backend": "jnp",
+        "batch_over_solo": round(ratio, 3),
+        "batch_over_sequential": round(seq_ratio, 3),
+        "cpu_count": os.cpu_count(),
+    })
+    doc = {
+        "generated_unix": int(time.time()),
+        "jax_backend": jax.default_backend(),
+        "records": records,
+    }
+    if baselines:
+        doc["seed_baseline_wall_s"] = baselines
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", default="",
                     help="comma list: capacity,generator,response,scaling,"
-                         "kernels")
+                         "kernels,perf")
     ap.add_argument("--only", default="")
+    ap.add_argument("--perf-json", default="",
+                    help="path for the machine-readable perf records "
+                         "(enables the perf section)")
+    ap.add_argument("--perf-cases", default="case1b,case2b",
+                    help="Table 2 cases to time for --perf-json")
+    ap.add_argument("--perf-repeats", type=int, default=2)
     args = ap.parse_args()
     skip = set(filter(None, args.skip.split(",")))
     only = set(filter(None, args.only.split(",")))
@@ -31,6 +107,11 @@ def main() -> None:
         ("scaling", bench_scaling.main),       # Fig 11
         ("kernels", bench_kernels.main),
     ]
+    if args.perf_json:
+        cases = [c for c in args.perf_cases.split(",") if c]
+        sections.append(
+            ("perf", lambda: write_perf_json(args.perf_json, cases,
+                                             args.perf_repeats)))
     failed = []
     for name, fn in sections:
         if name in skip or (only and name not in only):

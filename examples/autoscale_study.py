@@ -1,12 +1,17 @@
 """Scaling-policy study on SockShop: the paper's §6.4 experiment as a
 ready-to-edit example (NS vs HS vs VS vs the beyond-paper HYBRID).
 
-    PYTHONPATH=src python examples/autoscale_study.py --clients 500
+Each policy's client-load sweep runs as ONE ``Simulation.run_batch`` —
+a single compile + a single device dispatch per policy, however many
+load points you ask for.
+
+    PYTHONPATH=src python examples/autoscale_study.py --loads 300,500,1000
 """
 import argparse
+import dataclasses
 
 from repro.configs import sockshop
-from repro.core import policies, summarize
+from repro.core import batch_item, policies, summarize
 
 POLICIES = [("NS", policies.SCALE_NONE), ("HS", policies.SCALE_HORIZONTAL),
             ("VS", policies.SCALE_VERTICAL), ("HYBRID", policies.SCALE_HYBRID)]
@@ -14,26 +19,35 @@ POLICIES = [("NS", policies.SCALE_NONE), ("HS", policies.SCALE_HORIZONTAL),
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", type=int, default=500)
+    ap.add_argument("--loads", default="300,500,1000",
+                    help="comma list of client counts (one batched sweep "
+                         "per policy)")
     ap.add_argument("--duration", type=float, default=600.0)
     args = ap.parse_args()
+    loads = [int(x) for x in args.loads.split(",") if x]
 
-    print(f"{'policy':8s} {'avg_ms':>8s} {'p95_ms':>8s} {'SLO_viol':>9s} "
-          f"{'milicores':>10s} {'instances':>10s} {'events':>14s}")
+    print(f"{'policy':8s} {'clients':>8s} {'avg_ms':>8s} {'p95_ms':>8s} "
+          f"{'SLO_viol':>9s} {'milicores':>10s} {'instances':>10s} "
+          f"{'events':>14s}")
     for name, pid in POLICIES:
         sim = sockshop.make_sim(
-            n_clients=args.clients, duration_s=args.duration,
+            n_clients=max(loads), duration_s=args.duration,
             share=4725.0, scaling_policy=pid,
             hs_util_hi=0.03, hs_util_lo=0.002,
             vs_util_hi=0.14, vs_util_lo=0.01,
             idle_mips_frac=0.01, vs_overhead_frac=0.11, util_ema=0.1)
-        rep = summarize(sim, sim.run())
-        events = (f"+{rep.scale_out}/-{rep.scale_in}"
-                  f"/^{rep.scale_up}/v{rep.scale_down}")
-        print(f"{name:8s} {rep.avg_response_ms:8.0f} "
-              f"{rep.p95_response_ms:8.0f} {rep.slo_violation_rate:9.1%} "
-              f"{rep.avg_milicores:10.1f} {rep.active_instances:10d} "
-              f"{events:>14s}")
+        sweeps = [dataclasses.replace(sim.params, n_clients=nc,
+                                      spawn_rate=nc / 30.0) for nc in loads]
+        res = sim.run_batch(sweeps)     # whole sweep: one compile/dispatch
+        for b, nc in enumerate(loads):
+            rep = summarize(sim, batch_item(res, b), params=sweeps[b])
+            events = (f"+{rep.scale_out}/-{rep.scale_in}"
+                      f"/^{rep.scale_up}/v{rep.scale_down}")
+            print(f"{name:8s} {nc:8d} {rep.avg_response_ms:8.0f} "
+                  f"{rep.p95_response_ms:8.0f} "
+                  f"{rep.slo_violation_rate:9.1%} "
+                  f"{rep.avg_milicores:10.1f} {rep.active_instances:10d} "
+                  f"{events:>14s}")
 
 
 if __name__ == "__main__":

@@ -27,13 +27,20 @@ from .types import (CL_EXEC, CL_WAITING, DynParams, INST_ON, SimCaps,
 
 
 def make_tick(caps: SimCaps, params: SimParams,
-              has_edges: bool = True) -> Callable:
+              has_edges: bool = True, scaling: str = "cond") -> Callable:
     """Build the jit-able tick function (paper event cycle, vectorized).
 
     ``params`` supplies the *static* knobs (policy selectors — they choose
     program structure); the swept scalars (``dyn``) and the application
     description (``app``) are traced arguments, so load/threshold sweeps
     and re-parameterized graphs (calibration) reuse one compilation.
+
+    ``scaling`` selects how the periodic scaling/migration event is
+    embedded: ``"cond"`` (a per-tick ``lax.cond``, the solo-run default),
+    ``"always"`` / ``"never"`` (unconditional variants — ``run_batch``
+    hoists the cadence decision OUT of its vmap, where a traced cond
+    would otherwise degenerate into executing the scaling body every
+    tick for every sweep point).
     """
 
     def tick(state: SimState, dyn: DynParams, app: AppStatic
@@ -45,7 +52,8 @@ def make_tick(caps: SimCaps, params: SimParams,
         gen = client_phase(state.clients.wait, state.time,
                            state.requests.count, app.api_cdf, dyn, k_gen)
         state, gen_res = scheduler.gen_spawn(
-            state, app, caps, gen.fired, gen.api, gen.wait_proposal, k_gen2)
+            state, app, caps, gen.fired, gen.api, gen.wait_proposal, k_gen2,
+            dyn)
 
         # --- Dispatching (waiting → execution, load-balanced) ----------
         state = scheduler.dispatch(state, app, caps, params, dyn, k_lb)
@@ -61,8 +69,8 @@ def make_tick(caps: SimCaps, params: SimParams,
         state, n_done = scheduler.complete(state, dyn)
 
         # --- Scaling & Migration (paper §5) ------------------------------
-        if params.scaling_policy or params.migration_enabled:
-            due = (state.tick % dyn.scale_interval) == (dyn.scale_interval - 1)
+        if (params.scaling_policy or params.migration_enabled) \
+                and scaling != "never":
 
             def do_scale(st: SimState) -> SimState:
                 st = scaling_event(st, app, caps, params, dyn)
@@ -70,7 +78,12 @@ def make_tick(caps: SimCaps, params: SimParams,
                     st = migrate(st, app, caps, dyn)
                 return st
 
-            state = jax.lax.cond(due, do_scale, lambda st: st, state)
+            if scaling == "always":
+                state = do_scale(state)
+            else:
+                due = (state.tick % dyn.scale_interval) == \
+                    (dyn.scale_interval - 1)
+                state = jax.lax.cond(due, do_scale, lambda st: st, state)
 
         trace = TickTrace(
             completed=n_done,
@@ -99,6 +112,23 @@ class SimResult:
 
     def trace_np(self) -> dict:
         return {k: np.asarray(v) for k, v in self.trace._asdict().items()}
+
+
+def batch_item(result: SimResult, b: int) -> SimResult:
+    """Slice one sweep point out of a :meth:`Simulation.run_batch` result
+    (wall/compile times are those of the whole batch)."""
+    take = lambda x: x[b]
+    return SimResult(state=jax.tree_util.tree_map(take, result.state),
+                     trace=jax.tree_util.tree_map(take, result.trace),
+                     wall_time_s=result.wall_time_s,
+                     compile_time_s=result.compile_time_s)
+
+
+def stack_dyn(dyns) -> DynParams:
+    """Stack per-point :class:`DynParams` into the batched pytree
+    ``run_batch`` consumes (leading axis = sweep point)."""
+    dyns = list(dyns)
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dyns)
 
 
 class Simulation:
@@ -171,11 +201,22 @@ class Simulation:
         return tuple((tuple(x.shape), str(x.dtype))
                      for x in jax.tree_util.tree_leaves(tree))
 
+    # every SimParams knob that selects program structure (anything NOT
+    # carried by the traced DynParams sweep) — cache keys and run_batch
+    # validation both derive from this list.  seed is deliberately absent:
+    # it only feeds init_state's PRNGKey, so seed-only changes reuse the
+    # compiled executable.
+    _STATIC_FIELDS = ("lb_policy", "share_policy", "scaling_policy",
+                      "migration_enabled", "n_ticks", "use_pallas_tick",
+                      "pallas_interpret")
+
+    def _static_key(self) -> tuple:
+        p = self.params
+        return (self.caps, self._has_edges, p.max_concurrent > 0,
+                tuple(getattr(p, f) for f in self._STATIC_FIELDS))
+
     def _get_compiled(self, state: SimState, dyn: DynParams):
-        key = (self.caps, self.params.lb_policy, self.params.share_policy,
-               self.params.scaling_policy, self.params.max_concurrent > 0,
-               self.params.migration_enabled, self.params.n_ticks,
-               self._has_edges,
+        key = (self._static_key(),
                self._shape_key((state, dyn, self.app)))
         hit = Simulation._compiled_cache.get(key)
         if hit is not None:
@@ -200,6 +241,114 @@ class Simulation:
         compiled, compile_s = self._get_compiled(state, dyn)
         t1 = _time.perf_counter()
         out_state, trace = compiled(state, dyn, self.app)
+        out_state = jax.block_until_ready(out_state)
+        t2 = _time.perf_counter()
+        return SimResult(state=out_state, trace=trace,
+                         wall_time_s=t2 - t1, compile_time_s=compile_s)
+
+    # ------------------------------------------------------------------
+    def _get_compiled_batch(self, state: SimState, dyn_b: DynParams):
+        # The scaling cadence decision must live OUTSIDE the vmap: a
+        # traced cond under vmap becomes a select that executes the whole
+        # scaling body every tick for every sweep point.  When the sweep
+        # shares one scale_interval (checked on the concrete values) the
+        # batched program scans ticks at the outer level and conds between
+        # vmapped scaling/plain tick variants; otherwise it falls back to
+        # the per-point cond.
+        has_scaling = bool(self.params.scaling_policy
+                           or self.params.migration_enabled)
+        si = np.asarray(dyn_b.scale_interval)
+        hoist = has_scaling and bool((si == si.flat[0]).all())
+        key = ("batch", hoist, self._static_key(),
+               self._shape_key((state, dyn_b, self.app)))
+        hit = Simulation._compiled_cache.get(key)
+        if hit is not None:
+            return hit, 0.0
+        t0 = _time.perf_counter()
+        n_ticks = self.params.n_ticks
+        B = np.asarray(dyn_b.dt).shape[0]
+
+        if hoist:
+            tick_on = make_tick(self.caps, self.params, self._has_edges,
+                                scaling="always")
+            tick_off = make_tick(self.caps, self.params, self._has_edges,
+                                 scaling="never")
+
+            def run_fn(st: SimState, dp_b: DynParams, app: AppStatic):
+                st_b = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (B,) + x.shape), st)
+                interval = dp_b.scale_interval[0]
+                on = jax.vmap(lambda s, d: tick_on(s, d, app))
+                off = jax.vmap(lambda s, d: tick_off(s, d, app))
+
+                def body(carry, _):
+                    due = (carry.tick[0] % interval) == (interval - 1)
+                    return jax.lax.cond(due, lambda s: on(s, dp_b),
+                                        lambda s: off(s, dp_b), carry)
+
+                states, traces = jax.lax.scan(body, st_b, None,
+                                              length=n_ticks)
+                # traces come out [T, B]; match the scan-inside-vmap layout
+                return states, jax.tree_util.tree_map(
+                    lambda x: jnp.swapaxes(x, 0, 1), traces)
+        else:
+            tick = self._tick
+
+            def run_fn(st: SimState, dp_b: DynParams, app: AppStatic):
+                def one(dp: DynParams):
+                    return jax.lax.scan(lambda s, _: tick(s, dp, app), st,
+                                        None, length=n_ticks)
+                return jax.vmap(one)(dp_b)
+
+        compiled = jax.jit(run_fn).lower(state, dyn_b, self.app).compile()
+        dt = _time.perf_counter() - t0
+        Simulation._compiled_cache[key] = compiled
+        return compiled, dt
+
+    def _check_static_point(self, p: SimParams, b: int) -> None:
+        """A sweep point may only vary the DynParams-traced scalars: the
+        compiled program keeps ``self.params``' structure, so a mismatch in
+        a structural knob would silently run the wrong program."""
+        bad = [f for f in self._STATIC_FIELDS
+               if getattr(p, f) != getattr(self.params, f)]
+        if (p.max_concurrent > 0) != (self.params.max_concurrent > 0):
+            bad.append("max_concurrent (capped vs uncapped)")
+        if bad:
+            raise ValueError(
+                f"run_batch sweep point {b} differs from the Simulation's "
+                f"params in structural knob(s) {bad}; these select program "
+                "structure and cannot be swept — build a separate "
+                "Simulation instead")
+        if p.seed != self.params.seed:
+            raise ValueError(
+                f"run_batch sweep point {b} has a different seed; every "
+                "point starts from the same initial state — pass seed= to "
+                "run_batch (or run separate simulations) instead")
+
+    def run_batch(self, dyn_batch, seed: Optional[int] = None) -> SimResult:
+        """Run a whole parameter sweep as ONE compile + ONE device dispatch.
+
+        ``dyn_batch`` is either a batched :class:`DynParams` (every leaf
+        carries a leading sweep axis) or a sequence of per-point
+        :class:`DynParams` / :class:`SimParams` which is stacked here.
+        Every sweep point starts from the same initial state (same seed),
+        so point ``b`` of the result equals ``run()`` with that point's
+        dyn values.  Structure-changing knobs (policy selectors, pool
+        sizes, ``n_ticks``) are static — sweep those with separate
+        Simulations.
+        """
+        if not isinstance(dyn_batch, DynParams):
+            points = list(dyn_batch)
+            for b, d in enumerate(points):
+                if isinstance(d, SimParams):
+                    self._check_static_point(d, b)
+            dyn_batch = stack_dyn(
+                d if isinstance(d, DynParams) else DynParams.from_params(d)
+                for d in points)
+        state = self.init_state(seed)
+        compiled, compile_s = self._get_compiled_batch(state, dyn_batch)
+        t1 = _time.perf_counter()
+        out_state, trace = compiled(state, dyn_batch, self.app)
         out_state = jax.block_until_ready(out_state)
         t2 = _time.perf_counter()
         return SimResult(state=out_state, trace=trace,

@@ -58,46 +58,87 @@ def assign_free_slots(free_mask: jnp.ndarray, valid_mask: jnp.ndarray,
                           n_dropped=n_want - n_assigned)
 
 
-def scatter_new(pool_field: jnp.ndarray, asg: SlotAssignment,
-                flat_values: jnp.ndarray) -> jnp.ndarray:
-    """Write ``flat_values[asg.src[r]]`` into ``pool_field[asg.dst[r]]``.
+def scatter_pool(ints: jnp.ndarray, flts: jnp.ndarray, asg: SlotAssignment,
+                 **cols) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused spawn writer: one wave of new cloudlets lands in exactly TWO
+    scatters — every i32 field of the stacked [C, NI] pool in one, every
+    f32 field of the [C, NF] pool in the other.
 
-    ``flat_values`` must be the RAW [M] descriptor array (same indexing as
-    the ``valid_mask`` passed to :func:`assign_free_slots`) — never
-    pre-gathered by ``asg.src`` (that would double-index).
+    Columns are passed BY NAME (the ``CL_I_FIELDS``/``CL_F_FIELDS``
+    vocabulary), each a rank-level [K] array or a scalar to broadcast,
+    so the storage order lives only in ``core.types``.  Every field must
+    be supplied — a spawn initializes whole rows.  Descriptor-level [M]
+    arrays must be pre-gathered by ``asg.src``.
     """
-    C = pool_field.shape[0]
+    from .types import CL_F_FIELDS, CL_I_FIELDS
+    expect = set(CL_I_FIELDS) | set(CL_F_FIELDS)
+    if set(cols) != expect:
+        raise TypeError(
+            f"scatter_pool needs exactly the fields {sorted(expect)}; "
+            f"missing {sorted(expect - set(cols))}, "
+            f"unknown {sorted(set(cols) - expect)}")
+    C = ints.shape[0]
+    K = asg.dst.shape[0]
     dst = jnp.where(asg.live, asg.dst, C)  # sentinel C → dropped
-    return pool_field.at[dst].set(flat_values[asg.src], mode="drop")
 
+    def stacked(names, dtype):
+        return jnp.stack(
+            [jnp.broadcast_to(jnp.asarray(cols[n], dtype), (K,))
+             for n in names], axis=1)
 
-def scatter_ranked(pool_field: jnp.ndarray, asg: SlotAssignment,
-                   rank_values: jnp.ndarray) -> jnp.ndarray:
-    """Write rank-level values (already gathered via ``asg.src``, e.g.
-    freshly sampled lengths of shape [K]) into the assigned slots."""
-    C = pool_field.shape[0]
-    dst = jnp.where(asg.live, asg.dst, C)
-    return pool_field.at[dst].set(rank_values, mode="drop")
-
-
-def scatter_const(pool_field: jnp.ndarray, asg: SlotAssignment,
-                  value) -> jnp.ndarray:
-    """Write a broadcast constant into every assigned slot."""
-    C = pool_field.shape[0]
-    dst = jnp.where(asg.live, asg.dst, C)
-    val = jnp.broadcast_to(jnp.asarray(value, pool_field.dtype),
-                           (asg.dst.shape[0],))
-    return pool_field.at[dst].set(val, mode="drop")
+    return (ints.at[dst].set(stacked(CL_I_FIELDS, ints.dtype), mode="drop"),
+            flts.at[dst].set(stacked(CL_F_FIELDS, flts.dtype), mode="drop"))
 
 
 def segment_rank(keys: jnp.ndarray, mask: jnp.ndarray,
-                 num_segments: int) -> jnp.ndarray:
+                 num_segments: int, block: int = 128) -> jnp.ndarray:
     """Rank of each masked element within its segment (FCFS by slot order).
 
-    Sort-based (O(n log n)); used only on the capped space-shared dispatch
-    path where intra-service ordering matters (paper §4.2 waiting queue
-    admission).  Unmasked elements get rank = n (never admitted).
+    Sort-free prefix ranking, used on the capped space-shared dispatch path
+    (paper §4.2 waiting-queue admission).  The pool is cut into blocks of
+    ``block`` lanes: intra-block ranks come from a strictly-lower-triangular
+    equality count (O(n·block) elementwise work, no sort), block offsets
+    from a per-segment count matrix cumsummed over blocks.  Unmasked
+    elements get rank = n (never admitted).
+
+    The count matrix is [n/block, num_segments+1]; when that exceeds a
+    memory budget (huge instance counts × huge pools) the sort-based
+    ranking — O(n) memory — takes over.
     """
+    n = keys.shape[0]
+    n_blocks = -(-n // max(min(block, n), 1))
+    if n_blocks * (num_segments + 1) > (1 << 24):   # > 64 MB of i32 counts
+        return segment_rank_sorted(keys, mask, num_segments)
+    i32 = jnp.int32
+    big = jnp.asarray(num_segments, i32)
+    k = jnp.where(mask, keys.astype(i32), big)
+    L = min(block, n)
+    pad = -n % L
+    if pad:
+        k = jnp.concatenate([k, jnp.full((pad,), big, i32)])
+        mask_p = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
+    else:
+        mask_p = mask
+    B = k.shape[0] // L
+    kb = k.reshape(B, L)
+    mb = mask_p.reshape(B, L)
+    # intra-block rank: earlier masked lanes of the same segment
+    same = (kb[:, :, None] == kb[:, None, :]) & mb[:, None, :]
+    earlier = jnp.tril(jnp.ones((L, L), bool), k=-1)[None]
+    intra = jnp.sum(same & earlier, axis=2).astype(i32)            # [B, L]
+    # exclusive per-segment totals of all preceding blocks
+    cnt = jnp.zeros((B, num_segments + 1), i32).at[
+        jnp.arange(B, dtype=i32)[:, None], kb].add(mb.astype(i32))
+    base = jnp.cumsum(cnt, axis=0) - cnt                           # [B, S+1]
+    rank = (base[jnp.arange(B)[:, None], kb] + intra).reshape(-1)[:n]
+    return jnp.where(mask, rank, n)
+
+
+def segment_rank_sorted(keys: jnp.ndarray, mask: jnp.ndarray,
+                        num_segments: int) -> jnp.ndarray:
+    """O(n log n) sort-based ranking: the reference oracle for
+    :func:`segment_rank` and its O(n)-memory fallback for segment counts
+    too large for the blocked count matrix."""
     n = keys.shape[0]
     i32 = jnp.int32
     big = jnp.asarray(num_segments, i32)

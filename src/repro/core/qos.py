@@ -53,10 +53,16 @@ class QoSReport:
 
 
 def summarize(sim: Simulation, result: SimResult,
-              window_s: Optional[float] = None) -> QoSReport:
-    """Fold the final state + per-tick traces into a QoS report."""
+              window_s: Optional[float] = None,
+              params: Optional[SimParams] = None) -> QoSReport:
+    """Fold the final state + per-tick traces into a QoS report.
+
+    ``params`` overrides ``sim.params`` for sweep points produced by
+    :meth:`Simulation.run_batch` (pass the point's SimParams together
+    with the ``batch_item`` slice).
+    """
     st = result.state
-    params = sim.params
+    params = params or sim.params
     resp = np.asarray(st.requests.response)
     resp = resp[resp >= 0] * 1000.0      # → ms
     trace = result.trace_np()

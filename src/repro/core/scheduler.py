@@ -11,6 +11,14 @@ Every tick runs, in order:
 The waiting/execution/finished "queues" of the paper are status masks on
 the active cloudlet buffer; the finished queue is folded into per-request
 and per-service aggregates (DESIGN.md §2).
+
+One-pass tick discipline (DESIGN.md §2.2): spawn waves write the stacked
+cloudlet pool with two row scatters (``scatter_pool``), and the execution
+phase folds progress plus every finish-side reduction into a single fused
+op (``cloudlet_finish`` — Pallas kernel on TPU, stacked-scatter jnp
+reference elsewhere), so the ``max_cloudlets`` buffer streams through
+memory a constant number of times per tick regardless of how many
+statistics are maintained.
 """
 from __future__ import annotations
 
@@ -20,12 +28,12 @@ import jax
 import jax.numpy as jnp
 
 from . import policies
-from ..kernels.cloudlet_step import cloudlet_step as _cloudlet_step_op
+from ..kernels.cloudlet_step import cloudlet_finish as _cloudlet_finish_op
 from .app import AppStatic
-from .pool import (assign_free_slots, scatter_const, scatter_new,
-                   scatter_ranked, segment_rank)
-from .types import (CL_EXEC, CL_FREE, CL_WAITING, DynParams, INST_DRAIN,
-                    INST_FREE, INST_ON, SimCaps, SimParams, SimState)
+from .pool import assign_free_slots, scatter_pool, segment_rank
+from .types import (CL_EXEC, CL_FREE, CL_WAITING, Cloudlets, DynParams,
+                    INST_DRAIN, INST_FREE, INST_ON, SimCaps, SimParams,
+                    SimState)
 
 
 def _segsum(data, ids, n, valid=None):
@@ -47,12 +55,11 @@ class GenResult(NamedTuple):
 
 def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
               fired: jnp.ndarray, api: jnp.ndarray,
-              wait_proposal: jnp.ndarray, rng: jnp.ndarray
+              wait_proposal: jnp.ndarray, rng: jnp.ndarray, dyn: DynParams
               ) -> Tuple[SimState, GenResult]:
     """Allocate request slots for fired clients and spawn root cloudlets."""
     req, cl, ctr = state.requests, state.cloudlets, state.counters
     R = req.api.shape[0]
-    C = cl.status.shape[0]
     i32, f32 = jnp.int32, jnp.float32
     Nc = fired.shape[0]
     K = caps.k_fire if caps.k_fire > 0 else Nc
@@ -60,7 +67,9 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
     E = app.api_entry.shape[1]
 
     rank = jnp.cumsum(fired.astype(i32)) - 1
-    in_budget = fired & (rank < K)
+    # Admission: per-tick budget AND the generator's numLimit (Alg 1) —
+    # both enforced per client so a burst tick cannot overshoot the limit.
+    in_budget = fired & (rank < K) & (req.count + rank < dyn.num_limit)
     slot = req.count + rank
     has_slot = in_budget & (slot < R)
     n_accept = jnp.sum(has_slot.astype(i32))
@@ -73,21 +82,16 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
         jnp.where(fired, 0, jnp.maximum(state.clients.wait - 1, 0)))
 
     # ---- write accepted requests -------------------------------------
+    # The request pool is append-only, so a fresh slot still holds its
+    # zeros_state values (outstanding=spawned=critical_len=0, response=-1,
+    # finish=0) — only api and arrival need writing.  finish then grows
+    # purely via the execute-phase scatter-max (tfin ≥ arrival always).
     dst = jnp.where(has_slot, slot, R)
     requests = req._replace(
         count=req.count + n_accept,
         api=req.api.at[dst].set(api, mode="drop"),
         arrival=req.arrival.at[dst].set(
             jnp.full((Nc,), 0.0, f32) + state.time, mode="drop"),
-        outstanding=req.outstanding.at[dst].set(jnp.zeros((Nc,), i32),
-                                                mode="drop"),
-        spawned=req.spawned.at[dst].set(jnp.zeros((Nc,), i32), mode="drop"),
-        finish=req.finish.at[dst].set(jnp.full((Nc,), 0.0, f32) + state.time,
-                                      mode="drop"),
-        response=req.response.at[dst].set(jnp.full((Nc,), -1.0, f32),
-                                          mode="drop"),
-        critical_len=req.critical_len.at[dst].set(jnp.zeros((Nc,), i32),
-                                                  mode="drop"),
     )
 
     # ---- root cloudlet descriptors [K, E] ------------------------------
@@ -115,25 +119,21 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
     length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
                          1.0)
 
-    cloudlets = cl._replace(
-        status=scatter_const(cl.status, asg, CL_WAITING),
-        req=scatter_new(cl.req, asg, req_flat),
-        service=scatter_new(cl.service, asg, svc_flat),
-        inst=scatter_const(cl.inst, asg, -1),
-        length=scatter_ranked(cl.length, asg, length),
-        rem=scatter_ranked(cl.rem, asg, length),
-        arrival=scatter_ranked(cl.arrival, asg,
-                               jnp.full((Ka,), 0.0, f32) + state.time),
-        start=scatter_const(cl.start, asg, -1.0),
-        wait_ticks=scatter_const(cl.wait_ticks, asg, 0),
-        depth=scatter_const(cl.depth, asg, 0),
-    )
+    # Fused spawn write: every i32 field in one scatter, every f32 field
+    # in the other.
+    ints, flts = scatter_pool(
+        cl.ints, cl.flts, asg,
+        status=CL_WAITING, req=req_new, service=svc_new, inst=-1,
+        wait_ticks=0, depth=0,
+        length=length, rem=length,
+        arrival=jnp.full((Ka,), 0.0, f32) + state.time, start=-1.0)
+    cloudlets = Cloudlets(ints=ints, flts=flts)
 
-    spawn_per_req = _segsum(jnp.where(asg.live, 1, 0).astype(i32),
-                            jnp.where(asg.live, req_new, -1), R)
+    # direct scatter-adds: no [R]-sized temporaries on the spawn path
+    rdst = jnp.where(asg.live, req_new, R)
     requests = requests._replace(
-        outstanding=requests.outstanding + spawn_per_req,
-        spawned=requests.spawned + spawn_per_req,
+        outstanding=requests.outstanding.at[rdst].add(1, mode="drop"),
+        spawned=requests.spawned.at[rdst].add(1, mode="drop"),
     )
     counters = ctr._replace(
         spawned=ctr.spawned + asg.n_assigned,
@@ -189,27 +189,31 @@ def dispatch(state: SimState, app: AppStatic, caps: SimCaps,
     if params.max_concurrent > 0:
         # Space-shared admission: FCFS rank within the target instance
         # must fit in the remaining concurrency budget (paper: unselected
-        # cloudlets re-enter the waiting queue).
+        # cloudlets re-enter the waiting queue).  Prefix-sum ranking —
+        # no sort on the hot path.
         intra = segment_rank(jnp.where(ok, target, I), ok, I + 1)
         cap_left = jnp.maximum(dyn.max_concurrent - inst.n_exec, 0)
         admit = ok & (intra < cap_left[tgt_safe])
     else:
         admit = ok
 
-    new_status = jnp.where(admit, CL_EXEC, cl.status)
-    new_inst = jnp.where(admit, target, cl.inst)
-    new_start = jnp.where(admit & (cl.start < 0), state.time, cl.start)
-    new_wait_t = cl.wait_ticks + (waiting & ~admit).astype(i32)
-
-    disp_per_svc = _segsum(admit.astype(i32),
-                           jnp.where(admit, cl.service, -1), S)
+    # One pool-sized scatter: admissions per instance.  It both maintains
+    # the incremental n_exec counter (execute no longer re-counts the
+    # execution queue) and, reduced over the small instance table, yields
+    # the per-service dispatch counts for the round-robin cursors.
+    admit_per_inst = _segsum(admit.astype(i32),
+                             jnp.where(admit, target, -1), I)
+    disp_per_svc = _segsum(admit_per_inst, inst.service, S)
     rr = (state.rr + disp_per_svc) % jnp.maximum(sched.svc_replicas, 1)
 
-    return state._replace(
-        rr=rr,
-        cloudlets=cl._replace(status=new_status, inst=new_inst,
-                              start=new_start, wait_ticks=new_wait_t),
+    cloudlets = cl.with_cols(
+        status=jnp.where(admit, CL_EXEC, cl.status),
+        inst=jnp.where(admit, target, cl.inst),
+        start=jnp.where(admit & (cl.start < 0), state.time, cl.start),
+        wait_ticks=cl.wait_ticks + (waiting & ~admit).astype(i32),
     )
+    instances = inst._replace(n_exec=inst.n_exec + admit_per_inst)
+    return state._replace(rr=rr, cloudlets=cloudlets, instances=instances)
 
 
 # ===========================================================================
@@ -234,35 +238,39 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
     i32, f32 = jnp.int32, jnp.float32
     dt = dyn.dt
 
-    execm = cl.status == CL_EXEC
-    cid = jnp.where(execm, cl.inst, -1)
-    n_exec = _segsum(jnp.ones_like(cl.status), cid, I)
+    status_c, rem_c, inst_c = cl.status, cl.rem, cl.inst
+    execm = status_c == CL_EXEC
 
+    # n_exec is maintained incrementally (dispatch adds admissions, the
+    # finish counts below subtract) — no per-tick re-count over the pool.
+    n_exec = inst.n_exec
     if params.share_policy == policies.SHARE_SRPT:
-        w = jnp.where(execm, 1.0 / (cl.rem + 1.0), 0.0)
-    else:
+        w = jnp.where(execm, 1.0 / (rem_c + 1.0), 0.0)
+        wsum = _segsum(w, jnp.where(execm, inst_c, -1), I)
+    else:  # equal time slice: the weight sum IS the execution count
         w = execm.astype(f32)
-    wsum = _segsum(w, cid, I)
-    inst_safe = jnp.where(execm, cl.inst, 0)
+        wsum = n_exec.astype(f32)
+    inst_safe = jnp.where(execm, inst_c, 0)
     rate = jnp.where(execm,
                      inst.mips[inst_safe] * w
                      / jnp.maximum(wsum[inst_safe], 1e-9), 0.0)  # MI/s
 
-    if params.use_pallas_tick:
-        # fused TPU kernel (kernels/cloudlet_step): one VMEM pass computes
-        # progress, sub-tick finishes, consumption, and per-instance usage
-        new_rem, fin, tfin, consumed, used_mips = _cloudlet_step_op(
-            cl.status, cl.rem, cl.inst, rate, state.time, dt, I)
-        new_rem = jnp.where(execm, new_rem, cl.rem)
-    else:
-        prog = rate * dt
-        fin = execm & (cl.rem <= prog) & (rate > 0)
-        tfin = jnp.where(
-            fin, jnp.clip(state.time + cl.rem / jnp.maximum(rate, 1e-9),
-                          state.time, state.time + dt), 0.0)
-        consumed = jnp.minimum(prog, cl.rem)
-        new_rem = jnp.maximum(cl.rem - prog, 0.0)
-        used_mips = _segsum(consumed / dt, cid, I)
+    # --- fused finish reduction: progress + every per-finish aggregate
+    # (Pallas kernel on TPU / interpret, stacked-scatter jnp elsewhere);
+    # the per-request arrays are updated in place, so the (often much
+    # larger) request pool is never re-streamed here ---
+    req = state.requests
+    out = _cloudlet_finish_op(
+        status_c, rem_c, inst_c, cl.req, cl.arrival, cl.start,
+        cl.depth, rate, state.time, dt,
+        req.finish, req.critical_len, req.outstanding,
+        n_inst=I,
+        use_pallas=None if params.use_pallas_tick else False,
+        interpret=params.pallas_interpret)
+    fin, tfin = out.fin, out.tfin
+    used_mips = out.inst_acc[:I, 0]
+    fin_per_inst = out.inst_acc[:I, 1].astype(i32)
+
     svc_of_inst = inst.service
     util = jnp.where(inst.mips > 0, used_mips / jnp.maximum(inst.mips, 1e-9),
                      0.0)
@@ -281,44 +289,39 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
                          * n_exec, 0.0)
 
     # --- per-service usage history / node-delay estimates ---------------
+    # The cloudlet-axis statistics were accumulated per instance by the
+    # fused op; fold them (plus usage) into services with ONE stacked
+    # scatter over the small instance table.
     st = state.svc_stats
-    fsvc = jnp.where(fin, cl.service, -1)
-    sojourn = jnp.where(fin, tfin - cl.arrival, 0.0)
-    exec_t = jnp.where(fin, tfin - jnp.maximum(cl.start, cl.arrival), 0.0)
-    wait_t = jnp.where(fin, jnp.maximum(cl.start, cl.arrival) - cl.arrival,
-                       0.0)
+    svc_rows = jnp.concatenate(
+        [(acct_mips * dt)[:, None], out.inst_acc[:I, 1:5]], axis=1)
+    sidx = jnp.where(svc_of_inst >= 0, svc_of_inst, S)
+    svc_acc = jnp.zeros((S + 1, 5), f32).at[sidx].add(
+        jnp.where((svc_of_inst >= 0)[:, None], svc_rows, 0.0), mode="drop")
     svc_stats = st._replace(
-        usage_sum=st.usage_sum + _segsum(acct_mips * dt, svc_of_inst, S),
-        finished=st.finished + _segsum(jnp.ones_like(cl.status), fsvc, S),
-        delay_sum=st.delay_sum + _segsum(sojourn, fsvc, S),
-        exec_sum=st.exec_sum + _segsum(exec_t, fsvc, S),
-        wait_sum=st.wait_sum + _segsum(wait_t, fsvc, S),
+        usage_sum=st.usage_sum + svc_acc[:S, 0],
+        finished=st.finished + svc_acc[:S, 1].astype(i32),
+        delay_sum=st.delay_sum + svc_acc[:S, 2],
+        exec_sum=st.exec_sum + svc_acc[:S, 3],
+        wait_sum=st.wait_sum + svc_acc[:S, 4],
     )
 
-    # --- request aggregates ---------------------------------------------
-    req = state.requests
-    R = req.api.shape[0]
-    frq = jnp.where(fin, cl.req, -1)
-    fin_per_req = _segsum(jnp.ones_like(cl.status), frq, R)
-    rdst = jnp.where(fin, cl.req, R)
-    finish = req.finish.at[rdst].max(tfin, mode="drop")
-    crit = req.critical_len.at[rdst].max(cl.depth + 1, mode="drop")
-    requests = req._replace(outstanding=req.outstanding - fin_per_req,
-                            finish=finish, critical_len=crit)
+    # --- request aggregates (already folded in by the fused op) ----------
+    requests = req._replace(outstanding=out.req_out, finish=out.req_finish,
+                            critical_len=out.req_crit)
 
     info = FinishInfo(fin=fin, tfin=tfin, pre_service=cl.service,
-                      pre_req=cl.req, pre_depth=cl.depth, pre_inst=cl.inst)
+                      pre_req=cl.req, pre_depth=cl.depth, pre_inst=inst_c)
 
     # --- clear finished slots (the "finished queue" is the aggregates) --
-    cloudlets = cl._replace(
-        status=jnp.where(fin, CL_FREE, cl.status),
-        rem=new_rem,
-        inst=jnp.where(fin, -1, cl.inst),
+    cloudlets = cl.with_cols(
+        status=jnp.where(fin, CL_FREE, status_c),
+        rem=out.new_rem,
+        inst=jnp.where(fin, -1, inst_c),
     )
 
     # --- drained instances release their VM share (HS scale-in) ---------
-    n_exec_after = n_exec - _segsum(jnp.ones_like(cl.status),
-                                    jnp.where(fin, cl.inst, -1), I)
+    n_exec_after = n_exec - fin_per_inst
     drain_done = (inst.status == INST_DRAIN) & (n_exec_after == 0)
     V = vms.mips.shape[0]
     rel_mips = _segsum(jnp.where(drain_done, inst.mips, 0.0), inst.vm, V)
@@ -372,29 +375,26 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
 
     asg = assign_free_slots(cl.status == CL_FREE, valid, k_static=C)
     Ka = asg.dst.shape[0]
-    svc_new = svc_flat[asg.src]          # rank-level gather (for sampling)
+    svc_new = svc_flat[asg.src]          # rank-level gathers
+    req_new = req_flat[asg.src]
+    dep_new = dep_flat[asg.src]
+    tf_new = tf_flat[asg.src]
     noise = jax.random.normal(rng, (Ka,), f32)
     length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
                          1.0)
 
-    cloudlets = cl._replace(
-        status=scatter_const(cl.status, asg, CL_WAITING),
-        req=scatter_new(cl.req, asg, req_flat),
-        service=scatter_new(cl.service, asg, svc_flat),
-        inst=scatter_const(cl.inst, asg, -1),
-        length=scatter_ranked(cl.length, asg, length),
-        rem=scatter_ranked(cl.rem, asg, length),
-        arrival=scatter_new(cl.arrival, asg, tf_flat),
-        start=scatter_const(cl.start, asg, -1.0),
-        wait_ticks=scatter_const(cl.wait_ticks, asg, 0),
-        depth=scatter_new(cl.depth, asg, dep_flat),
-    )
+    # Fused spawn write: two scatters for the whole successor wave.
+    ints, flts = scatter_pool(
+        cl.ints, cl.flts, asg,
+        status=CL_WAITING, req=req_new, service=svc_new, inst=-1,
+        wait_ticks=0, depth=dep_new,
+        length=length, rem=length, arrival=tf_new, start=-1.0)
+    cloudlets = Cloudlets(ints=ints, flts=flts)
 
-    live_req = jnp.where(asg.live, req_flat[asg.src], -1)
-    spawn_per_req = _segsum(jnp.where(asg.live, 1, 0).astype(i32),
-                            live_req, R)
-    requests = req._replace(outstanding=req.outstanding + spawn_per_req,
-                            spawned=req.spawned + spawn_per_req)
+    rdst = jnp.where(asg.live, req_new, R)
+    requests = req._replace(
+        outstanding=req.outstanding.at[rdst].add(1, mode="drop"),
+        spawned=req.spawned.at[rdst].add(1, mode="drop"))
 
     # Outbound-RPC bandwidth (linear usage model, paper §5.2).
     live_pinst = jnp.where(asg.live, pin_flat[asg.src], -1)

@@ -102,6 +102,8 @@ class SimParams:
     # --- backend ---------------------------------------------------------
     use_pallas_tick: bool = False # fused cloudlet_step TPU kernel for the
                                   # execution phase (CPU runs the jnp ref)
+    pallas_interpret: bool = False  # force the Pallas kernel in interpret
+                                  # mode (CPU validation / perf tracking)
 
     # --- QoS -------------------------------------------------------------
     slo_ms: float = 1000.0        # SLO threshold on response time (ms)
@@ -176,19 +178,89 @@ class Requests(NamedTuple):
     critical_len: jnp.ndarray # [R] i32 nodes on the critical (longest) chain
 
 
-class Cloudlets(NamedTuple):
-    """Active-set RpcCloudlet buffer (paper §4.1.2, §4.2)."""
+# Column layout of the stacked cloudlet pool (DESIGN.md §2.2): all i32
+# fields live in one [C, NI] array and all f32 fields in one [C, NF] array,
+# so spawning writes the whole pool with TWO row scatters instead of one
+# scatter per field.  Order here is the storage order — keep in sync with
+# the property accessors below and `zeros_state`.
+CL_I_FIELDS = ("status", "req", "service", "inst", "wait_ticks", "depth")
+CL_F_FIELDS = ("length", "rem", "arrival", "start")
+CL_I_IDX = {n: i for i, n in enumerate(CL_I_FIELDS)}
+CL_F_IDX = {n: i for i, n in enumerate(CL_F_FIELDS)}
 
-    status: jnp.ndarray      # [C] i32 CL_*
-    req: jnp.ndarray         # [C] i32 owning request
-    service: jnp.ndarray     # [C] i32 service node
-    inst: jnp.ndarray        # [C] i32 assigned instance (-1 = unassigned)
-    length: jnp.ndarray      # [C] f32 total MI (Gaussian, paper §4.1.2)
-    rem: jnp.ndarray         # [C] f32 remaining MI
-    arrival: jnp.ndarray     # [C] f32 seconds
-    start: jnp.ndarray       # [C] f32 first-execution time (-1 = not yet)
-    wait_ticks: jnp.ndarray  # [C] i32 ticks spent in the waiting queue
-    depth: jnp.ndarray       # [C] i32 hops from the root cloudlet
+
+class Cloudlets(NamedTuple):
+    """Active-set RpcCloudlet buffer (paper §4.1.2, §4.2), stored as two
+    stacked column blocks so one spawn wave is two scatters.
+
+    Field views (columns):
+      ints[:, 0] status     i32 CL_*
+      ints[:, 1] req        i32 owning request
+      ints[:, 2] service    i32 service node
+      ints[:, 3] inst       i32 assigned instance (-1 = unassigned)
+      ints[:, 4] wait_ticks i32 ticks spent in the waiting queue
+      ints[:, 5] depth      i32 hops from the root cloudlet
+      flts[:, 0] length     f32 total MI (Gaussian, paper §4.1.2)
+      flts[:, 1] rem        f32 remaining MI
+      flts[:, 2] arrival    f32 seconds
+      flts[:, 3] start      f32 first-execution time (-1 = not yet)
+    """
+
+    ints: jnp.ndarray        # [C, 6] i32
+    flts: jnp.ndarray        # [C, 4] f32
+
+    @property
+    def status(self) -> jnp.ndarray:
+        return self.ints[:, 0]
+
+    @property
+    def req(self) -> jnp.ndarray:
+        return self.ints[:, 1]
+
+    @property
+    def service(self) -> jnp.ndarray:
+        return self.ints[:, 2]
+
+    @property
+    def inst(self) -> jnp.ndarray:
+        return self.ints[:, 3]
+
+    @property
+    def wait_ticks(self) -> jnp.ndarray:
+        return self.ints[:, 4]
+
+    @property
+    def depth(self) -> jnp.ndarray:
+        return self.ints[:, 5]
+
+    @property
+    def length(self) -> jnp.ndarray:
+        return self.flts[:, 0]
+
+    @property
+    def rem(self) -> jnp.ndarray:
+        return self.flts[:, 1]
+
+    @property
+    def arrival(self) -> jnp.ndarray:
+        return self.flts[:, 2]
+
+    @property
+    def start(self) -> jnp.ndarray:
+        return self.flts[:, 3]
+
+    def with_cols(self, **cols) -> "Cloudlets":
+        """Replace whole [C] field columns by name (dispatch/execute path);
+        consecutive column writes fuse into one pass under jit."""
+        ints, flts = self.ints, self.flts
+        for name, v in cols.items():
+            if name in CL_I_IDX:
+                ints = ints.at[:, CL_I_IDX[name]].set(
+                    jnp.asarray(v, ints.dtype))
+            else:
+                flts = flts.at[:, CL_F_IDX[name]].set(
+                    jnp.asarray(v, flts.dtype))
+        return Cloudlets(ints=ints, flts=flts)
 
 
 class Instances(NamedTuple):
@@ -310,16 +382,9 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1
             critical_len=jnp.zeros((R,), i32),
         ),
         cloudlets=Cloudlets(
-            status=jnp.zeros((C,), i32),
-            req=jnp.full((C,), -1, i32),
-            service=jnp.full((C,), -1, i32),
-            inst=jnp.full((C,), -1, i32),
-            length=jnp.zeros((C,), f32),
-            rem=jnp.zeros((C,), f32),
-            arrival=jnp.zeros((C,), f32),
-            start=jnp.full((C,), -1.0, f32),
-            wait_ticks=jnp.zeros((C,), i32),
-            depth=jnp.zeros((C,), i32),
+            # column init values follow CL_I_FIELDS / CL_F_FIELDS order
+            ints=jnp.tile(jnp.asarray([[0, -1, -1, -1, 0, 0]], i32), (C, 1)),
+            flts=jnp.tile(jnp.asarray([[0.0, 0.0, 0.0, -1.0]], f32), (C, 1)),
         ),
         instances=Instances(
             status=jnp.zeros((I,), i32),

@@ -1,0 +1,9 @@
+"""Distribution substrate: logical-axis sharding rules + gradient compression.
+
+``sharding`` resolves logical axis names (declared once per parameter in the
+model schemas) against whatever mesh is current — the indirection that makes
+checkpoints elastic (ckpt/elastic.py) and the dry-run mesh-agnostic
+(launch/specs.py).  ``compression`` is the int8 + error-feedback gradient
+codec the train step brackets around the cross-pod all-reduce.
+"""
+from . import compression, sharding  # noqa: F401

@@ -1,0 +1,87 @@
+"""Logical-axis → mesh-axis resolution (the sharding rulebook).
+
+Every parameter/activation dimension carries a *logical* name ("heads",
+"batch", ...); the tables below map each name to the mesh axes it may be
+sharded over, in preference order.  ``resolve`` applies two guards per
+tensor:
+
+  * divisibility — a dim is only sharded if the product of the chosen mesh
+    axis sizes divides it (trailing candidate axes are dropped until it
+    does); otherwise the dim replicates,
+  * uniqueness — a mesh axis is consumed by the first dim that claims it
+    (XLA forbids reusing a mesh axis within one PartitionSpec).
+
+Rules reference axes that may not exist on the current mesh (e.g. "pod" on
+a single-pod run); missing axes are skipped, which is what makes the same
+rulebook serve the 256-chip and 512-chip layouts unchanged.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+# Tensor-parallel parameter dims go to "model"; everything else replicates.
+PARAM_RULES: dict = {
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "embed": (),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "frames": (),
+    "periods": (),
+}
+
+# Activations: batch dims spread over the data-parallel axes (both of them
+# on multi-pod meshes); sequence stays local during training.
+ACT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "frames": (),
+    "state": (),
+    "conv": (),
+    "layers": (),
+}
+
+
+def resolve(mesh, shape, axes, rules) -> PartitionSpec:
+    """PartitionSpec for one tensor given its logical axes and the rules."""
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        cand = [a for a in rules.get(name, ()) or ()
+                if a in mesh.axis_names and a not in used] \
+            if name is not None else []
+        size = math.prod(mesh.shape[a] for a in cand) if cand else 1
+        while cand and dim % size != 0:          # divisibility guard
+            size //= mesh.shape[cand[-1]]
+            cand.pop()
+        if not cand:
+            out.append(None)
+            continue
+        used.update(cand)
+        out.append(cand[0] if len(cand) == 1 else tuple(cand))
+    return PartitionSpec(*out)
+
+
+def tree_shardings(mesh, abstract_tree, logical_tree, rules):
+    """NamedSharding per leaf of ``abstract_tree``.
+
+    ``logical_tree`` mirrors the abstract tree down to its leaves, where it
+    holds the per-dim logical-name tuples (``flatten_up_to`` semantics: the
+    tuples are *not* traversed).
+    """
+    return jax.tree_util.tree_map(
+        lambda a, axes: NamedSharding(mesh, resolve(mesh, a.shape, axes,
+                                                    rules)),
+        abstract_tree, logical_tree)

@@ -1,2 +1,4 @@
-from .ops import cloudlet_step  # noqa: F401
+from .ops import cloudlet_finish, cloudlet_step  # noqa: F401
+from .ref import FinishOut  # noqa: F401
+from .ref import cloudlet_finish as cloudlet_finish_ref  # noqa: F401
 from .ref import cloudlet_step as cloudlet_step_ref  # noqa: F401

@@ -1,11 +1,11 @@
-"""Jitted wrapper for the fused cloudlet tick with backend dispatch."""
+"""Jitted wrappers for the fused cloudlet tick with backend dispatch."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .kernel import cloudlet_step_pallas
+from .kernel import cloudlet_finish_pallas, cloudlet_step_pallas
 
 
 def _on_tpu() -> bool:
@@ -20,9 +20,38 @@ def cloudlet_step(status, rem, inst, rate, time, dt, n_inst: int,
     if not (use_pallas or interpret):
         return ref.cloudlet_step(status, rem, inst, rate, time, dt, n_inst)
     C = status.shape[0]
-    bc = min(8192, C)
-    while C % bc:
-        bc //= 2
     return cloudlet_step_pallas(status, rem, inst, rate, time, dt,
-                                n_inst=n_inst, bc=max(bc, 1),
+                                n_inst=n_inst, bc=min(8192, C),
                                 interpret=interpret)
+
+
+def cloudlet_finish(status, rem, inst, req, arrival, start, depth,
+                    rate, time, dt, req_finish, req_crit, req_out,
+                    n_inst: int,
+                    use_pallas: bool | None = None, interpret: bool = False
+                    ) -> ref.FinishOut:
+    """One-pass execution tick + all finish reductions (engine hot path).
+
+    Dispatches to the extended Pallas kernel on TPU (or in interpret mode)
+    and to the stacked-scatter jnp reference otherwise.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    # The kernel keeps the six [R] request arrays resident in VMEM
+    # (revisited every grid step); past ~8 MB of request state fall back
+    # to the jnp path, which is scatter-for-scatter equivalent.
+    R = req_finish.shape[0]
+    if use_pallas and not interpret and 6 * 4 * R > (8 << 20):
+        use_pallas = False
+    if not (use_pallas or interpret):
+        return ref.cloudlet_finish(status, rem, inst, req, arrival,
+                                   start, depth, rate, time, dt,
+                                   req_finish, req_crit, req_out,
+                                   n_inst=n_inst)
+    C = status.shape[0]
+    outs = cloudlet_finish_pallas(status, rem, inst, req, arrival,
+                                  start, depth, rate, time, dt,
+                                  req_finish, req_crit, req_out,
+                                  n_inst=n_inst,
+                                  bc=min(8192, C), interpret=interpret)
+    return ref.FinishOut(*outs)

@@ -1,18 +1,28 @@
-"""Pure-jnp oracle for the fused cloudlet execution update (paper §4.2).
+"""Pure-jnp oracles for the fused cloudlet execution tick (paper §4.2).
 
-One simulator tick's execution phase over the active cloudlet buffer:
-given per-cloudlet rates (already load-balanced by the scheduler), advance
-remaining work, detect sub-tick finishes, and accumulate per-instance
-consumption — the inner loop the engine runs millions of times in the
-capacity tests (Table 2).
+Two contracts share the elementwise progress/finish core:
+
+``cloudlet_step``  — the original 5-output update (progress, sub-tick
+finishes, consumption, per-instance usage).  Kept verbatim: it is the
+oracle for the legacy kernel API tests.
+
+``cloudlet_finish`` — the single-pass finish reduction the engine now
+runs every tick: progress PLUS every per-finish aggregate the scheduler
+needs.  Per-instance statistics (usage, finish count, sojourn/exec/wait
+sums) land in ONE stacked [I+1, 5] scatter; per-service stats are derived
+outside by reducing that table over the (tiny) instance→service map; the
+per-request aggregates (max finish time, max critical depth, outstanding)
+are updated in place so the request pool is never re-streamed.  This is
+the jnp mirror of the extended Pallas kernel's one VMEM pass.
 
 Inputs (all [C] unless noted):
-  status i32 (2 = executing), rem f32 (MI), inst i32, rate f32 (MI/s),
-  time scalar, dt scalar, n_inst static.
-Outputs:
-  new_rem f32, fin bool, tfin f32, consumed f32, used [I] f32 (MI/s).
+  status i32 (2 = executing), rem f32 (MI), inst i32,
+  req i32, arrival f32, start f32, depth i32, rate f32 (MI/s),
+  time scalar, dt scalar, req_finish/req_crit/req_out [R]; n_inst static.
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax.numpy as jnp
 
@@ -32,3 +42,73 @@ def cloudlet_step(status, rem, inst, rate, time, dt, n_inst: int):
     used = jnp.zeros((n_inst,), jnp.float32).at[idx].add(
         consumed / dt, mode="drop")
     return new_rem, fin, tfin, consumed, used
+
+
+class FinishOut(NamedTuple):
+    """Outputs of the fused finish reduction (see module docstring)."""
+
+    new_rem: jnp.ndarray    # [C] f32
+    fin: jnp.ndarray        # [C] bool
+    tfin: jnp.ndarray       # [C] f32 sub-tick finish timestamp
+    consumed: jnp.ndarray   # [C] f32 MI consumed this tick
+    inst_acc: jnp.ndarray   # [I+1, 5] f32: used MI/s, finish count,
+    #                         sojourn / exec / wait sums (row I = overflow)
+    req_finish: jnp.ndarray  # [R] f32 updated max finish time per request
+    req_crit: jnp.ndarray    # [R] i32 updated max critical depth
+    req_out: jnp.ndarray     # [R] i32 updated outstanding count
+
+
+# inst_acc column indices
+ACC_USED, ACC_FIN, ACC_SOJOURN, ACC_EXEC, ACC_WAIT = range(5)
+
+
+def cloudlet_finish(status, rem, inst, req, arrival, start, depth,
+                    rate, time, dt, req_finish, req_crit, req_out,
+                    n_inst: int) -> FinishOut:
+    f32, i32 = jnp.float32, jnp.int32
+    n_req = req_finish.shape[0]
+    execm = status == CL_EXEC
+    prog = rate * dt
+    fin = execm & (rem <= prog) & (rate > 0)
+    tfin = jnp.where(
+        fin, jnp.clip(time + rem / jnp.maximum(rate, 1e-9), time, time + dt),
+        0.0)
+    consumed = jnp.where(execm, jnp.minimum(prog, rem), 0.0)
+    new_rem = jnp.where(execm, jnp.maximum(rem - prog, 0.0), rem)
+    finf = fin.astype(f32)
+
+    # per-instance: usage + finish count + finish-time statistics in ONE
+    # stacked scatter; the (tiny) instance→service reduction that turns
+    # these into per-service stats happens outside, so the cloudlet axis
+    # is streamed exactly once for all five statistics
+    started = jnp.maximum(start, arrival)
+    sojourn = jnp.where(fin, tfin - arrival, 0.0)
+    exec_t = jnp.where(fin, tfin - started, 0.0)
+    wait_t = jnp.where(fin, started - arrival, 0.0)
+    iidx = jnp.where(execm & (inst >= 0), inst, n_inst)
+    inst_acc = jnp.zeros((n_inst + 1, 5), f32).at[iidx].add(
+        jnp.stack([consumed / dt, finf, sojourn, exec_t, wait_t], axis=1),
+        mode="drop")
+
+    # per-request finish aggregates.  Two static strategies, same results:
+    #  * small request pool (R ≤ C, Table 2 services-dominated cases):
+    #    stack both maxima into one pool-sized scatter, then merge — max
+    #    is associative so the merge is exact, and the merge passes are
+    #    over the small R;
+    #  * large request pool (R > C, requests-dominated cases): update in
+    #    place, so the [R] arrays are never re-streamed.
+    ridx = jnp.where(fin & (req >= 0), req, n_req)
+    if n_req <= status.shape[0]:
+        critf = jnp.where(fin, (depth + 1).astype(f32), 0.0)
+        mx = jnp.zeros((n_req + 1, 2), f32).at[ridx].max(
+            jnp.stack([tfin, critf], axis=1), mode="drop")
+        req_finish = jnp.maximum(req_finish, mx[:n_req, 0])
+        req_crit = jnp.maximum(req_crit, mx[:n_req, 1].astype(i32))
+    else:
+        req_finish = req_finish.at[ridx].max(tfin, mode="drop")
+        req_crit = req_crit.at[ridx].max(depth + 1, mode="drop")
+    req_out = req_out.at[ridx].add(-fin.astype(i32), mode="drop")
+
+    return FinishOut(new_rem=new_rem, fin=fin, tfin=tfin, consumed=consumed,
+                     inst_acc=inst_acc, req_finish=req_finish,
+                     req_crit=req_crit, req_out=req_out)

@@ -3,7 +3,8 @@ engine response times vs the analytic critical path on deterministic runs.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # skips gracefully without hypothesis
 
 from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
                         build_graph, critical_path, diamond, linear_chain,

@@ -7,7 +7,8 @@ and monotonicity of the usage history.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # skips gracefully without hypothesis
 
 from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
                         diamond, linear_chain, star, summarize)

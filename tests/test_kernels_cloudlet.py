@@ -2,7 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # skips gracefully without hypothesis
 
 from repro.kernels.cloudlet_step import cloudlet_step, cloudlet_step_ref
 from repro.kernels.cloudlet_step.kernel import cloudlet_step_pallas

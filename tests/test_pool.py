@@ -7,7 +7,8 @@ respected, and overflow is counted — never silent.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # skips gracefully without hypothesis
 
 from repro.core.pool import assign_free_slots, segment_rank
 
