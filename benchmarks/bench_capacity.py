@@ -39,9 +39,15 @@ def flat_services(n: int, mi: float) -> "ServiceGraph":
 
 
 def build_case(n_requests, n_services, replicas, fanout=1,
-               use_pallas_interpret=False):
+               use_pallas_interpret=False, network=False):
     """Build a capacity Simulation sized to the Table 2 object counts;
-    returns (sim, meta) where meta records the sizing decisions."""
+    returns (sim, meta) where meta records the sizing decisions.
+
+    ``network=True`` runs the same case with the network fabric enabled
+    (DESIGN.md §6) on amply-provisioned NICs: the Transit phase executes
+    every tick (client→entry payloads cross host ingress ports) without
+    starving the workload, so the wall-time delta is the phase's overhead.
+    """
     mi = 50.0
     if fanout > 1:
         graph = flat_services(n_services, mi)
@@ -85,6 +91,9 @@ def build_case(n_requests, n_services, replicas, fanout=1,
         num_limit=n_requests, seed=0,
         use_pallas_tick=use_pallas_interpret,
         pallas_interpret=use_pallas_interpret,
+        network="fabric" if network else "uniform",
+        # ample per-host NICs: the phase runs, the workload doesn't starve
+        nic_egress_mbps=10_000.0, nic_ingress_mbps=10_000.0,
     )
     # Instance speed: each tick's per-instance batch drains in ~0.4 ticks,
     # keeping residence ≈ 2 ticks and utilization < 1 (no blow-up).
@@ -118,18 +127,22 @@ CASES = {
 }
 
 
-def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0) -> dict:
+def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
+                network: bool = False) -> dict:
     """One BENCH_perf.json record: wall seconds + ticks/sec for a Table 2
     case.  ``scale`` shrinks the request count (pallas-interpret runs are
-    orders of magnitude slower than compiled backends)."""
+    orders of magnitude slower than compiled backends).  ``network=True``
+    re-runs the case with the fabric's Transit phase on (case tagged
+    ``<tag>+net``) so the phase's overhead is tracked PR-over-PR."""
     n_requests, n_services, replicas, cpr, fanout = CASES[tag]
     n_requests = max(int(n_requests * scale), 100)
     sim, meta = build_case(n_requests, n_services, replicas, fanout,
                            use_pallas_interpret=(backend
-                                                 == "pallas-interpret"))
+                                                 == "pallas-interpret"),
+                           network=network)
     res = sim.run()
     return dict(
-        case=tag, backend=backend, scale=scale,
+        case=tag + "+net" if network else tag, backend=backend, scale=scale,
         requests=int(res.state.requests.count),
         cloudlets=int(res.state.counters.spawned),
         n_services=n_services, n_instances=meta["n_instances"],

@@ -49,14 +49,48 @@ APIS = [
     ("POST /orders",   "orders",    1.0),
 ]
 
+# Per-edge RPC payloads in MB (request + response lumped), network fabric
+# mode (DESIGN.md §6).  Sized from the public sock-shop API shapes: the
+# catalogue returns full product listings (images metadata — the fat edge),
+# DB round-trips return document sets, control-plane calls (payment auth,
+# shipping hand-off) are near-empty.  Unlisted edges default to 0.01 MB.
+PAYLOADS_MB = {
+    ("front-end", "catalogue"):    0.120,
+    ("front-end", "carts"):        0.030,
+    ("front-end", "user"):         0.020,
+    ("catalogue", "catalogue-db"): 0.150,
+    ("carts", "carts-db"):         0.040,
+    ("user", "user-db"):           0.015,
+    ("orders", "orders-db"):       0.050,
+    ("orders", "carts"):           0.030,
+    ("orders", "user"):            0.015,
+    ("orders", "payment"):         0.002,
+    ("orders", "shipping"):        0.005,
+    ("shipping", "rabbitmq"):      0.005,
+    ("rabbitmq", "queue-master"):  0.005,
+}
+
+# Client→entry request payloads per API (MB): page requests are small;
+# order submissions carry the basket document.
+API_PAYLOADS_MB = {
+    "GET /":          0.004,
+    "GET /catalogue": 0.002,
+    "GET /login":     0.001,
+    "GET /basket":    0.002,
+    "POST /orders":   0.020,
+}
+
 
 def app_spec(mi_scale: float = 1.0) -> dict:
     """The Fig 3a JSON document (as a dict; json.dump-able)."""
     return {
-        "apis": [{"name": n, "entry": e, "weight": w} for n, e, w in APIS],
+        "apis": [{"name": n, "entry": e, "weight": w,
+                  "payload": API_PAYLOADS_MB[n]} for n, e, w in APIS],
         "services": [
             {"name": n, "calls": v["calls"], "mi": v["mi"] * mi_scale,
-             "mi_std": 0.15 * v["mi"] * mi_scale}
+             "mi_std": 0.15 * v["mi"] * mi_scale,
+             "payloads": {callee: mb for (src, callee), mb
+                          in PAYLOADS_MB.items() if src == n}}
             for n, v in SERVICES.items()
         ],
     }
@@ -95,8 +129,15 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
              net_latency_s: float = CALIBRATED["net_latency_s"],
              scaling_policy: int = 0, seed: int = 0,
              max_replicas: int = 4, spawn_rate: float | None = None,
+             placement_policy: int | None = None,
              **param_overrides) -> Simulation:
-    """Build the paper's §6.3 experiment: Locust wait U[5,15] s, 600 s."""
+    """Build the paper's §6.3 experiment: Locust wait U[5,15] s, 600 s.
+
+    Pass ``network="fabric"`` (plus ``nic_egress_mbps``/``nic_ingress_mbps``)
+    to replace the calibrated uniform hop latency with payload transit over
+    the 10-node cluster's NICs (DESIGN.md §6) — e.g. the saturation sweep in
+    examples/network_saturation.py.
+    """
     param_overrides.setdefault("net_latency_s", net_latency_s)
     caps = SimCaps(
         n_clients=max(n_clients, 1),
@@ -126,7 +167,8 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
     vm_ram = np.array([64, 64, 64, 64, 64, 64, 64, 128, 256, 64],
                       np.float32) * 1024.0
     return register(app_spec(mi_scale), instance_spec(share),
-                    caps=caps, params=params, vm_mips=vm_mips, vm_ram=vm_ram)
+                    caps=caps, params=params, vm_mips=vm_mips, vm_ram=vm_ram,
+                    placement_policy=placement_policy)
 
 
 # Paper Fig 10 testbed reference (ms).  Only the 100/300-client values are

@@ -47,6 +47,10 @@ class AppStatic(NamedTuple):
     tmpl_replicas: jnp.ndarray  # [S] i32
     ram_per_cl: jnp.ndarray     # [S] f32
     bytes_per_rpc: jnp.ndarray  # [S] f32
+    payload_mean: jnp.ndarray   # [S, d_max] f32 per-edge RPC payload (MB)
+    payload_std: jnp.ndarray    # [S, d_max] f32
+    api_payload_mean: jnp.ndarray  # [A] f32 client→entry payload (MB)
+    api_payload_std: jnp.ndarray   # [A] f32
 
     @property
     def n_services(self) -> int:
@@ -106,4 +110,8 @@ def build_app(graph: ServiceGraph,
         tmpl_replicas=jnp.asarray(tarr("replicas", np.int32)),
         ram_per_cl=jnp.asarray(tarr("ram_per_cloudlet")),
         bytes_per_rpc=jnp.asarray(tarr("bytes_per_rpc")),
+        payload_mean=jnp.asarray(graph.payload_mean),
+        payload_std=jnp.asarray(graph.payload_std),
+        api_payload_mean=jnp.asarray(graph.api_payload_mean),
+        api_payload_std=jnp.asarray(graph.api_payload_std),
     )

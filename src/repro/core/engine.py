@@ -16,14 +16,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import network as netmod
+from . import policies
 from . import scheduler
 from .app import AppStatic, InstanceTemplate, build_app
 from .generator import client_phase
 from .graph import ServiceGraph
 from .placement import initial_allocation, migrate
 from .scaling import scaling_event
-from .types import (CL_EXEC, CL_WAITING, DynParams, INST_ON, SimCaps,
-                    SimParams, SimState, TickTrace, zeros_state)
+from .types import (CL_EXEC, CL_TRANSIT, CL_WAITING, DynParams, INST_ON,
+                    SimCaps, SimParams, SimState, TickTrace, zeros_state)
 
 
 def make_tick(caps: SimCaps, params: SimParams,
@@ -41,11 +43,26 @@ def make_tick(caps: SimCaps, params: SimParams,
     hoists the cadence decision OUT of its vmap, where a traced cond
     would otherwise degenerate into executing the scaling body every
     tick for every sweep point).
+
+    ``params.network`` is static: ``"uniform"`` builds exactly the legacy
+    load-independent-latency program; ``"fabric"`` inserts the Transit
+    phase (core/network.py) between Generation/Derivative spawns and
+    Dispatching, so RPC payloads contend on host NICs (DESIGN.md §6).
     """
+    if params.network not in ("uniform", "fabric"):
+        raise ValueError(
+            f"SimParams.network must be 'uniform' or 'fabric', "
+            f"got {params.network!r}")
+    network = params.network == "fabric"
 
     def tick(state: SimState, dyn: DynParams, app: AppStatic
              ) -> Tuple[SimState, TickTrace]:
-        rng, k_gen, k_gen2, k_lb, k_der = jax.random.split(state.rng, 5)
+        if network:
+            (rng, k_gen, k_gen2, k_lb, k_der, k_net_g,
+             k_net_d) = jax.random.split(state.rng, 7)
+        else:
+            rng, k_gen, k_gen2, k_lb, k_der = jax.random.split(state.rng, 5)
+            k_net_g = k_net_d = None
         state = state._replace(rng=rng)
 
         # --- Generation (paper Alg 1) ---------------------------------
@@ -53,17 +70,23 @@ def make_tick(caps: SimCaps, params: SimParams,
                            state.requests.count, app.api_cdf, dyn, k_gen)
         state, gen_res = scheduler.gen_spawn(
             state, app, caps, gen.fired, gen.api, gen.wait_proposal, k_gen2,
-            dyn)
+            dyn, params=params, net_rng=k_net_g)
+
+        # --- Transit (fabric mode: NIC fair-share water-filling) --------
+        if network:
+            state = netmod.transit(state, caps, params, dyn)
 
         # --- Dispatching (waiting → execution, load-balanced) ----------
-        state = scheduler.dispatch(state, app, caps, params, dyn, k_lb)
+        state = scheduler.dispatch(state, app, caps, params, dyn, k_lb,
+                                   network=network)
 
         # --- Scheduling (time-shared execution + finish) ----------------
         state, fin_info = scheduler.execute(state, app, caps, params, dyn)
 
         # --- Derivative (spawn successors along the service chain) ------
         if has_edges:  # static: edge-free graphs skip the spawn machinery
-            state = scheduler.derive(state, app, caps, fin_info, k_der)
+            state = scheduler.derive(state, app, caps, fin_info, k_der,
+                                     params=params, net_rng=k_net_d)
 
         # --- Response (critical-path completion, paper §4.3.2) ----------
         state, n_done = scheduler.complete(state, dyn)
@@ -92,6 +115,8 @@ def make_tick(caps: SimCaps, params: SimParams,
                               .astype(jnp.int32)),
             n_exec=jnp.sum((state.cloudlets.status == CL_EXEC)
                            .astype(jnp.int32)),
+            n_transit=jnp.sum((state.cloudlets.status == CL_TRANSIT)
+                              .astype(jnp.int32)),
             used_mips=jnp.sum(state.instances.used_mips),
             active_instances=jnp.sum((state.instances.status == INST_ON)
                                      .astype(jnp.int32)),
@@ -145,7 +170,10 @@ class Simulation:
                  default_template: InstanceTemplate | None = None,
                  vm_mips: np.ndarray | None = None,
                  vm_ram: np.ndarray | None = None,
-                 api_entries=None):
+                 api_entries=None,
+                 host_egress_scale: np.ndarray | None = None,
+                 host_ingress_scale: np.ndarray | None = None,
+                 placement_policy: int | None = None):
         self.graph = graph
         self.caps = caps or SimCaps()
         self.params = params or SimParams()
@@ -159,6 +187,21 @@ class Simulation:
             else np.full(V, 65_536.0), np.float32)
         if len(self.vm_mips) != V or len(self.vm_ram) != V:
             raise ValueError("vm_mips/vm_ram must have n_vms entries")
+        # One NIC-attached host per VM slot (network fabric, DESIGN.md §6);
+        # the scales shape a heterogeneous fabric while the traced
+        # nic_{egress,ingress}_mbps scalars stay sweepable.
+        self.host_egress_scale = np.asarray(
+            host_egress_scale if host_egress_scale is not None
+            else np.ones(V), np.float32)
+        self.host_ingress_scale = np.asarray(
+            host_ingress_scale if host_ingress_scale is not None
+            else np.ones(V), np.float32)
+        if len(self.host_egress_scale) != V \
+                or len(self.host_ingress_scale) != V:
+            raise ValueError("host NIC scales must have n_vms entries")
+        self.placement_policy = (policies.PLACE_MOST_AVAILABLE
+                                 if placement_policy is None
+                                 else placement_policy)
         self._has_edges = bool(np.asarray(graph.n_succ).sum() > 0)
         self._tick = make_tick(self.caps, self.params, self._has_edges)
 
@@ -174,7 +217,8 @@ class Simulation:
             np.asarray(self.app.tmpl_ram),
             np.asarray(self.app.tmpl_limit_ram),
             np.asarray(self.app.tmpl_bw),
-            self.vm_mips, self.vm_ram, self.caps)
+            self.vm_mips, self.vm_ram, self.caps,
+            policy=self.placement_policy)
         instances = state.instances._replace(
             **{k: jnp.asarray(v) for k, v in inst.items()})
         vm_used_m = np.zeros_like(self.vm_mips)
@@ -189,7 +233,11 @@ class Simulation:
             mips_used=jnp.asarray(vm_used_m), ram_used=jnp.asarray(vm_used_r))
         sched = state.sched._replace(inst_of_rank=jnp.asarray(iof),
                                      svc_replicas=jnp.asarray(reps))
-        return state._replace(instances=instances, vms=vms, sched=sched)
+        hosts = state.hosts._replace(
+            egress_scale=jnp.asarray(self.host_egress_scale),
+            ingress_scale=jnp.asarray(self.host_ingress_scale))
+        return state._replace(instances=instances, vms=vms, sched=sched,
+                              hosts=hosts)
 
     # ------------------------------------------------------------------
     # One compiled executable per (static knobs × pytree shapes); swept
@@ -208,7 +256,8 @@ class Simulation:
     # compiled executable.
     _STATIC_FIELDS = ("lb_policy", "share_policy", "scaling_policy",
                       "migration_enabled", "n_ticks", "use_pallas_tick",
-                      "pallas_interpret")
+                      "pallas_interpret", "network", "waterfill_iters",
+                      "net_hist_bin_s")
 
     def _static_key(self) -> tuple:
         p = self.params

@@ -14,6 +14,10 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+# Default per-edge RPC payload (MB) when a graph carries no payload spec —
+# small enough that generous NICs reproduce near-uniform behavior.
+DEFAULT_PAYLOAD_MB = 0.01
+
 
 @dataclasses.dataclass
 class ServiceGraph:
@@ -32,6 +36,10 @@ class ServiceGraph:
     len_mean / len_std : [S] float32 Gaussian cloudlet length in MI
         (paper §4.1.2 — lengths are sampled per cloudlet).
     levels : [S] int32 topological level of each service.
+    payload_mean / payload_std : [S, d_max] float32 Gaussian RPC payload
+        (MB, request+response lumped) per call edge, aligned with ``succ``
+        (network fabric, DESIGN.md §6; -0 rows beyond n_succ are inert).
+    api_payload_mean / api_payload_std : [A] float32 client→entry payload.
     """
 
     names: List[str]
@@ -45,6 +53,28 @@ class ServiceGraph:
     len_mean: np.ndarray
     len_std: np.ndarray
     levels: np.ndarray
+    payload_mean: np.ndarray = None
+    payload_std: np.ndarray = None
+    api_payload_mean: np.ndarray = None
+    api_payload_std: np.ndarray = None
+
+    def __post_init__(self):
+        """Fill default payload tables for graphs built before the network
+        fabric existed (every edge defaults to DEFAULT_PAYLOAD_MB)."""
+        S, D = self.succ.shape if self.succ.size else (len(self.names), 1)
+        A = len(self.api_names)
+        if self.payload_mean is None:
+            self.payload_mean = np.full((S, D), DEFAULT_PAYLOAD_MB,
+                                        np.float32)
+        if self.payload_std is None:
+            self.payload_std = 0.1 * np.asarray(self.payload_mean,
+                                                np.float32)
+        if self.api_payload_mean is None:
+            self.api_payload_mean = np.full((A,), DEFAULT_PAYLOAD_MB,
+                                            np.float32)
+        if self.api_payload_std is None:
+            self.api_payload_std = 0.1 * np.asarray(self.api_payload_mean,
+                                                    np.float32)
 
     # ------------------------------------------------------------------
     @property
@@ -123,6 +153,10 @@ def build_graph(
     len_mean: Dict[str, float],
     len_std: Dict[str, float] | None = None,
     d_max: int | None = None,
+    payloads: Dict[Tuple[str, str], float] | None = None,
+    payload_stds: Dict[Tuple[str, str], float] | None = None,
+    api_payloads: Dict[str, float] | None = None,
+    default_payload_mb: float = DEFAULT_PAYLOAD_MB,
 ) -> ServiceGraph:
     """Construct a :class:`ServiceGraph`.
 
@@ -133,6 +167,10 @@ def build_graph(
     apis : (api_name, entry_service, weight) triples.
     len_mean / len_std : per-service Gaussian cloudlet length (MI).
     d_max : pad successor tables to this out-degree (default: observed max).
+    payloads / payload_stds : (caller, callee) → RPC payload mean/std in MB
+        (network fabric; unlisted edges get ``default_payload_mb`` /
+        10% of the mean).
+    api_payloads : api name → client→entry payload mean in MB.
     """
     names = list(services)
     index = {n: i for i, n in enumerate(names)}
@@ -174,6 +212,28 @@ def build_graph(
         std = np.array([len_std.get(n, 0.1 * len_mean[n]) for n in names],
                        dtype=np.float32)
 
+    # Per-edge payload tables, aligned with the padded succ table.
+    payloads = payloads or {}
+    payload_stds = payload_stds or {}
+    payload_mean = np.full((S, d_out), default_payload_mb, np.float32)
+    payload_std = 0.1 * payload_mean
+    for (src, dst), mb in payloads.items():
+        if src not in index or dst not in index:
+            raise KeyError(f"unknown service in payload edge {src}->{dst}")
+        try:
+            d = succ_lists[index[src]].index(index[dst])
+        except ValueError:
+            raise KeyError(
+                f"payload declared for non-edge {src}->{dst}: add {dst!r} "
+                f"to {src!r}'s calls first") from None
+        payload_mean[index[src], d] = mb
+        payload_std[index[src], d] = payload_stds.get((src, dst), 0.1 * mb)
+    api_payloads = api_payloads or {}
+    api_payload_mean = np.array(
+        [float(api_payloads.get(a[0], default_payload_mb)) for a in apis],
+        np.float32)
+    api_payload_std = 0.1 * api_payload_mean
+
     # Topological levels (longest distance from any root).
     levels = np.zeros(S, dtype=np.int32)
     indeg = n_pred.copy()
@@ -192,6 +252,8 @@ def build_graph(
         names=names, succ=succ, pred=pred, n_succ=n_succ, n_pred=n_pred,
         api_names=api_names, api_entry=api_entry, api_weight=api_weight,
         len_mean=mean, len_std=std, levels=levels,
+        payload_mean=payload_mean, payload_std=payload_std,
+        api_payload_mean=api_payload_mean, api_payload_std=api_payload_std,
     )
     graph.validate()
     return graph

@@ -1,0 +1,200 @@
+"""Network fabric: host NICs, payload transit, fair-share contention.
+
+The paper's central challenge is "frequent inter-service communication",
+but its transport model (and this repo's ``network="uniform"`` degenerate
+mode) is a single load-independent latency per RPC hop.  The fabric mode
+(DESIGN.md §6) makes the network a first-class tick phase:
+
+* every instance is attached to a host NIC (``Instances.host``, co-located
+  with its VM);
+* every RPC carries a Gaussian payload sampled from the service edge it
+  traverses (``AppStatic.payload_mean/std``) and is *addressed* to a
+  replica at spawn time (client-side load balancing — the transfer needs a
+  destination NIC before it can contend);
+* in-flight transfers sit in the stacked cloudlet pool under ``CL_TRANSIT``
+  with ``rem_bytes`` / ``src_host`` columns, and each tick the max-min fair
+  water-filling kernel (``kernels/link_share``) splits every egress and
+  ingress port among its transfers before ``dispatch`` admits the arrivals;
+* intra-host hops take a loopback fast path (spawned directly into the
+  waiting queue — no NIC occupancy, no transit tick).
+
+The phase streams the cloudlet buffer a constant number of times and keeps
+all statistics in small host-table scatters, preserving the one-pass tick
+discipline of DESIGN.md §2.2.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import policies
+from ..kernels.link_share import link_share
+from .app import AppStatic
+from .pool import segment_rank, segment_sum as _segsum
+from .types import (CL_TRANSIT, CL_WAITING, DynParams, INST_ON, SimCaps,
+                    SimParams, SimState)
+
+# Payload floor (MB): Gaussian sampling may go non-positive; a transfer must
+# carry at least one packet so it arrives in finite time.
+MIN_PAYLOAD_MB = 1e-6
+
+# NIC capacities are configured in Mbit/s; transfers account in MByte.
+MBIT_PER_S_TO_MBYTE_PER_S = 1.0 / 8.0
+
+# One-hot accounting matrices ([C, H] / [C, NB]) beat serialized scatters
+# on CPU/TPU only while they fit comfortably in cache; past this element
+# budget the O(C) segment_sum scatter takes over (counts are exact integers
+# and NetStats carries no cross-implementation bit contract, so the switch
+# is value-safe).
+ONE_HOT_BUDGET = 1 << 22
+
+
+def pick_replicas(svc: jnp.ndarray, live: jnp.ndarray, state: SimState,
+                  caps: SimCaps, params: SimParams, rng: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Client-side load balancing at spawn time (fabric mode).
+
+    Each new RPC in the spawn wave is addressed to a replica of its target
+    service before it is sent — the transfer needs a destination NIC to
+    contend on.  Uses the same policy selector as ``dispatch``; round-robin
+    ranks FCFS within the wave via the prefix-sum ``segment_rank`` (no
+    sort).  Returns ([K] target instance ids, -1 where no live replica
+    exists; updated per-service round-robin cursors).
+    """
+    i32 = jnp.int32
+    sched, inst = state.sched, state.instances
+    S = sched.svc_replicas.shape[0]
+    svc_safe = jnp.where(live, svc, 0)
+    replicas = sched.svc_replicas[svc_safe]
+    rep_safe = jnp.maximum(replicas, 1)
+
+    # Shared three-policy rank selection (policies.lb_rank); round-robin
+    # is offset by the FCFS rank within the spawn wave (prefix-sum
+    # segment_rank — no sort), where dispatch uses slot order.
+    offset = (segment_rank(svc_safe, live, S).astype(i32)
+              if params.lb_policy == policies.LB_ROUND_ROBIN
+              else jnp.zeros(svc.shape, i32))
+    rank = policies.lb_rank(
+        params.lb_policy, state.rr, svc_safe, rep_safe, offset, rng,
+        sched.inst_of_rank, inst.status, inst.n_exec, inst.mips)
+
+    target = sched.inst_of_rank[
+        svc_safe, jnp.minimum(rank, caps.max_replicas - 1)]
+    ok = live & (replicas > 0) & (target >= 0)
+    tgt_safe = jnp.where(ok, target, 0)
+    ok = ok & (inst.status[tgt_safe] == INST_ON)
+
+    new_rr = state.rr
+    if params.lb_policy == policies.LB_ROUND_ROBIN:
+        # Advance cursors only for spawns that were actually addressed:
+        # a failed address parks the cloudlet WAITING and dispatch's fresh
+        # LB both serves it and steps the cursor — counting it here too
+        # would double-step and skew replica fairness.
+        counts = _segsum(ok.astype(i32), jnp.where(ok, svc, -1), S)
+        new_rr = (state.rr + counts) % jnp.maximum(sched.svc_replicas, 1)
+    return jnp.where(ok, target, -1), new_rr
+
+
+def sample_payload(mean: jnp.ndarray, std: jnp.ndarray, rng: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Gaussian per-RPC payload (MB), floored at MIN_PAYLOAD_MB."""
+    noise = jax.random.normal(rng, mean.shape, jnp.float32)
+    return jnp.maximum(mean + std * noise, MIN_PAYLOAD_MB)
+
+
+def transit(state: SimState, caps: SimCaps, params: SimParams,
+            dyn: DynParams) -> SimState:
+    """One fabric tick: water-fill every NIC port, advance transfers,
+    deliver arrivals into the waiting queue (Transit phase, DESIGN.md §6).
+
+    NIC capacities must be positive: a zero-capacity port (swept
+    ``nic_*_mbps=0`` or a zero host scale) yields zero rates, and its
+    transfers legitimately never arrive — the run reports zero completions
+    rather than inventing transport.
+    """
+    cl, inst, net = state.cloudlets, state.instances, state.net
+    i32, f32 = jnp.int32, jnp.float32
+    H = state.hosts.egress_scale.shape[0]
+    NB = net.hist.shape[0]
+    dt = dyn.dt
+
+    active = cl.status == CL_TRANSIT
+    inst_safe = jnp.maximum(cl.inst, 0)
+    dst = jnp.where(active & (cl.inst >= 0), inst.host[inst_safe], -1)
+    src = cl.src_host
+    cap_e = (state.hosts.egress_scale * dyn.nic_egress_mbps
+             * MBIT_PER_S_TO_MBYTE_PER_S)
+    cap_i = (state.hosts.ingress_scale * dyn.nic_ingress_mbps
+             * MBIT_PER_S_TO_MBYTE_PER_S)
+
+    rate = link_share(
+        src, dst, active & (dst >= 0), cap_e, cap_i,
+        iters=params.waterfill_iters,
+        use_pallas=None if params.use_pallas_tick else False,
+        interpret=params.pallas_interpret)
+
+    rem = cl.rem_bytes
+    prog = rate * dt
+    # Defensive: a transfer whose target instance vanished (drained between
+    # spawn and now) has no NIC to arrive at — deliver it immediately and
+    # let dispatch re-balance it.
+    stranded = active & (dst < 0)
+    arrived = (active & (rem <= prog) & (rate > 0)) | stranded
+    t_arr = jnp.clip(state.time + rem / jnp.maximum(rate, 1e-9),
+                     state.time, state.time + dt)
+    t_arr = jnp.where(stranded, state.time, t_arr)
+    moved = jnp.where(active, jnp.minimum(prog, rem), 0.0)
+    new_rem = jnp.where(arrived, 0.0,
+                        jnp.where(active, jnp.maximum(rem - prog, 0.0), rem))
+
+    cloudlets = cl.with_cols(
+        status=jnp.where(arrived, CL_WAITING, cl.status),
+        rem_bytes=new_rem)
+
+    # --- per-host accounting ---------------------------------------------
+    # Utilization is goodput-based (bytes moved / port capacity): the
+    # water-fill hands a lone transfer the whole port, so the allocated
+    # rate would read as "saturated" even when only a header crossed.
+    C = src.shape[0]
+    if C * H <= ONE_HOT_BUDGET:     # one-hot masked sums vectorize
+        hosts = jnp.arange(H, dtype=src.dtype)
+        out_mb = jnp.sum(jnp.where((active & (src >= 0))[:, None]
+                                   & (src[:, None] == hosts[None, :]),
+                                   moved[:, None], 0.0), axis=0)
+        in_mb = jnp.sum(jnp.where((active & (dst >= 0))[:, None]
+                                  & (dst[:, None] == hosts[None, :]),
+                                  moved[:, None], 0.0), axis=0)
+    else:                           # huge pools × many hosts: O(C) scatter
+        out_mb = _segsum(moved, jnp.where(active, src, -1), H)
+        in_mb = _segsum(moved, jnp.where(active, dst, -1), H)
+    util_e = out_mb / jnp.maximum(cap_e * dt, 1e-9)
+    util_i = in_mb / jnp.maximum(cap_i * dt, 1e-9)
+
+    # --- transit-time statistics (sub-tick arrival vs spawn time) -------
+    # Stranded deliveries are excluded: their "duration" is time spent
+    # addressed to a dead replica, not fabric crossing time, and would
+    # pollute the percentiles during heavy scale-in churn.
+    real = arrived & ~stranded
+    dur = jnp.where(real, t_arr - cl.arrival, 0.0)
+    bucket = jnp.clip((dur / params.net_hist_bin_s).astype(i32), 0, NB - 1)
+    if C * NB <= ONE_HOT_BUDGET:
+        bins = jnp.arange(NB, dtype=i32)
+        hist = net.hist + jnp.sum(
+            (real[:, None] & (bucket[:, None] == bins[None, :]))
+            .astype(i32), axis=0)
+    else:
+        hist = net.hist + _segsum(
+            jnp.ones((C,), i32), jnp.where(real, bucket, -1), NB)
+    n_arr = jnp.sum(real.astype(i32))
+
+    net = net._replace(
+        bytes_out=net.bytes_out + out_mb,
+        bytes_in=net.bytes_in + in_mb,
+        egress_busy=net.egress_busy + util_e * dt,
+        ingress_busy=net.ingress_busy + util_i * dt,
+        transits=net.transits + n_arr,
+        transit_sum=net.transit_sum + jnp.sum(dur),
+        hist=hist)
+    return state._replace(cloudlets=cloudlets, net=net)

@@ -42,6 +42,7 @@ def initial_allocation(app_replicas: np.ndarray, tmpl_mips: np.ndarray,
         "status": np.zeros(I, np.int32),
         "service": np.full(I, -1, np.int32),
         "vm": np.full(I, -1, np.int32),
+        "host": np.full(I, -1, np.int32),
         "mips": np.zeros(I, np.float32),
         "limit_mips": np.zeros(I, np.float32),
         "request_mips": np.zeros(I, np.float32),
@@ -69,6 +70,8 @@ def initial_allocation(app_replicas: np.ndarray, tmpl_mips: np.ndarray,
                 order = np.arange(V)
             elif policy == policies.PLACE_BEST_FIT:
                 order = np.argsort(free_mips)            # tightest fit first
+            elif policy == policies.PLACE_SPREAD:
+                order = np.roll(np.arange(V), -slot)     # cycle hosts
             else:  # PLACE_MOST_AVAILABLE (paper default)
                 order = np.argsort(-free_mips)
             placed = False
@@ -78,6 +81,7 @@ def initial_allocation(app_replicas: np.ndarray, tmpl_mips: np.ndarray,
                     inst["status"][slot] = INST_ON
                     inst["service"][slot] = s
                     inst["vm"][slot] = v
+                    inst["host"][slot] = v     # NIC attachment = VM's node
                     inst["mips"][slot] = tmpl_mips[s]
                     inst["limit_mips"][slot] = tmpl_limit_mips[s]
                     inst["request_mips"][slot] = tmpl_mips[s]
@@ -129,8 +133,10 @@ def migrate(state: SimState, app: AppStatic, caps: SimCaps,
         mips_used=vms.mips_used.at[hot].add(-dm).at[tgt].add(dm),
         ram_used=vms.ram_used.at[hot].add(-dr).at[tgt].add(dr),
     )
+    new_vm = jnp.where(do, tgt, inst.vm[mover])
     inst = inst._replace(
-        vm=inst.vm.at[mover].set(jnp.where(do, tgt, inst.vm[mover])))
+        vm=inst.vm.at[mover].set(new_vm),
+        host=inst.host.at[mover].set(new_vm))  # the NIC moves with the VM
     counters = state.counters._replace(
         migrations=state.counters.migrations + do.astype(jnp.int32))
     return state._replace(instances=inst, vms=vms, counters=counters)

@@ -11,7 +11,10 @@ from __future__ import annotations
 
 from typing import Protocol
 
+import jax
 import jax.numpy as jnp
+
+from .types import INST_ON
 
 # --- load balancing (paper §4.2: "maximum idle resources or random") ------
 LB_ROUND_ROBIN = 0
@@ -32,11 +35,45 @@ SCALE_HYBRID = 3       # HS first, VS when replica cap reached (beyond-paper)
 PLACE_MOST_AVAILABLE = 0   # sorted queue by descending free PEs (paper)
 PLACE_FIRST_FIT = 1
 PLACE_BEST_FIT = 2
+PLACE_SPREAD = 3           # k8s-style topology spread: cycle the VM list so
+#                            consecutive instances land on different hosts —
+#                            creates cross-host RPC edges for the network
+#                            fabric (DESIGN.md §6) instead of piling onto
+#                            the largest node
 
 LB_NAMES = {LB_ROUND_ROBIN: "round_robin", LB_RANDOM: "random",
             LB_LEAST_LOADED: "least_loaded"}
 SCALE_NAMES = {SCALE_NONE: "NS", SCALE_HORIZONTAL: "HS",
                SCALE_VERTICAL: "VS", SCALE_HYBRID: "HYBRID"}
+
+
+def lb_rank(lb_policy: int, rr: jnp.ndarray, svc: jnp.ndarray,
+            rep_safe: jnp.ndarray, offset: jnp.ndarray, rng,
+            inst_of_rank: jnp.ndarray, inst_status: jnp.ndarray,
+            inst_n_exec: jnp.ndarray, inst_mips: jnp.ndarray
+            ) -> jnp.ndarray:
+    """Replica-rank selection shared by ``scheduler.dispatch`` (slot-order
+    ``offset``) and the fabric's spawn-time addressing
+    (``network.pick_replicas``, FCFS wave-rank ``offset``) — one source of
+    truth for the three built-in LB policies.
+
+    ``svc`` must be pre-sanitized (masked lanes pointing at a valid id);
+    returns the per-lane replica rank (callers map it through
+    ``inst_of_rank`` and apply their own validity masks).
+    """
+    i32 = jnp.int32
+    if lb_policy == LB_ROUND_ROBIN:
+        return (rr[svc] + offset) % rep_safe
+    if lb_policy == LB_RANDOM:
+        return jax.random.randint(rng, svc.shape, 0, 1 << 30) % rep_safe
+    # LB_LEAST_LOADED: per service, the replica with the lowest
+    # executing-per-mips load among its ON instances.
+    valid = inst_of_rank >= 0
+    iof_safe = jnp.where(valid, inst_of_rank, 0)
+    load = inst_n_exec[iof_safe] / jnp.maximum(inst_mips[iof_safe], 1e-6)
+    load = jnp.where(valid & (inst_status[iof_safe] == INST_ON),
+                     load, jnp.inf)
+    return jnp.argmin(load, axis=1).astype(i32)[svc]
 
 
 class LoadBalancer(Protocol):

@@ -13,6 +13,17 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 
+def segment_sum(data: jnp.ndarray, ids: jnp.ndarray, n: int,
+                valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Scatter-add ``data`` into ``n`` segments, dropping -1/invalid ids —
+    the drop-semantics workhorse of the tick phases (scheduler, network)."""
+    if valid is None:
+        valid = ids >= 0
+    idx = jnp.where(valid, ids, n)
+    return jnp.zeros((n,), data.dtype).at[idx].add(
+        jnp.where(valid, data, jnp.zeros_like(data)), mode="drop")
+
+
 class SlotAssignment(NamedTuple):
     dst: jnp.ndarray       # [K] i32 destination pool slot for rank r
     src: jnp.ndarray       # [K] i32 source descriptor index for rank r

@@ -47,9 +47,36 @@ class QoSReport:
     # engine
     wall_time_s: float
     compile_time_s: float
+    # network fabric (zeros in network="uniform" mode, DESIGN.md §6)
+    net_transits: int = 0             # completed transfers
+    net_bytes_mb: float = 0.0         # total MB moved on the fabric
+    avg_transit_ms: float = 0.0
+    transit_p50_ms: float = 0.0       # percentiles from the histogram:
+    transit_p95_ms: float = 0.0       # bucket upper edge, CAPPED at the
+    transit_p99_ms: float = 0.0       # histogram range (buckets × bin)
+    avg_egress_util: float = 0.0      # time-mean NIC utilization over hosts
+    avg_ingress_util: float = 0.0
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
+
+
+def transit_percentile_ms(hist: np.ndarray, bin_s: float, p: float) -> float:
+    """p-th percentile of the transit-time distribution from its histogram.
+
+    Reported at the bucket's upper edge — conservative *within* the
+    histogram range.  Durations beyond ``len(hist) * bin_s`` land in the
+    overflow (last) bucket, so a percentile falling there reads as the
+    range cap and under-states a heavily saturated tail; widen
+    ``SimCaps.net_hist_buckets`` / ``SimParams.net_hist_bin_s`` when the
+    cap is hit (``transit_p99_ms == net_hist_buckets * bin * 1000``)."""
+    hist = np.asarray(hist, np.int64)
+    n = int(hist.sum())
+    if n == 0:
+        return 0.0
+    cdf = np.cumsum(hist)
+    b = int(np.searchsorted(cdf, np.ceil(p / 100.0 * n), side="left"))
+    return (b + 1) * bin_s * 1000.0
 
 
 def summarize(sim: Simulation, result: SimResult,
@@ -90,6 +117,15 @@ def summarize(sim: Simulation, result: SimResult,
     def pct(p):
         return float(np.percentile(resp, p)) if len(resp) else 0.0
 
+    # --- network fabric (all-zero in uniform mode) -----------------------
+    net = st.net
+    transits = int(net.transits)
+    # every transfer has a destination NIC, so the ingress sum is the
+    # total MB moved (client uploads have no egress side)
+    bytes_mb = float(np.asarray(net.bytes_in).sum())
+    bin_s = params.net_hist_bin_s
+    tp = lambda p: transit_percentile_ms(np.asarray(net.hist), bin_s, p)
+
     completed = int(st.counters.completed)
     return QoSReport(
         generated_requests=int(st.requests.count),
@@ -116,6 +152,14 @@ def summarize(sim: Simulation, result: SimResult,
         migrations=int(st.counters.migrations),
         wall_time_s=result.wall_time_s,
         compile_time_s=result.compile_time_s,
+        net_transits=transits,
+        net_bytes_mb=bytes_mb,
+        avg_transit_ms=float(net.transit_sum) / max(transits, 1) * 1000.0,
+        transit_p50_ms=tp(50), transit_p95_ms=tp(95), transit_p99_ms=tp(99),
+        avg_egress_util=float(np.asarray(net.egress_busy).mean())
+        / max(sim_time, 1e-9),
+        avg_ingress_util=float(np.asarray(net.ingress_busy).mean())
+        / max(sim_time, 1e-9),
     )
 
 

@@ -41,7 +41,12 @@ def load_instances_yaml(path_or_dict) -> Dict[str, Any]:
 
 def graph_from_spec(spec: Dict[str, Any],
                     default_mi: float = 500.0) -> ServiceGraph:
-    """Build the service DAG from the Fig 3a JSON document."""
+    """Build the service DAG from the Fig 3a JSON document.
+
+    Network-fabric extension (DESIGN.md §6): a service may carry a
+    ``"payloads": {callee: MB}`` map (per-call-edge RPC payload mean) and
+    an API a ``"payload": MB`` scalar (client→entry request payload).
+    """
     services = spec["services"]
     names = [s["name"] for s in services]
     calls = {s["name"]: list(s.get("calls", [])) for s in services}
@@ -50,7 +55,14 @@ def graph_from_spec(spec: Dict[str, Any],
                for s in services}
     apis = [(a["name"], a["entry"], float(a.get("weight", 1.0)))
             for a in spec["apis"]]
-    return build_graph(names, calls, apis, len_mean, len_std)
+    payloads = {(s["name"], callee): float(mb)
+                for s in services
+                for callee, mb in s.get("payloads", {}).items()}
+    api_payloads = {a["name"]: float(a["payload"])
+                    for a in spec["apis"] if "payload" in a}
+    return build_graph(names, calls, apis, len_mean, len_std,
+                       payloads=payloads or None,
+                       api_payloads=api_payloads or None)
 
 
 def templates_from_spec(spec: Dict[str, Any],
@@ -78,8 +90,9 @@ def templates_from_spec(spec: Dict[str, Any],
 
 
 def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
-             params: SimParams | None = None, vm_mips=None, vm_ram=None
-             ) -> Simulation:
+             params: SimParams | None = None, vm_mips=None, vm_ram=None,
+             host_egress_scale=None, host_ingress_scale=None,
+             placement_policy=None) -> Simulation:
     """One-call entity registration (paper Fig 4 ``Register`` class)."""
     spec = load_app_json(app_spec)
     graph = graph_from_spec(spec)
@@ -88,4 +101,7 @@ def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
         inst_spec = load_instances_yaml(instance_spec)
         templates = templates_from_spec(inst_spec, graph)
     return Simulation(graph, caps=caps, params=params, templates=templates,
-                      vm_mips=vm_mips, vm_ram=vm_ram)
+                      vm_mips=vm_mips, vm_ram=vm_ram,
+                      host_egress_scale=host_egress_scale,
+                      host_ingress_scale=host_ingress_scale,
+                      placement_policy=placement_policy)

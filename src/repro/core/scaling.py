@@ -77,6 +77,7 @@ def _scale_out(state: SimState, s, app: AppStatic) -> SimState:
             status=st.instances.status.at[slot].set(INST_ON),
             service=st.instances.service.at[slot].set(s),
             vm=st.instances.vm.at[slot].set(vm),
+            host=st.instances.host.at[slot].set(vm),
             mips=st.instances.mips.at[slot].set(need_mips),
             limit_mips=st.instances.limit_mips.at[slot].set(
                 app.tmpl_limit_mips[s]),

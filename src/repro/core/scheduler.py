@@ -3,6 +3,8 @@
 Every tick runs, in order:
 
   ``gen_spawn``   — new requests fire root cloudlets at API entry services
+  ``transit``     — (fabric mode, core/network.py) in-flight payloads share
+                    host NICs max-min fairly; arrivals join the waiting queue
   ``dispatch``    — waiting→execution transition with load balancing
   ``execute``     — time-shared progress + finish detection + usage history
   ``derive``      — finished cloudlets spawn successors along the DAG
@@ -27,22 +29,15 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import network as netmod
 from . import policies
 from ..kernels.cloudlet_step import cloudlet_finish as _cloudlet_finish_op
 from .app import AppStatic
-from .pool import assign_free_slots, scatter_pool, segment_rank
-from .types import (CL_EXEC, CL_FREE, CL_WAITING, Cloudlets, DynParams,
-                    INST_DRAIN, INST_FREE, INST_ON, SimCaps, SimParams,
-                    SimState)
-
-
-def _segsum(data, ids, n, valid=None):
-    """Scatter-add with -1/invalid ids dropped."""
-    if valid is None:
-        valid = ids >= 0
-    idx = jnp.where(valid, ids, n)
-    return jnp.zeros((n,), data.dtype).at[idx].add(
-        jnp.where(valid, data, jnp.zeros_like(data)), mode="drop")
+from .pool import (assign_free_slots, scatter_pool, segment_rank,
+                   segment_sum as _segsum)
+from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING, Cloudlets,
+                    DynParams, INST_DRAIN, INST_FREE, INST_ON, SimCaps,
+                    SimParams, SimState)
 
 
 # ===========================================================================
@@ -55,9 +50,16 @@ class GenResult(NamedTuple):
 
 def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
               fired: jnp.ndarray, api: jnp.ndarray,
-              wait_proposal: jnp.ndarray, rng: jnp.ndarray, dyn: DynParams
+              wait_proposal: jnp.ndarray, rng: jnp.ndarray, dyn: DynParams,
+              params: SimParams | None = None, net_rng=None
               ) -> Tuple[SimState, GenResult]:
-    """Allocate request slots for fired clients and spawn root cloudlets."""
+    """Allocate request slots for fired clients and spawn root cloudlets.
+
+    With ``net_rng`` set (network fabric mode, DESIGN.md §6) each root
+    cloudlet is addressed to a replica and enters TRANSIT carrying the
+    API's request payload — the client is external, so the transfer
+    contends only on the destination host's ingress NIC (src_host = -1).
+    """
     req, cl, ctr = state.requests, state.cloudlets, state.counters
     R = req.api.shape[0]
     i32, f32 = jnp.int32, jnp.float32
@@ -119,14 +121,34 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
     length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
                          1.0)
 
+    if net_rng is None:                  # uniform mode (degenerate network)
+        status_new, inst_new = CL_WAITING, -1
+        src_host_new, bytes_new = -1, 0.0
+        rr = state.rr
+    else:                                # fabric mode: address + payload
+        k_lb, k_pay = jax.random.split(net_rng)
+        tgt, rr = netmod.pick_replicas(svc_new, asg.live, state, caps,
+                                       params, k_lb)
+        api_flat = jnp.broadcast_to(api_r[:, None], (K, E)).reshape(-1)
+        api_new = api_flat[asg.src]
+        payload = netmod.sample_payload(app.api_payload_mean[api_new],
+                                        app.api_payload_std[api_new], k_pay)
+        # No live replica yet → park in the waiting queue (dispatch
+        # re-balances); clients are external, so no loopback fast path.
+        status_new = jnp.where(tgt >= 0, CL_TRANSIT, CL_WAITING)
+        inst_new = tgt
+        src_host_new = -1
+        bytes_new = jnp.where(tgt >= 0, payload, 0.0)
+
     # Fused spawn write: every i32 field in one scatter, every f32 field
     # in the other.
     ints, flts = scatter_pool(
         cl.ints, cl.flts, asg,
-        status=CL_WAITING, req=req_new, service=svc_new, inst=-1,
-        wait_ticks=0, depth=0,
+        status=status_new, req=req_new, service=svc_new, inst=inst_new,
+        wait_ticks=0, depth=0, src_host=src_host_new,
         length=length, rem=length,
-        arrival=jnp.full((Ka,), 0.0, f32) + state.time, start=-1.0)
+        arrival=jnp.full((Ka,), 0.0, f32) + state.time, start=-1.0,
+        rem_bytes=bytes_new)
     cloudlets = Cloudlets(ints=ints, flts=flts)
 
     # direct scatter-adds: no [R]-sized temporaries on the spawn path
@@ -141,7 +163,7 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
         dropped_requests=ctr.dropped_requests + n_pool_drop,
     )
     state = state._replace(
-        clients=state.clients._replace(wait=new_wait),
+        rr=rr, clients=state.clients._replace(wait=new_wait),
         requests=requests, cloudlets=cloudlets, counters=counters)
     return state, GenResult(n_new_requests=n_accept)
 
@@ -151,40 +173,58 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
 # ===========================================================================
 
 def dispatch(state: SimState, app: AppStatic, caps: SimCaps,
-             params: SimParams, dyn: DynParams, rng: jnp.ndarray) -> SimState:
+             params: SimParams, dyn: DynParams, rng: jnp.ndarray,
+             network: bool = False) -> SimState:
     cl, inst, sched = state.cloudlets, state.instances, state.sched
     C = cl.status.shape[0]
     I = inst.status.shape[0]
     S = app.n_services
     i32 = jnp.int32
 
-    # An RPC hop must traverse the network before it may be scheduled
-    # (net_latency models client→service and service→service transport).
-    waiting = (cl.status == CL_WAITING) & \
-        (state.time + 1e-6 >= cl.arrival + dyn.net_latency)
+    if network:
+        # Fabric mode: transport is modeled by the Transit phase — a
+        # waiting cloudlet has already crossed the network (or took the
+        # loopback fast path) and is usually pre-addressed to a replica.
+        waiting = cl.status == CL_WAITING
+    else:
+        # An RPC hop must traverse the network before it may be scheduled
+        # (net_latency models client→service and service→service
+        # transport) — the load-independent degenerate mode.
+        waiting = (cl.status == CL_WAITING) & \
+            (state.time + 1e-6 >= cl.arrival + dyn.net_latency)
     svc = jnp.where(waiting, cl.service, 0)
     replicas = sched.svc_replicas[svc]                      # [C]
     has_rep = waiting & (replicas > 0)
     rep_safe = jnp.maximum(replicas, 1)
 
-    if params.lb_policy == policies.LB_ROUND_ROBIN:
-        rank = (state.rr[svc] + jnp.arange(C, dtype=i32)) % rep_safe
-    elif params.lb_policy == policies.LB_RANDOM:
-        rank = jax.random.randint(rng, (C,), 0, 1 << 30) % rep_safe
-    else:  # LB_LEAST_LOADED: per service, replica with max idle mips
-        iof = sched.inst_of_rank                            # [S, R_max]
-        valid = iof >= 0
-        iof_safe = jnp.where(valid, iof, 0)
-        load = inst.n_exec[iof_safe] / jnp.maximum(inst.mips[iof_safe], 1e-6)
-        load = jnp.where(valid & (inst.status[iof_safe] == INST_ON),
-                         load, jnp.inf)
-        best = jnp.argmin(load, axis=1).astype(i32)         # [S]
-        rank = best[svc]
+    # Shared three-policy rank selection (policies.lb_rank) — dispatch
+    # offsets round-robin by slot order; the fabric's spawn-time
+    # addressing (network.pick_replicas) uses the same helper with an
+    # FCFS wave-rank offset.
+    rank = policies.lb_rank(
+        params.lb_policy, state.rr, svc, rep_safe,
+        jnp.arange(C, dtype=i32), rng,
+        sched.inst_of_rank, inst.status, inst.n_exec, inst.mips)
 
     target = sched.inst_of_rank[svc, jnp.minimum(rank, caps.max_replicas - 1)]
     ok = has_rep & (target >= 0)
     tgt_safe = jnp.where(ok, target, 0)
     ok = ok & (inst.status[tgt_safe] == INST_ON)
+
+    if network:
+        # Honor the spawn-time address when the replica is still ON and
+        # still serves this cloudlet's service (the slot may have been
+        # freed and re-bound by scale-in/out while the payload was in
+        # flight); otherwise fall through to the fresh load-balancing
+        # decision computed above.
+        pre = cl.inst
+        pre_safe = jnp.maximum(pre, 0)
+        use_pre = (waiting & (pre >= 0)
+                   & (inst.status[pre_safe] == INST_ON)
+                   & (inst.service[pre_safe] == cl.service))
+        target = jnp.where(use_pre, pre, target)
+        ok = ok | use_pre
+        tgt_safe = jnp.where(ok, target, 0)
 
     if params.max_concurrent > 0:
         # Space-shared admission: FCFS rank within the target instance
@@ -203,7 +243,16 @@ def dispatch(state: SimState, app: AppStatic, caps: SimCaps,
     # the per-service dispatch counts for the round-robin cursors.
     admit_per_inst = _segsum(admit.astype(i32),
                              jnp.where(admit, target, -1), I)
-    disp_per_svc = _segsum(admit_per_inst, inst.service, S)
+    if network:
+        # Pre-addressed cloudlets already advanced the cursor at spawn
+        # (pick_replicas); counting them again here would step the cursor
+        # twice per RPC and pin round-robin traffic to one replica.
+        lb_admit = admit & ~use_pre
+        lb_per_inst = _segsum(lb_admit.astype(i32),
+                              jnp.where(lb_admit, target, -1), I)
+        disp_per_svc = _segsum(lb_per_inst, inst.service, S)
+    else:
+        disp_per_svc = _segsum(admit_per_inst, inst.service, S)
     rr = (state.rr + disp_per_svc) % jnp.maximum(sched.svc_replicas, 1)
 
     cloudlets = cl.with_cols(
@@ -333,6 +382,7 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
         status=jnp.where(drain_done, INST_FREE, inst.status),
         service=jnp.where(drain_done, -1, inst.service),
         vm=jnp.where(drain_done, -1, inst.vm),
+        host=jnp.where(drain_done, -1, inst.host),
         mips=jnp.where(drain_done, 0.0, inst.mips),
         ram=jnp.where(drain_done, 0.0, inst.ram),
         n_exec=n_exec_after,
@@ -355,7 +405,8 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
 # ===========================================================================
 
 def derive(state: SimState, app: AppStatic, caps: SimCaps,
-           info: FinishInfo, rng: jnp.ndarray) -> SimState:
+           info: FinishInfo, rng: jnp.ndarray,
+           params: SimParams | None = None, net_rng=None) -> SimState:
     cl, req, ctr = state.cloudlets, state.requests, state.counters
     C = cl.status.shape[0]
     R = req.api.shape[0]
@@ -383,12 +434,43 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
     length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
                          1.0)
 
+    if net_rng is None:                  # uniform mode (degenerate network)
+        status_new, inst_new = CL_WAITING, -1
+        src_host_new, bytes_new = -1, 0.0
+        rr = state.rr
+    else:                                # fabric mode: address + payload
+        k_lb, k_pay = jax.random.split(net_rng)
+        tgt, rr = netmod.pick_replicas(svc_new, asg.live, state, caps,
+                                       params, k_lb)
+        # Edge payload: row = parent service, column = successor slot.
+        psvc_new = jnp.broadcast_to(parent_svc[:, None],
+                                    (C, D)).reshape(-1)[asg.src]
+        slot_new = (asg.src % D).astype(i32)
+        payload = netmod.sample_payload(app.payload_mean[psvc_new, slot_new],
+                                        app.payload_std[psvc_new, slot_new],
+                                        k_pay)
+        pin_new = pin_flat[asg.src]
+        src_host = jnp.where(pin_new >= 0,
+                             state.instances.host[jnp.maximum(pin_new, 0)],
+                             -1)
+        dst_host = jnp.where(tgt >= 0,
+                             state.instances.host[jnp.maximum(tgt, 0)], -1)
+        # Loopback fast path: co-located hops never touch a NIC — they
+        # land directly in the waiting queue at the parent's finish time.
+        loop = (tgt >= 0) & (src_host >= 0) & (src_host == dst_host)
+        in_transit = (tgt >= 0) & ~loop
+        status_new = jnp.where(in_transit, CL_TRANSIT, CL_WAITING)
+        inst_new = tgt
+        src_host_new = jnp.where(in_transit, src_host, -1)
+        bytes_new = jnp.where(in_transit, payload, 0.0)
+
     # Fused spawn write: two scatters for the whole successor wave.
     ints, flts = scatter_pool(
         cl.ints, cl.flts, asg,
-        status=CL_WAITING, req=req_new, service=svc_new, inst=-1,
-        wait_ticks=0, depth=dep_new,
-        length=length, rem=length, arrival=tf_new, start=-1.0)
+        status=status_new, req=req_new, service=svc_new, inst=inst_new,
+        wait_ticks=0, depth=dep_new, src_host=src_host_new,
+        length=length, rem=length, arrival=tf_new, start=-1.0,
+        rem_bytes=bytes_new)
     cloudlets = Cloudlets(ints=ints, flts=flts)
 
     rdst = jnp.where(asg.live, req_new, R)
@@ -407,7 +489,7 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
     counters = ctr._replace(
         spawned=ctr.spawned + asg.n_assigned,
         dropped_cloudlets=ctr.dropped_cloudlets + asg.n_dropped)
-    return state._replace(cloudlets=cloudlets, requests=requests,
+    return state._replace(rr=rr, cloudlets=cloudlets, requests=requests,
                           instances=instances, counters=counters)
 
 

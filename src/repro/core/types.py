@@ -28,6 +28,7 @@ import numpy as np
 CL_FREE = 0       # slot unused (or folded into the "finished" aggregate)
 CL_WAITING = 1    # in the waiting queue
 CL_EXEC = 2       # in the execution queue
+CL_TRANSIT = 3    # RPC payload in flight on the network fabric (§6)
 
 # Instance status codes.
 INST_FREE = 0     # slot unused
@@ -48,6 +49,7 @@ class SimCaps:
     max_replicas: int = 8         # per-service replica cap (HS)
     k_fire: int = 0               # max requests admitted per tick (0 = Nc);
                                   # over-budget clients retry next tick
+    net_hist_buckets: int = 64    # transit-time histogram resolution (§6)
 
     def validate(self) -> None:
         for f in dataclasses.fields(self):
@@ -77,6 +79,20 @@ class SimParams:
     share_policy: int = 0         # policies.SHARE_* (equal time slice)
     max_concurrent: int = 0       # 0 = pure time sharing (unbounded)
     net_latency_s: float = 0.0    # per-RPC-hop network latency (seconds)
+
+    # --- network fabric (DESIGN.md §6) -----------------------------------
+    network: str = "uniform"      # "uniform": load-independent net_latency_s
+                                  # per hop (the legacy degenerate mode);
+                                  # "fabric": payloads transit host NICs with
+                                  # max-min fair bandwidth contention
+    nic_egress_mbps: float = 1000.0   # per-host NIC egress capacity
+    nic_ingress_mbps: float = 1000.0  # per-host NIC ingress capacity
+    waterfill_iters: int = 2      # water-filling freeze rounds (static:
+                                  # exact max-min for ≤ this many bottleneck
+                                  # levels, conservative — never
+                                  # oversubscribing — beyond; raise for
+                                  # deep multi-bottleneck fabrics)
+    net_hist_bin_s: float = 0.01  # transit-time histogram bin width (s)
 
     # --- scaling (paper §5.3) -------------------------------------------
     scaling_policy: int = 0       # policies.SCALE_* (NS default)
@@ -140,6 +156,8 @@ class DynParams(NamedTuple):
     net_latency: jnp.ndarray
     idle_mips_frac: jnp.ndarray
     vs_overhead_frac: jnp.ndarray
+    nic_egress_mbps: jnp.ndarray
+    nic_ingress_mbps: jnp.ndarray
 
     @staticmethod
     def from_params(p: "SimParams") -> "DynParams":
@@ -156,7 +174,9 @@ class DynParams(NamedTuple):
             util_ema=f(p.util_ema), mig_vm_util_hi=f(p.mig_vm_util_hi),
             slo_ms=f(p.slo_ms), net_latency=f(p.net_latency_s),
             idle_mips_frac=f(p.idle_mips_frac),
-            vs_overhead_frac=f(p.vs_overhead_frac))
+            vs_overhead_frac=f(p.vs_overhead_frac),
+            nic_egress_mbps=f(p.nic_egress_mbps),
+            nic_ingress_mbps=f(p.nic_ingress_mbps))
 
 
 class Clients(NamedTuple):
@@ -183,8 +203,9 @@ class Requests(NamedTuple):
 # so spawning writes the whole pool with TWO row scatters instead of one
 # scatter per field.  Order here is the storage order — keep in sync with
 # the property accessors below and `zeros_state`.
-CL_I_FIELDS = ("status", "req", "service", "inst", "wait_ticks", "depth")
-CL_F_FIELDS = ("length", "rem", "arrival", "start")
+CL_I_FIELDS = ("status", "req", "service", "inst", "wait_ticks", "depth",
+               "src_host")
+CL_F_FIELDS = ("length", "rem", "arrival", "start", "rem_bytes")
 CL_I_IDX = {n: i for i, n in enumerate(CL_I_FIELDS)}
 CL_F_IDX = {n: i for i, n in enumerate(CL_F_FIELDS)}
 
@@ -200,14 +221,16 @@ class Cloudlets(NamedTuple):
       ints[:, 3] inst       i32 assigned instance (-1 = unassigned)
       ints[:, 4] wait_ticks i32 ticks spent in the waiting queue
       ints[:, 5] depth      i32 hops from the root cloudlet
+      ints[:, 6] src_host   i32 transfer source host (-1 = client / none)
       flts[:, 0] length     f32 total MI (Gaussian, paper §4.1.2)
       flts[:, 1] rem        f32 remaining MI
       flts[:, 2] arrival    f32 seconds
       flts[:, 3] start      f32 first-execution time (-1 = not yet)
+      flts[:, 4] rem_bytes  f32 MB still in flight (TRANSIT status, §6)
     """
 
-    ints: jnp.ndarray        # [C, 6] i32
-    flts: jnp.ndarray        # [C, 4] f32
+    ints: jnp.ndarray        # [C, 7] i32
+    flts: jnp.ndarray        # [C, 5] f32
 
     @property
     def status(self) -> jnp.ndarray:
@@ -234,6 +257,10 @@ class Cloudlets(NamedTuple):
         return self.ints[:, 5]
 
     @property
+    def src_host(self) -> jnp.ndarray:
+        return self.ints[:, 6]
+
+    @property
     def length(self) -> jnp.ndarray:
         return self.flts[:, 0]
 
@@ -248,6 +275,10 @@ class Cloudlets(NamedTuple):
     @property
     def start(self) -> jnp.ndarray:
         return self.flts[:, 3]
+
+    @property
+    def rem_bytes(self) -> jnp.ndarray:
+        return self.flts[:, 4]
 
     def with_cols(self, **cols) -> "Cloudlets":
         """Replace whole [C] field columns by name (dispatch/execute path);
@@ -269,6 +300,8 @@ class Instances(NamedTuple):
     status: jnp.ndarray      # [I] i32 INST_*
     service: jnp.ndarray     # [I] i32 (-1 on free slots)
     vm: jnp.ndarray          # [I] i32
+    host: jnp.ndarray        # [I] i32 physical host (NIC attachment, §6);
+    #                          co-located with the VM, moves on migration
     mips: jnp.ndarray        # [I] f32 current CPU allocation (MI/s)
     limit_mips: jnp.ndarray  # [I] f32 vertical-scaling cap ("limits.share")
     request_mips: jnp.ndarray# [I] f32 baseline request ("requests.share")
@@ -289,6 +322,33 @@ class VMs(NamedTuple):
     mips_used: jnp.ndarray   # [V] f32 allocated to instances
     ram: jnp.ndarray         # [V] f32
     ram_used: jnp.ndarray    # [V] f32
+
+
+class Hosts(NamedTuple):
+    """Per-host NIC description (network fabric, DESIGN.md §6).
+
+    One host per VM slot (host id = vm id).  Effective port capacity is
+    ``scale * dyn.nic_{egress,ingress}_mbps`` so heterogeneous clusters keep
+    their shape while sweeps scale the whole fabric through one traced
+    scalar.
+    """
+
+    egress_scale: jnp.ndarray    # [H] f32 NIC egress capacity multiplier
+    ingress_scale: jnp.ndarray   # [H] f32 NIC ingress capacity multiplier
+
+
+class NetStats(NamedTuple):
+    """Network-fabric usage history (bytes moved, link utilization,
+    transit-time distribution) — all zeros in ``network="uniform"`` mode."""
+
+    bytes_out: jnp.ndarray     # [H] f32 MB egressed per host
+    bytes_in: jnp.ndarray      # [H] f32 MB ingressed per host
+    egress_busy: jnp.ndarray   # [H] f32 ∫ egress utilization dt (seconds)
+    ingress_busy: jnp.ndarray  # [H] f32 ∫ ingress utilization dt
+    transits: jnp.ndarray      # scalar i32 completed transfers
+    transit_sum: jnp.ndarray   # scalar f32 Σ transit durations (s)
+    hist: jnp.ndarray          # [NB] i32 transit-time histogram
+    #                            (bin = net_hist_bin_s; last bin = overflow)
 
 
 class SchedState(NamedTuple):
@@ -339,6 +399,8 @@ class SimState(NamedTuple):
     cloudlets: Cloudlets
     instances: Instances
     vms: VMs
+    hosts: Hosts
+    net: NetStats
     sched: SchedState
     svc_stats: SvcStats
     counters: Counters
@@ -351,6 +413,7 @@ class TickTrace(NamedTuple):
     generated: jnp.ndarray      # requests generated this tick
     n_waiting: jnp.ndarray      # cloudlets in waiting queue
     n_exec: jnp.ndarray         # cloudlets in execution queue
+    n_transit: jnp.ndarray      # transfers in flight on the fabric (§6)
     used_mips: jnp.ndarray      # Σ instance used mips
     active_instances: jnp.ndarray
     active_clients: jnp.ndarray
@@ -383,13 +446,16 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1
         ),
         cloudlets=Cloudlets(
             # column init values follow CL_I_FIELDS / CL_F_FIELDS order
-            ints=jnp.tile(jnp.asarray([[0, -1, -1, -1, 0, 0]], i32), (C, 1)),
-            flts=jnp.tile(jnp.asarray([[0.0, 0.0, 0.0, -1.0]], f32), (C, 1)),
+            ints=jnp.tile(jnp.asarray([[0, -1, -1, -1, 0, 0, -1]], i32),
+                          (C, 1)),
+            flts=jnp.tile(jnp.asarray([[0.0, 0.0, 0.0, -1.0, 0.0]], f32),
+                          (C, 1)),
         ),
         instances=Instances(
             status=jnp.zeros((I,), i32),
             service=jnp.full((I,), -1, i32),
             vm=jnp.full((I,), -1, i32),
+            host=jnp.full((I,), -1, i32),
             mips=jnp.zeros((I,), f32),
             limit_mips=jnp.zeros((I,), f32),
             request_mips=jnp.zeros((I,), f32),
@@ -409,6 +475,19 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1
             mips_used=jnp.zeros((V,), f32),
             ram=jnp.zeros((V,), f32),
             ram_used=jnp.zeros((V,), f32),
+        ),
+        hosts=Hosts(
+            egress_scale=jnp.ones((V,), f32),
+            ingress_scale=jnp.ones((V,), f32),
+        ),
+        net=NetStats(
+            bytes_out=jnp.zeros((V,), f32),
+            bytes_in=jnp.zeros((V,), f32),
+            egress_busy=jnp.zeros((V,), f32),
+            ingress_busy=jnp.zeros((V,), f32),
+            transits=jnp.zeros((), i32),
+            transit_sum=jnp.zeros((), f32),
+            hist=jnp.zeros((caps.net_hist_buckets,), i32),
         ),
         sched=SchedState(
             inst_of_rank=jnp.full((S, caps.max_replicas), -1, i32),

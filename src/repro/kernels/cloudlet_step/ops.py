@@ -1,6 +1,8 @@
 """Jitted wrappers for the fused cloudlet tick with backend dispatch."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -12,9 +14,17 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _force_interpret() -> bool:
+    """CI hook: REPRO_PALLAS_INTERPRET=1 routes every engine-level call
+    through the Pallas kernel in interpret mode, gating the kernels against
+    their jnp oracles on every push."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET") == "1"
+
+
 def cloudlet_step(status, rem, inst, rate, time, dt, n_inst: int,
                   use_pallas: bool | None = None, interpret: bool = False):
     """Advance all executing cloudlets one tick (see ref.py for contract)."""
+    interpret = interpret or _force_interpret()
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not (use_pallas or interpret):
@@ -35,6 +45,7 @@ def cloudlet_finish(status, rem, inst, req, arrival, start, depth,
     Dispatches to the extended Pallas kernel on TPU (or in interpret mode)
     and to the stacked-scatter jnp reference otherwise.
     """
+    interpret = interpret or _force_interpret()
     if use_pallas is None:
         use_pallas = _on_tpu()
     # The kernel keeps the six [R] request arrays resident in VMEM

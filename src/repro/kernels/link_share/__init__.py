@@ -1,0 +1,5 @@
+"""Max-min fair NIC bandwidth sharing (network fabric, DESIGN.md §6)."""
+from .kernel import link_share_pallas  # noqa: F401
+from .ops import link_share  # noqa: F401
+from .ref import link_share as link_share_ref  # noqa: F401
+from .ref import waterfill  # noqa: F401

@@ -1,0 +1,39 @@
+"""Jitted wrapper for the link_share water-filling with backend dispatch."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import ref
+from .kernel import link_share_pallas
+
+# The water-fill solve needs the whole transfer set resident in VMEM
+# (DESIGN.md §6); beyond this lane count the jnp path takes over.
+_VMEM_LANES = 1 << 15
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _force_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET") == "1"
+
+
+def link_share(src, dst, active, cap_e, cap_i, iters: int = 4,
+               use_pallas: bool | None = None, interpret: bool = False):
+    """Max-min fair per-transfer rates (MB/s) over host NIC ports.
+
+    Dispatches to the Pallas kernel on TPU (or in interpret mode) and to
+    the jnp oracle elsewhere; both run the identical float program.
+    """
+    interpret = interpret or _force_interpret()
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas and not interpret and src.shape[0] > _VMEM_LANES:
+        use_pallas = False
+    if not (use_pallas or interpret):
+        return ref.link_share(src, dst, active, cap_e, cap_i, iters)
+    return link_share_pallas(src, dst, active, cap_e, cap_i, iters=iters,
+                             interpret=interpret)

@@ -1,0 +1,129 @@
+"""Pure-jnp oracle for max-min fair NIC bandwidth sharing (DESIGN.md §6).
+
+Every in-flight transfer ``t`` occupies up to two ports: the egress NIC of
+its source host (``src[t]``, -1 = external client — no egress constraint)
+and the ingress NIC of its destination host (``dst[t]``).  The max-min fair
+allocation is computed by progressive water-filling:
+
+  repeat ``iters`` times:
+    * per-port fair share  s_p = remaining_cap_p / live_transfers_on_p
+    * global water level   λ   = min over occupied ports of s_p
+    * every live transfer gains λ; ports drain λ·n_p
+    * transfers touching a now-saturated port freeze at their current rate
+
+  finally, still-live transfers (more bottleneck levels than rounds) take
+  one conservative fill: min over their ports of the residual fair share —
+  always capacity-feasible, so the allocation never oversubscribes a link.
+
+The recurrence is exact max-min when the scenario has at most ``iters``
+distinct bottleneck water levels; beyond that it under-allocates only the
+transfers still live after the last round.  The Pallas kernel runs this
+exact float program (same op order) on VMEM-resident arrays, so
+interpret-mode tests assert bit-equality.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# A port counts as saturated once its residual capacity falls below this
+# relative tolerance — exact-arithmetic zero crossings land within a few ULP.
+SAT_REL = 1e-5
+
+# Occupancy via one-hot [C, H] masked sums while they fit in cache; past
+# this element budget the O(C) scatter-add takes over.  Counts are small
+# integers (exact in f32 in any order), and the choice is made on static
+# shapes, so ref and kernel always agree per-shape — the bit-equality
+# contract holds.
+ONE_HOT_BUDGET = 1 << 22
+
+
+def waterfill(src, dst, active, cap_e, cap_i, iters: int):
+    """Shared fair-share recurrence (called by both ref and kernel body).
+
+    Parameters (all jnp arrays)
+    ---------------------------
+    src : [C] i32 source host per transfer (-1 = no egress constraint).
+    dst : [C] i32 destination host per transfer.
+    active : [C] bool transfer is in flight.
+    cap_e / cap_i : [H] f32 egress / ingress port capacities (MB/s).
+    iters : static number of freeze rounds.
+
+    Returns [C] f32 per-transfer rates (MB/s); 0 on inactive transfers.
+    """
+    f32 = jnp.float32
+    H = cap_e.shape[0]
+    inf = jnp.asarray(jnp.inf, f32)
+
+    live = active & (dst >= 0)
+    rate = jnp.zeros(src.shape, f32)
+    rem_e = cap_e.astype(f32)
+    rem_i = cap_i.astype(f32)
+
+    # Port occupancy: one-hot reduction (vectorizes where CPU/TPU scatters
+    # serialize) while [C, H] fits the budget, scatter-add beyond.  The
+    # same code runs inside the Pallas kernel, so bit-equality holds.
+    hosts = jnp.arange(H, dtype=src.dtype)
+    one_hot = src.shape[0] * H <= ONE_HOT_BUDGET
+
+    def occupancy(live):
+        has_src = live & (src >= 0)
+        if one_hot:
+            n_e = jnp.sum(jnp.where(has_src[:, None],
+                                    src[:, None] == hosts[None, :], False)
+                          .astype(f32), axis=0)
+            n_i = jnp.sum(jnp.where(live[:, None],
+                                    dst[:, None] == hosts[None, :], False)
+                          .astype(f32), axis=0)
+        else:
+            eidx = jnp.where(has_src, src, H)
+            iidx = jnp.where(live, dst, H)
+            n_e = jnp.zeros((H + 1,), f32).at[eidx].add(
+                1.0, mode="drop")[:H]
+            n_i = jnp.zeros((H + 1,), f32).at[iidx].add(
+                1.0, mode="drop")[:H]
+        return n_e, n_i
+
+    for _ in range(iters):
+        n_e, n_i = occupancy(live)
+        share_e = rem_e / jnp.maximum(n_e, 1.0)
+        share_i = rem_i / jnp.maximum(n_i, 1.0)
+        lam = jnp.minimum(
+            jnp.min(jnp.where(n_e > 0, share_e, inf)),
+            jnp.min(jnp.where(n_i > 0, share_i, inf)))
+        lam = jnp.where(jnp.isfinite(lam), jnp.maximum(lam, 0.0), 0.0)
+        rate = rate + jnp.where(live, lam, 0.0)
+        rem_e = rem_e - lam * n_e
+        rem_i = rem_i - lam * n_i
+        sat_e = (n_e > 0) & (rem_e <= SAT_REL * cap_e)
+        sat_i = (n_i > 0) & (rem_i <= SAT_REL * cap_i)
+        frozen = ((src >= 0) & sat_e[jnp.maximum(src, 0)]) \
+            | sat_i[jnp.maximum(dst, 0)]
+        live = live & ~frozen
+
+    # Conservative final fill for transfers still live after the rounds.
+    n_e, n_i = occupancy(live)
+    share_e = rem_e / jnp.maximum(n_e, 1.0)
+    share_i = rem_i / jnp.maximum(n_i, 1.0)
+    fill = jnp.minimum(
+        jnp.where(src >= 0, share_e[jnp.maximum(src, 0)], inf),
+        share_i[jnp.maximum(dst, 0)])
+    rate = rate + jnp.where(live, jnp.maximum(fill, 0.0), 0.0)
+
+    # External-client uploads into an uncontended port: rate stays what the
+    # water-filling gave them (ingress-limited); fully uncontended src=-1
+    # transfers with dst<0 never occur (masked inactive above).
+    return jnp.where(active & (dst >= 0), rate, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def link_share(src, dst, active, cap_e, cap_i, iters: int = 4):
+    """Max-min fair per-transfer rates — jnp reference path.
+
+    Jitted so the oracle is the *compiled* float program: eager op-by-op
+    execution rounds FMA-fusable chains differently (~1 ULP) and would
+    break the bit-equality contract with the kernel.
+    """
+    return waterfill(src, dst, active, cap_e, cap_i, iters)

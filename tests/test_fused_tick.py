@@ -61,8 +61,10 @@ def test_scatter_pool_bitmatches_per_field(C, M, seed, rng):
         status=1, req=jnp.asarray(r.integers(0, 99, K), i32),
         service=jnp.asarray(r.integers(0, 9, K), i32), inst=-1,
         wait_ticks=0, depth=jnp.asarray(r.integers(0, 4, K), i32),
+        src_host=jnp.asarray(r.integers(-1, 4, K), i32),
         length=length, rem=length,
-        arrival=jnp.asarray(r.uniform(0, 10, K), f32), start=-1.0)
+        arrival=jnp.asarray(r.uniform(0, 10, K), f32), start=-1.0,
+        rem_bytes=jnp.asarray(r.uniform(0, 1, K), f32))
     int_cols = tuple(cols[n] for n in CL_I_FIELDS)
     flt_cols = tuple(cols[n] for n in CL_F_FIELDS)
 

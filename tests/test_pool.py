@@ -73,3 +73,81 @@ def test_assign_respects_k_static():
     asg = assign_free_slots(free, want, k_static=4)
     assert int(asg.n_assigned) == 4
     assert int(asg.n_dropped) == 12
+
+
+def test_recycling_waves_with_overflow_accounting():
+    """Spawn waves against a pool that keeps freeing slots: every wave's
+    assignments + drops must add up, freed slots must be reused (FCFS by
+    slot index), and the cumulative drop count never goes backwards."""
+    C = 32
+    r = np.random.default_rng(7)
+    free = np.ones(C, bool)
+    total_assigned = total_dropped = 0
+    occupied = set()
+    for wave in range(20):
+        want = r.random(40) < r.uniform(0.2, 0.9)
+        asg = assign_free_slots(jnp.asarray(free), jnp.asarray(want))
+        n_a, n_d = int(asg.n_assigned), int(asg.n_dropped)
+        assert n_a + n_d == int(want.sum())
+        assert n_a <= free.sum()
+        dst = np.asarray(asg.dst)[:n_a]
+        # every destination was genuinely free, and is the lowest-index
+        # run of free slots (recycled slots come back in slot order)
+        assert free[dst].all()
+        expect = np.flatnonzero(free)[:n_a]
+        assert np.array_equal(np.sort(dst), expect)
+        free[dst] = False
+        occupied.update(dst.tolist())
+        total_assigned += n_a
+        total_dropped += n_d
+        # free a random subset (the "finished queue" folding + slot free)
+        done = [s for s in list(occupied) if r.random() < 0.4]
+        for s in done:
+            occupied.discard(s)
+            free[s] = True
+    # the pool was oversubscribed at least once over 20 waves
+    assert total_dropped > 0
+    assert total_assigned > C        # slots were genuinely recycled
+
+
+def test_pool_full_drops_everything_then_recovers():
+    free = np.zeros(8, bool)
+    want = np.ones(5, bool)
+    asg = assign_free_slots(jnp.asarray(free), jnp.asarray(want))
+    assert int(asg.n_assigned) == 0
+    assert int(asg.n_dropped) == 5
+    assert not bool(np.asarray(asg.live).any())
+    free[3] = True                      # one slot frees up
+    asg = assign_free_slots(jnp.asarray(free), jnp.asarray(want))
+    assert int(asg.n_assigned) == 1
+    assert int(asg.n_dropped) == 4
+    assert int(np.asarray(asg.dst)[0]) == 3
+
+
+def test_segment_rank_large_segment_count_fallback():
+    """num_segments big enough to blow the blocked count-matrix budget
+    (n_blocks × (S+1) > 2²⁴) must take the sort-based O(n)-memory path and
+    still agree with the oracle."""
+    from repro.core.pool import segment_rank_sorted
+
+    n = 256
+    n_seg = (1 << 23) + 11               # 2 blocks × (S+1) > 2²⁴
+    r = np.random.default_rng(11)
+    # cluster keys so ranks actually exceed 0 within segments
+    keys = np.asarray(r.integers(0, 50, n), np.int32)
+    keys[::7] = n_seg - 3                # exercise the huge-id range too
+    mask = r.random(n) < 0.7
+    got = np.asarray(segment_rank(jnp.asarray(keys), jnp.asarray(mask),
+                                  n_seg, block=128))
+    want = np.asarray(segment_rank_sorted(jnp.asarray(keys),
+                                          jnp.asarray(mask), n_seg))
+    np.testing.assert_array_equal(got, want)
+    # sanity: the masked ranks are FCFS within their segment
+    counts = {}
+    for i in range(n):
+        if mask[i]:
+            k = int(keys[i])
+            assert got[i] == counts.get(k, 0)
+            counts[k] = counts.get(k, 0) + 1
+        else:
+            assert got[i] == n

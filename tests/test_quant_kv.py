@@ -24,15 +24,28 @@ def test_int8_kv_decode_matches_bf16():
     assert st_q.layers.k.dtype == jnp.int8
     step = jax.jit(model.decode_step)
     step_q = jax.jit(model_q.decode_step)
+    # Quantization perturbs next-token probabilities by up to QTOL; exact
+    # argmax equality is only meaningful when the bf16 winner leads by
+    # more than that (random-init logits are near-flat, so unmargined
+    # argmax flips on ~1e-3 ties — seen at steps 0 and 3 of this seed).
+    QTOL = 1e-2
     for t in range(6):
         tok = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
         lg, st = step(params, tok, st)
         lg_q, st_q = step_q(params, tok, st_q)
         a = np.asarray(jax.nn.softmax(lg[:, 0], -1))
         b = np.asarray(jax.nn.softmax(lg_q[:, 0], -1))
-        # distributions agree closely; argmax agrees exactly
-        assert np.abs(a - b).max() < 5e-2, t
-        np.testing.assert_array_equal(a.argmax(-1), b.argmax(-1))
+        # distributions agree closely
+        assert np.abs(a - b).max() < QTOL, t
+        srt = np.sort(a, axis=-1)
+        decisive = (srt[:, -1] - srt[:, -2]) > 2 * QTOL
+        for i in range(B):
+            if decisive[i]:
+                # a clear winner must survive quantization exactly
+                assert a[i].argmax() == b[i].argmax(), (t, i)
+            else:
+                # near-tie: the bf16 winner must stay near-maximal
+                assert b[i, a[i].argmax()] >= b[i].max() - 2 * QTOL, (t, i)
     assert int(st_q.pos) == 6
 
 
