@@ -39,7 +39,7 @@ def flat_services(n: int, mi: float) -> "ServiceGraph":
 
 
 def build_case(n_requests, n_services, replicas, fanout=1,
-               use_pallas_interpret=False, network=False):
+               use_pallas_interpret=False, network=False, faults=False):
     """Build a capacity Simulation sized to the Table 2 object counts;
     returns (sim, meta) where meta records the sizing decisions.
 
@@ -47,6 +47,11 @@ def build_case(n_requests, n_services, replicas, fanout=1,
     (DESIGN.md §6) on amply-provisioned NICs: the Transit phase executes
     every tick (client→entry payloads cross host ingress ports) without
     starving the workload, so the wall-time delta is the phase's overhead.
+
+    ``faults=True`` enables the Disruption phase (DESIGN.md §7) with mild
+    chaos (long MTBF, quick MTTR, retries on): the full failure/retry/
+    breaker machinery runs every tick without collapsing throughput, so
+    the wall-time delta is the phase's overhead (target ≤ 1.3×).
     """
     mi = 50.0
     if fanout > 1:
@@ -85,6 +90,10 @@ def build_case(n_requests, n_services, replicas, fanout=1,
         max_replicas=replicas,
         k_fire=k_fire,
     )
+    fault_kw = dict(
+        faults="chaos", host_mtbf_s=duration * 2.0, host_mttr_s=2 * dt,
+        inst_kill_rate=0.0, retry_timeout_s=20 * duration, retry_budget=2,
+    ) if faults else {}
     params = SimParams(
         dt=dt, n_ticks=n_ticks, n_clients=nc,
         spawn_rate=nc / 5.0, wait_lo=2.0, wait_hi=6.0,
@@ -94,6 +103,7 @@ def build_case(n_requests, n_services, replicas, fanout=1,
         network="fabric" if network else "uniform",
         # ample per-host NICs: the phase runs, the workload doesn't starve
         nic_egress_mbps=10_000.0, nic_ingress_mbps=10_000.0,
+        **fault_kw,
     )
     # Instance speed: each tick's per-instance batch drains in ~0.4 ticks,
     # keeping residence ≈ 2 ticks and utilization < 1 (no blow-up).
@@ -128,21 +138,23 @@ CASES = {
 
 
 def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
-                network: bool = False) -> dict:
+                network: bool = False, faults: bool = False) -> dict:
     """One BENCH_perf.json record: wall seconds + ticks/sec for a Table 2
     case.  ``scale`` shrinks the request count (pallas-interpret runs are
     orders of magnitude slower than compiled backends).  ``network=True``
     re-runs the case with the fabric's Transit phase on (case tagged
-    ``<tag>+net``) so the phase's overhead is tracked PR-over-PR."""
+    ``<tag>+net``), ``faults=True`` with the Disruption phase on
+    (``<tag>+faults``), so each phase's overhead is tracked PR-over-PR."""
     n_requests, n_services, replicas, cpr, fanout = CASES[tag]
     n_requests = max(int(n_requests * scale), 100)
     sim, meta = build_case(n_requests, n_services, replicas, fanout,
                            use_pallas_interpret=(backend
                                                  == "pallas-interpret"),
-                           network=network)
+                           network=network, faults=faults)
     res = sim.run()
+    suffix = ("+net" if network else "") + ("+faults" if faults else "")
     return dict(
-        case=tag + "+net" if network else tag, backend=backend, scale=scale,
+        case=tag + suffix, backend=backend, scale=scale,
         requests=int(res.state.requests.count),
         cloudlets=int(res.state.counters.spawned),
         n_services=n_services, n_instances=meta["n_instances"],

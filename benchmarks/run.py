@@ -66,6 +66,22 @@ def write_perf_json(path: str, cases, repeats: int = 2) -> None:
         records.append(best)
         print(f"# perf case1b+net: {best['wall_s']:.2f}s "
               f"({best['net_overhead_ratio']}x of network-off)")
+    # Disruption-phase overhead on case1b: same case with mild chaos on
+    # (DESIGN.md §7) — the wall-time ratio over the fault-free run is the
+    # phase's per-tick cost (target ≤ 1.3×)
+    if "case1b" in cases:
+        best = None
+        for _ in range(max(repeats, 1)):
+            rec = bench_capacity.perf_record("case1b", backend="jnp",
+                                             faults=True)
+            if best is None or rec["wall_s"] < best["wall_s"]:
+                best = rec
+        base_rec = next(r for r in records if r["case"] == "case1b")
+        best["faults_overhead_ratio"] = round(
+            best["wall_s"] / max(base_rec["wall_s"], 1e-9), 3)
+        records.append(best)
+        print(f"# perf case1b+faults: {best['wall_s']:.2f}s "
+              f"({best['faults_overhead_ratio']}x of fault-free)")
     # interpret-mode kernel trend on a scaled-down case (interpret is
     # orders of magnitude slower — the trend matters, not the magnitude)
     rec = bench_capacity.perf_record("case1a", backend="pallas-interpret",

@@ -129,7 +129,7 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
              net_latency_s: float = CALIBRATED["net_latency_s"],
              scaling_policy: int = 0, seed: int = 0,
              max_replicas: int = 4, spawn_rate: float | None = None,
-             placement_policy: int | None = None,
+             placement_policy: int | None = None, replicas: int = 1,
              **param_overrides) -> Simulation:
     """Build the paper's §6.3 experiment: Locust wait U[5,15] s, 600 s.
 
@@ -137,8 +137,15 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
     to replace the calibrated uniform hop latency with payload transit over
     the 10-node cluster's NICs (DESIGN.md §6) — e.g. the saturation sweep in
     examples/network_saturation.py.
+
+    Pass ``faults="chaos"`` (plus the fault-rate knobs) to enable the
+    Disruption phase (DESIGN.md §7) — e.g. the availability study in
+    examples/chaos_study.py; ``replicas`` sets the initial replica count
+    per service (chaos runs want ≥ 2 so a lone host crash degrades rather
+    than blackholes a service).
     """
     param_overrides.setdefault("net_latency_s", net_latency_s)
+    max_replicas = max(max_replicas, replicas)
     caps = SimCaps(
         n_clients=max(n_clients, 1),
         max_requests=int(n_clients * duration_s / 8.0) + 256,
@@ -166,7 +173,7 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
                        np.float32) * 1000.0
     vm_ram = np.array([64, 64, 64, 64, 64, 64, 64, 128, 256, 64],
                       np.float32) * 1024.0
-    return register(app_spec(mi_scale), instance_spec(share),
+    return register(app_spec(mi_scale), instance_spec(share, replicas),
                     caps=caps, params=params, vm_mips=vm_mips, vm_ram=vm_ram,
                     placement_policy=placement_policy)
 

@@ -51,6 +51,9 @@ class AppStatic(NamedTuple):
     payload_std: jnp.ndarray    # [S, d_max] f32
     api_payload_mean: jnp.ndarray  # [A] f32 client→entry payload (MB)
     api_payload_std: jnp.ndarray   # [A] f32
+    edge_retry: jnp.ndarray     # [S*d_max + A] i32 per-edge retry budget,
+    #                             -1 = run-wide default; indexed by the
+    #                             cloudlet ``edge`` id (resilience, §7)
 
     @property
     def n_services(self) -> int:
@@ -59,6 +62,10 @@ class AppStatic(NamedTuple):
     @property
     def n_apis(self) -> int:
         return self.api_cdf.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.edge_retry.shape[0]
 
 
 def build_app(graph: ServiceGraph,
@@ -114,4 +121,7 @@ def build_app(graph: ServiceGraph,
         payload_std=jnp.asarray(graph.payload_std),
         api_payload_mean=jnp.asarray(graph.api_payload_mean),
         api_payload_std=jnp.asarray(graph.api_payload_std),
+        edge_retry=jnp.concatenate(
+            [jnp.asarray(graph.edge_retry, jnp.int32).reshape(-1),
+             jnp.asarray(graph.api_retry, jnp.int32)]),
     )

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import faults as faultsmod
 from . import network as netmod
 from . import policies
 from . import scheduler
@@ -48,21 +49,33 @@ def make_tick(caps: SimCaps, params: SimParams,
     load-independent-latency program; ``"fabric"`` inserts the Transit
     phase (core/network.py) between Generation/Derivative spawns and
     Dispatching, so RPC payloads contend on host NICs (DESIGN.md §6).
+
+    ``params.faults`` is static: ``"none"`` builds exactly the fault-free
+    program; ``"chaos"`` inserts the Disruption phase (core/faults.py)
+    between Generation and Transit — host crash/recovery, instance kills,
+    NIC degradation, retries and circuit breakers (DESIGN.md §7).
     """
     if params.network not in ("uniform", "fabric"):
         raise ValueError(
             f"SimParams.network must be 'uniform' or 'fabric', "
             f"got {params.network!r}")
+    if params.faults not in ("none", "chaos"):
+        raise ValueError(
+            f"SimParams.faults must be 'none' or 'chaos', "
+            f"got {params.faults!r}")
     network = params.network == "fabric"
+    faults_on = params.faults == "chaos"
 
     def tick(state: SimState, dyn: DynParams, app: AppStatic
              ) -> Tuple[SimState, TickTrace]:
-        if network:
-            (rng, k_gen, k_gen2, k_lb, k_der, k_net_g,
-             k_net_d) = jax.random.split(state.rng, 7)
-        else:
-            rng, k_gen, k_gen2, k_lb, k_der = jax.random.split(state.rng, 5)
-            k_net_g = k_net_d = None
+        # rng split counts are mode-static; the first five (seven with the
+        # fabric) match the fault-free program exactly, so faults="none"
+        # stays bit-identical to the pre-faults engine.
+        n_keys = (7 if network else 5) + (3 if faults_on else 0)
+        keys = jax.random.split(state.rng, n_keys)
+        rng, k_gen, k_gen2, k_lb, k_der = (keys[0], keys[1], keys[2],
+                                           keys[3], keys[4])
+        k_net_g, k_net_d = (keys[5], keys[6]) if network else (None, None)
         state = state._replace(rng=rng)
 
         # --- Generation (paper Alg 1) ---------------------------------
@@ -71,6 +84,12 @@ def make_tick(caps: SimCaps, params: SimParams,
         state, gen_res = scheduler.gen_spawn(
             state, app, caps, gen.fired, gen.api, gen.wait_proposal, k_gen2,
             dyn, params=params, net_rng=k_net_g)
+
+        # --- Disruption (chaos mode: faults, retries, breakers) ----------
+        if faults_on:
+            state = faultsmod.disruption(
+                state, app, caps, params, dyn, keys[-3], keys[-2],
+                keys[-1] if network else None)
 
         # --- Transit (fabric mode: NIC fair-share water-filling) --------
         if network:
@@ -89,7 +108,7 @@ def make_tick(caps: SimCaps, params: SimParams,
                                      params=params, net_rng=k_net_d)
 
         # --- Response (critical-path completion, paper §4.3.2) ----------
-        state, n_done = scheduler.complete(state, dyn)
+        state, n_done = scheduler.complete(state, dyn, faults=faults_on)
 
         # --- Scaling & Migration (paper §5) ------------------------------
         if (params.scaling_policy or params.migration_enabled) \
@@ -209,7 +228,8 @@ class Simulation:
     def init_state(self, seed: Optional[int] = None) -> SimState:
         rng = jax.random.PRNGKey(self.params.seed if seed is None else seed)
         state = zeros_state(self.caps, self.params, rng,
-                            n_services=self.graph.n_services)
+                            n_services=self.graph.n_services,
+                            n_edges=int(self.app.n_edges))
         inst, iof, reps = initial_allocation(
             np.asarray(self.app.tmpl_replicas),
             np.asarray(self.app.tmpl_mips),
@@ -257,7 +277,7 @@ class Simulation:
     _STATIC_FIELDS = ("lb_policy", "share_policy", "scaling_policy",
                       "migration_enabled", "n_ticks", "use_pallas_tick",
                       "pallas_interpret", "network", "waterfill_iters",
-                      "net_hist_bin_s")
+                      "net_hist_bin_s", "faults", "egress_shaping")
 
     def _static_key(self) -> tuple:
         p = self.params

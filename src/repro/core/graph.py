@@ -40,6 +40,9 @@ class ServiceGraph:
         (MB, request+response lumped) per call edge, aligned with ``succ``
         (network fabric, DESIGN.md §6; -0 rows beyond n_succ are inert).
     api_payload_mean / api_payload_std : [A] float32 client→entry payload.
+    edge_retry : [S, d_max] int32 per-call-edge retry budget (-1 = use the
+        run-wide ``SimParams.retry_budget`` — resilience, DESIGN.md §7).
+    api_retry : [A] int32 client→entry retry budget (-1 = run-wide default).
     """
 
     names: List[str]
@@ -57,10 +60,13 @@ class ServiceGraph:
     payload_std: np.ndarray = None
     api_payload_mean: np.ndarray = None
     api_payload_std: np.ndarray = None
+    edge_retry: np.ndarray = None
+    api_retry: np.ndarray = None
 
     def __post_init__(self):
-        """Fill default payload tables for graphs built before the network
-        fabric existed (every edge defaults to DEFAULT_PAYLOAD_MB)."""
+        """Fill default payload/retry tables for graphs built before the
+        network fabric / resilience subsystems existed (payloads default to
+        DEFAULT_PAYLOAD_MB, retry budgets to -1 = run-wide default)."""
         S, D = self.succ.shape if self.succ.size else (len(self.names), 1)
         A = len(self.api_names)
         if self.payload_mean is None:
@@ -75,6 +81,10 @@ class ServiceGraph:
         if self.api_payload_std is None:
             self.api_payload_std = 0.1 * np.asarray(self.api_payload_mean,
                                                     np.float32)
+        if self.edge_retry is None:
+            self.edge_retry = np.full((S, D), -1, np.int32)
+        if self.api_retry is None:
+            self.api_retry = np.full((A,), -1, np.int32)
 
     # ------------------------------------------------------------------
     @property
@@ -157,6 +167,8 @@ def build_graph(
     payload_stds: Dict[Tuple[str, str], float] | None = None,
     api_payloads: Dict[str, float] | None = None,
     default_payload_mb: float = DEFAULT_PAYLOAD_MB,
+    retries: Dict[Tuple[str, str], int] | None = None,
+    api_retries: Dict[str, int] | None = None,
 ) -> ServiceGraph:
     """Construct a :class:`ServiceGraph`.
 
@@ -171,6 +183,8 @@ def build_graph(
         (network fabric; unlisted edges get ``default_payload_mb`` /
         10% of the mean).
     api_payloads : api name → client→entry payload mean in MB.
+    retries / api_retries : per-edge retry budgets (resilience, §7);
+        unlisted edges fall back to the run-wide ``SimParams.retry_budget``.
     """
     names = list(services)
     index = {n: i for i, n in enumerate(names)}
@@ -212,27 +226,41 @@ def build_graph(
         std = np.array([len_std.get(n, 0.1 * len_mean[n]) for n in names],
                        dtype=np.float32)
 
+    def edge_slot(src: str, dst: str, what: str) -> Tuple[int, int]:
+        """Resolve a (caller, callee) name pair to its successor-table
+        (row, slot) — shared by every per-edge table (payloads, retries)."""
+        if src not in index or dst not in index:
+            raise KeyError(f"unknown service in {what} edge {src}->{dst}")
+        try:
+            d = succ_lists[index[src]].index(index[dst])
+        except ValueError:
+            raise KeyError(
+                f"{what} declared for non-edge {src}->{dst}: add {dst!r} "
+                f"to {src!r}'s calls first") from None
+        return index[src], d
+
     # Per-edge payload tables, aligned with the padded succ table.
     payloads = payloads or {}
     payload_stds = payload_stds or {}
     payload_mean = np.full((S, d_out), default_payload_mb, np.float32)
     payload_std = 0.1 * payload_mean
     for (src, dst), mb in payloads.items():
-        if src not in index or dst not in index:
-            raise KeyError(f"unknown service in payload edge {src}->{dst}")
-        try:
-            d = succ_lists[index[src]].index(index[dst])
-        except ValueError:
-            raise KeyError(
-                f"payload declared for non-edge {src}->{dst}: add {dst!r} "
-                f"to {src!r}'s calls first") from None
-        payload_mean[index[src], d] = mb
-        payload_std[index[src], d] = payload_stds.get((src, dst), 0.1 * mb)
+        s, d = edge_slot(src, dst, "payload")
+        payload_mean[s, d] = mb
+        payload_std[s, d] = payload_stds.get((src, dst), 0.1 * mb)
     api_payloads = api_payloads or {}
     api_payload_mean = np.array(
         [float(api_payloads.get(a[0], default_payload_mb)) for a in apis],
         np.float32)
     api_payload_std = 0.1 * api_payload_mean
+
+    # Per-edge retry budgets, aligned with the padded succ table (§7).
+    edge_retry = np.full((S, d_out), -1, np.int32)
+    for (src, dst), n in (retries or {}).items():
+        s, d = edge_slot(src, dst, "retry budget")
+        edge_retry[s, d] = int(n)
+    api_retry = np.array(
+        [int((api_retries or {}).get(a[0], -1)) for a in apis], np.int32)
 
     # Topological levels (longest distance from any root).
     levels = np.zeros(S, dtype=np.int32)
@@ -254,6 +282,7 @@ def build_graph(
         len_mean=mean, len_std=std, levels=levels,
         payload_mean=payload_mean, payload_std=payload_std,
         api_payload_mean=api_payload_mean, api_payload_std=api_payload_std,
+        edge_retry=edge_retry, api_retry=api_retry,
     )
     graph.validate()
     return graph

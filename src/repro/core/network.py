@@ -128,12 +128,32 @@ def transit(state: SimState, caps: SimCaps, params: SimParams,
              * MBIT_PER_S_TO_MBYTE_PER_S)
     cap_i = (state.hosts.ingress_scale * dyn.nic_ingress_mbps
              * MBIT_PER_S_TO_MBYTE_PER_S)
+    if params.faults == "chaos":
+        # NIC degradation (Disruption schedule, §7): a degraded host's
+        # ports run at a fraction of their capacity until they recover
+        nic = jnp.where(state.fault.nic_ok > 0, 1.0, dyn.nic_degrade_factor)
+        cap_e = cap_e * nic
+        cap_i = cap_i * nic
 
     rate = link_share(
         src, dst, active & (dst >= 0), cap_e, cap_i,
         iters=params.waterfill_iters,
         use_pallas=None if params.use_pallas_tick else False,
         interpret=params.pallas_interpret)
+
+    if params.egress_shaping:
+        # Per-instance egress shaping (§6 follow-up): an instance's
+        # concurrent transfers share its own ``Instances.bw`` allowance on
+        # top of the port-level water-fill — the clamp only ever lowers
+        # rates, so NIC feasibility is preserved.
+        I = inst.status.shape[0]
+        sin = cl.src_inst
+        shaped = active & (sin >= 0)
+        sin_safe = jnp.maximum(sin, 0)
+        n_from = _segsum(shaped.astype(f32), jnp.where(shaped, sin, -1), I)
+        share = (inst.bw[sin_safe] * MBIT_PER_S_TO_MBYTE_PER_S
+                 / jnp.maximum(n_from[sin_safe], 1.0))
+        rate = jnp.where(shaped, jnp.minimum(rate, share), rate)
 
     rem = cl.rem_bytes
     prog = rate * dt

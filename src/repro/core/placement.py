@@ -116,7 +116,10 @@ def migrate(state: SimState, app: AppStatic, caps: SimCaps,
     mover = jnp.argmin(cand_mips)
     movable = need & on_hot[mover]
 
-    free = jnp.where(jnp.arange(vms.mips.shape[0]) == hot, -jnp.inf,
+    # never migrate onto the source VM or a down host (fault injection §7;
+    # host id = vm id, all-up in faults="none" mode)
+    free = jnp.where((jnp.arange(vms.mips.shape[0]) == hot)
+                     | (state.fault.host_up <= 0), -jnp.inf,
                      vms.mips - vms.mips_used)
     tgt = jnp.argmax(free)
     fits = (free[tgt] >= inst.mips[mover]) & \

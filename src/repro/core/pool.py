@@ -73,7 +73,10 @@ def scatter_pool(ints: jnp.ndarray, flts: jnp.ndarray, asg: SlotAssignment,
                  **cols) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused spawn writer: one wave of new cloudlets lands in exactly TWO
     scatters — every i32 field of the stacked [C, NI] pool in one, every
-    f32 field of the [C, NF] pool in the other.
+    f32 field of the [C, NF] pool in the other.  All three spawn sites —
+    root cloudlets (``gen_spawn``), successors (``derive``) and retry
+    respawns (``faults.disruption``, §7) — go through here, so the pool
+    write cost per tick is independent of how many columns exist.
 
     Columns are passed BY NAME (the ``CL_I_FIELDS``/``CL_F_FIELDS``
     vocabulary), each a rank-level [K] array or a scalar to broadcast,

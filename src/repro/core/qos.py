@@ -56,6 +56,16 @@ class QoSReport:
     transit_p99_ms: float = 0.0       # histogram range (buckets × bin)
     avg_egress_util: float = 0.0      # time-mean NIC utilization over hosts
     avg_ingress_util: float = 0.0
+    # availability QoS (all inert in faults="none" mode, DESIGN.md §7)
+    availability: float = 1.0         # 1 − failed / completed requests
+    error_rate: float = 0.0           # failed attempts / spawned cloudlets
+    failed_requests: int = 0
+    retries: int = 0                  # retry attempts respawned
+    retry_amplification: float = 1.0  # spawned / first-attempt spawns
+    failfast_failures: int = 0        # attempts rejected by open breakers
+    breaker_trips: int = 0
+    host_crashes: int = 0
+    observed_mttr_s: float = 0.0      # host down-time / recoveries
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
@@ -90,8 +100,12 @@ def summarize(sim: Simulation, result: SimResult,
     """
     st = result.state
     params = params or sim.params
-    resp = np.asarray(st.requests.response)
-    resp = resp[resp >= 0] * 1000.0      # → ms
+    resp_all = np.asarray(st.requests.response)
+    req_failed = np.asarray(st.requests.failed) > 0
+    # response-time statistics cover SUCCESSFUL completions only (a failed
+    # completion's "response" is its time-to-failure); identical to the
+    # pre-faults report in faults="none" mode, where nothing ever fails
+    resp = resp_all[(resp_all >= 0) & ~req_failed] * 1000.0      # → ms
     trace = result.trace_np()
 
     dt = params.dt
@@ -125,6 +139,13 @@ def summarize(sim: Simulation, result: SimResult,
     bytes_mb = float(np.asarray(net.bytes_in).sum())
     bin_s = params.net_hist_bin_s
     tp = lambda p: transit_percentile_ms(np.asarray(net.hist), bin_s, p)
+
+    # --- availability / resilience (all-zero in faults="none" mode) ------
+    fst = st.fstats
+    n_failed_req = int(fst.failed_requests)
+    spawned = int(st.counters.spawned)
+    retries = int(fst.retries)
+    recoveries = int(fst.host_recoveries)
 
     completed = int(st.counters.completed)
     return QoSReport(
@@ -160,6 +181,15 @@ def summarize(sim: Simulation, result: SimResult,
         / max(sim_time, 1e-9),
         avg_ingress_util=float(np.asarray(net.ingress_busy).mean())
         / max(sim_time, 1e-9),
+        availability=1.0 - n_failed_req / max(completed, 1),
+        error_rate=int(fst.failed_attempts) / max(spawned, 1),
+        failed_requests=n_failed_req,
+        retries=retries,
+        retry_amplification=spawned / max(spawned - retries, 1),
+        failfast_failures=int(fst.failfast),
+        breaker_trips=int(fst.breaker_trips),
+        host_crashes=int(fst.host_crashes),
+        observed_mttr_s=float(fst.down_time_s) / max(recoveries, 1),
     )
 
 

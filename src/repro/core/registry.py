@@ -46,6 +46,11 @@ def graph_from_spec(spec: Dict[str, Any],
     Network-fabric extension (DESIGN.md §6): a service may carry a
     ``"payloads": {callee: MB}`` map (per-call-edge RPC payload mean) and
     an API a ``"payload": MB`` scalar (client→entry request payload).
+
+    Resilience extension (DESIGN.md §7): a service may carry a
+    ``"retries": {callee: n}`` map (per-call-edge retry budget) and an API
+    a ``"retries": n`` scalar (client→entry budget); unlisted edges use
+    the run-wide ``SimParams.retry_budget``.
     """
     services = spec["services"]
     names = [s["name"] for s in services]
@@ -60,9 +65,16 @@ def graph_from_spec(spec: Dict[str, Any],
                 for callee, mb in s.get("payloads", {}).items()}
     api_payloads = {a["name"]: float(a["payload"])
                     for a in spec["apis"] if "payload" in a}
+    retries = {(s["name"], callee): int(n)
+               for s in services
+               for callee, n in s.get("retries", {}).items()}
+    api_retries = {a["name"]: int(a["retries"])
+                   for a in spec["apis"] if "retries" in a}
     return build_graph(names, calls, apis, len_mean, len_std,
                        payloads=payloads or None,
-                       api_payloads=api_payloads or None)
+                       api_payloads=api_payloads or None,
+                       retries=retries or None,
+                       api_retries=api_retries or None)
 
 
 def templates_from_spec(spec: Dict[str, Any],

@@ -64,7 +64,10 @@ def _scale_out(state: SimState, s, app: AppStatic) -> SimState:
     slot = jnp.argmax(inst.status == INST_FREE)
     has_slot = inst.status[slot] == INST_FREE
     # paper Alg 3 line 3: VM queue sorted by descending available resources.
-    free = vms.mips - vms.mips_used
+    # Down hosts (fault injection, §7) are excluded — replicas respawn only
+    # onto live nodes (host id = vm id; all-up in faults="none" mode).
+    free = jnp.where(state.fault.host_up > 0, vms.mips - vms.mips_used,
+                     -jnp.inf)
     vm = jnp.argmax(free)
     need_mips = app.tmpl_mips[s]
     need_ram = app.tmpl_ram[s]

@@ -3,6 +3,9 @@
 Every tick runs, in order:
 
   ``gen_spawn``   — new requests fire root cloudlets at API entry services
+  ``disruption``  — (chaos mode, core/faults.py) hosts crash/recover,
+                    instances die, doomed work fails, retries respawn,
+                    circuit breakers advance
   ``transit``     — (fabric mode, core/network.py) in-flight payloads share
                     host NICs max-min fairly; arrivals join the waiting queue
   ``dispatch``    — waiting→execution transition with load balancing
@@ -117,6 +120,10 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
     Ka = asg.dst.shape[0]
     svc_new = svc_flat[asg.src]          # rank-level gather (for sampling)
     req_new = req_flat[asg.src]
+    api_flat = jnp.broadcast_to(api_r[:, None], (K, E)).reshape(-1)
+    api_new = api_flat[asg.src]
+    # client→entry edge id: after the S*d_max call edges (resilience, §7)
+    edge_new = app.n_services * app.succ.shape[1] + api_new
     noise = jax.random.normal(rng, (Ka,), f32)
     length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
                          1.0)
@@ -129,8 +136,6 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
         k_lb, k_pay = jax.random.split(net_rng)
         tgt, rr = netmod.pick_replicas(svc_new, asg.live, state, caps,
                                        params, k_lb)
-        api_flat = jnp.broadcast_to(api_r[:, None], (K, E)).reshape(-1)
-        api_new = api_flat[asg.src]
         payload = netmod.sample_payload(app.api_payload_mean[api_new],
                                         app.api_payload_std[api_new], k_pay)
         # No live replica yet → park in the waiting queue (dispatch
@@ -146,6 +151,7 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
         cl.ints, cl.flts, asg,
         status=status_new, req=req_new, service=svc_new, inst=inst_new,
         wait_ticks=0, depth=0, src_host=src_host_new,
+        attempt=0, edge=edge_new, src_inst=-1,
         length=length, rem=length,
         arrival=jnp.full((Ka,), 0.0, f32) + state.time, start=-1.0,
         rem_bytes=bytes_new)
@@ -395,9 +401,18 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
 
     counters = state.counters._replace(
         finished=state.counters.finished + jnp.sum(fin.astype(i32)))
+
+    # --- per-edge success counts (resilience §7, chaos mode only): the
+    # next Disruption pass folds them into the breaker error-rate EMA ----
+    fault = state.fault
+    if params.faults == "chaos":
+        E = fault.edge_succ.shape[0]
+        fault = fault._replace(edge_succ=fault.edge_succ + _segsum(
+            fin.astype(i32), jnp.where(fin, cl.edge, -1), E))
+
     return state._replace(cloudlets=cloudlets, instances=instances, vms=vms,
                           requests=requests, svc_stats=svc_stats,
-                          counters=counters), info
+                          counters=counters, fault=fault), info
 
 
 # ===========================================================================
@@ -430,6 +445,12 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
     req_new = req_flat[asg.src]
     dep_new = dep_flat[asg.src]
     tf_new = tf_flat[asg.src]
+    # Edge id: row = parent service, column = successor slot (§7).
+    psvc_new = jnp.broadcast_to(parent_svc[:, None],
+                                (C, D)).reshape(-1)[asg.src]
+    slot_new = (asg.src % D).astype(i32)
+    edge_new = psvc_new * D + slot_new
+    pin_new = pin_flat[asg.src]
     noise = jax.random.normal(rng, (Ka,), f32)
     length = jnp.maximum(app.len_mean[svc_new] + app.len_std[svc_new] * noise,
                          1.0)
@@ -442,14 +463,9 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
         k_lb, k_pay = jax.random.split(net_rng)
         tgt, rr = netmod.pick_replicas(svc_new, asg.live, state, caps,
                                        params, k_lb)
-        # Edge payload: row = parent service, column = successor slot.
-        psvc_new = jnp.broadcast_to(parent_svc[:, None],
-                                    (C, D)).reshape(-1)[asg.src]
-        slot_new = (asg.src % D).astype(i32)
         payload = netmod.sample_payload(app.payload_mean[psvc_new, slot_new],
                                         app.payload_std[psvc_new, slot_new],
                                         k_pay)
-        pin_new = pin_flat[asg.src]
         src_host = jnp.where(pin_new >= 0,
                              state.instances.host[jnp.maximum(pin_new, 0)],
                              -1)
@@ -469,6 +485,7 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
         cl.ints, cl.flts, asg,
         status=status_new, req=req_new, service=svc_new, inst=inst_new,
         wait_ticks=0, depth=dep_new, src_host=src_host_new,
+        attempt=0, edge=edge_new, src_inst=pin_new,
         length=length, rem=length, arrival=tf_new, start=-1.0,
         rem_bytes=bytes_new)
     cloudlets = Cloudlets(ints=ints, flts=flts)
@@ -497,18 +514,30 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
 # Complete: close requests whose dependency tree drained (paper §4.3.2)
 # ===========================================================================
 
-def complete(state: SimState, dyn: DynParams) -> Tuple[SimState, jnp.ndarray]:
+def complete(state: SimState, dyn: DynParams, faults: bool = False
+             ) -> Tuple[SimState, jnp.ndarray]:
     req, ctr = state.requests, state.counters
     i32 = jnp.int32
     done = ((req.outstanding == 0) & (req.spawned > 0) & (req.response < 0)
             & (req.arrival >= 0))
     resp = jnp.where(done, req.finish - req.arrival, req.response)
     n_done = jnp.sum(done.astype(i32))
+    viol = done & (resp * 1000.0 > dyn.slo_ms)
+    if faults:
+        # a failed completion is an SLO violation regardless of how fast
+        # it failed — else breaker fail-fasts would IMPROVE the SLO rate
+        viol = viol | (done & (req.failed > 0))
     counters = ctr._replace(
         completed=ctr.completed + n_done,
         resp_sum=ctr.resp_sum + jnp.sum(jnp.where(done, resp, 0.0)),
-        slo_violations=ctr.slo_violations + jnp.sum(
-            (done & (resp * 1000.0 > dyn.slo_ms)).astype(i32)),
+        slo_violations=ctr.slo_violations + jnp.sum(viol.astype(i32)),
     )
-    return state._replace(requests=req._replace(response=resp),
-                          counters=counters), n_done
+    state = state._replace(requests=req._replace(response=resp),
+                           counters=counters)
+    if faults:
+        # a request whose failed flag is set completes as a FAILED
+        # completion — counted exactly once, at its single `done` tick
+        n_fail = jnp.sum((done & (req.failed > 0)).astype(i32))
+        state = state._replace(fstats=state.fstats._replace(
+            failed_requests=state.fstats.failed_requests + n_fail))
+    return state, n_done

@@ -34,6 +34,8 @@ CL_TRANSIT = 3    # RPC payload in flight on the network fabric (§6)
 INST_FREE = 0     # slot unused
 INST_ON = 1       # active, receiving cloudlets
 INST_DRAIN = 2    # scale-in requested: no new cloudlets, frees when empty
+INST_DOWN = 3     # crashed (host down or pod killed): no dispatch, in-flight
+#                   work failed; restarts via MTTR once its host is up (§7)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,11 +52,15 @@ class SimCaps:
     k_fire: int = 0               # max requests admitted per tick (0 = Nc);
                                   # over-budget clients retry next tick
     net_hist_buckets: int = 64    # transit-time histogram resolution (§6)
+    k_retry: int = 0              # max retry respawns per Disruption tick
+                                  # (0 = auto: min(C, max(256, C/8)));
+                                  # over-budget failures fail permanently —
+                                  # a per-tick retry admission budget (§7)
 
     def validate(self) -> None:
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
-            lo = 0 if f.name == "k_fire" else 1
+            lo = 0 if f.name in ("k_fire", "k_retry") else 1
             if not isinstance(v, int) or v < lo:
                 raise ValueError(f"SimCaps.{f.name} must be an int ≥ {lo}, got {v!r}")
 
@@ -109,6 +115,30 @@ class SimParams:
     migration_enabled: bool = False
     mig_vm_util_hi: float = 0.9
 
+    # --- fault injection & resilience (DESIGN.md §7) ---------------------
+    faults: str = "none"          # "none": the fault-free engine (exact
+                                  # pre-faults program, bit-pinned);
+                                  # "chaos": Disruption tick phase — host
+                                  # crash/recovery, instance kills, NIC
+                                  # degradation, retries, circuit breakers
+    host_mtbf_s: float = float("inf")   # mean time between host crashes
+    host_mttr_s: float = 30.0           # mean host recovery time
+    inst_kill_rate: float = 0.0         # instance kills per second per pod
+    inst_mttr_s: float = 15.0           # mean pod restart time (host up)
+    nic_degrade_rate: float = 0.0       # NIC degradations per second per host
+    nic_mttr_s: float = 30.0            # mean NIC recovery time
+    nic_degrade_factor: float = 1.0     # capacity multiplier while degraded
+    retry_budget: int = 2         # default retries per RPC (per-edge
+                                  # overrides via the registry "retries" key)
+    retry_timeout_s: float = float("inf")  # per-attempt timeout (age of the
+                                  # attempt before it counts as failed)
+    cb_err_thresh: float = 2.0    # breaker trip threshold on the per-edge
+                                  # error-rate EMA (> 1 = breaker disabled)
+    cb_alpha: float = 0.3         # error-rate EMA coefficient
+    cb_cooldown_s: float = 10.0   # open → half-open cooldown
+    egress_shaping: bool = False  # clamp per-instance Transit egress by
+                                  # Instances.bw (fabric mode, §6)
+
     # --- usage accounting (paper §5.2 linear model) ----------------------
     idle_mips_frac: float = 0.0   # idle floor: instances consume a small
                                   # fraction of their allocation when ON
@@ -158,6 +188,18 @@ class DynParams(NamedTuple):
     vs_overhead_frac: jnp.ndarray
     nic_egress_mbps: jnp.ndarray
     nic_ingress_mbps: jnp.ndarray
+    host_mtbf_s: jnp.ndarray
+    host_mttr_s: jnp.ndarray
+    inst_kill_rate: jnp.ndarray
+    inst_mttr_s: jnp.ndarray
+    nic_degrade_rate: jnp.ndarray
+    nic_mttr_s: jnp.ndarray
+    nic_degrade_factor: jnp.ndarray
+    retry_budget: jnp.ndarray
+    retry_timeout_s: jnp.ndarray
+    cb_err_thresh: jnp.ndarray
+    cb_alpha: jnp.ndarray
+    cb_cooldown_s: jnp.ndarray
 
     @staticmethod
     def from_params(p: "SimParams") -> "DynParams":
@@ -176,7 +218,16 @@ class DynParams(NamedTuple):
             idle_mips_frac=f(p.idle_mips_frac),
             vs_overhead_frac=f(p.vs_overhead_frac),
             nic_egress_mbps=f(p.nic_egress_mbps),
-            nic_ingress_mbps=f(p.nic_ingress_mbps))
+            nic_ingress_mbps=f(p.nic_ingress_mbps),
+            host_mtbf_s=f(p.host_mtbf_s), host_mttr_s=f(p.host_mttr_s),
+            inst_kill_rate=f(p.inst_kill_rate), inst_mttr_s=f(p.inst_mttr_s),
+            nic_degrade_rate=f(p.nic_degrade_rate),
+            nic_mttr_s=f(p.nic_mttr_s),
+            nic_degrade_factor=f(p.nic_degrade_factor),
+            retry_budget=i(p.retry_budget),
+            retry_timeout_s=f(p.retry_timeout_s),
+            cb_err_thresh=f(p.cb_err_thresh), cb_alpha=f(p.cb_alpha),
+            cb_cooldown_s=f(p.cb_cooldown_s))
 
 
 class Clients(NamedTuple):
@@ -196,6 +247,12 @@ class Requests(NamedTuple):
     finish: jnp.ndarray       # [R] f32 max cloudlet finish time so far
     response: jnp.ndarray     # [R] f32 final response (s), -1 while open
     critical_len: jnp.ndarray # [R] i32 nodes on the critical (longest) chain
+    failed: jnp.ndarray       # [R] u8 1 = a cloudlet of this request failed
+    #                           permanently (retries exhausted / fail-fast);
+    #                           the request completes as a failed completion.
+    #                           uint8: the array rides the scan carry, so a
+    #                           word-sized flag would cost two [R] i32
+    #                           passes per tick in every mode
 
 
 # Column layout of the stacked cloudlet pool (DESIGN.md §2.2): all i32
@@ -204,7 +261,7 @@ class Requests(NamedTuple):
 # scatter per field.  Order here is the storage order — keep in sync with
 # the property accessors below and `zeros_state`.
 CL_I_FIELDS = ("status", "req", "service", "inst", "wait_ticks", "depth",
-               "src_host")
+               "src_host", "attempt", "edge", "src_inst")
 CL_F_FIELDS = ("length", "rem", "arrival", "start", "rem_bytes")
 CL_I_IDX = {n: i for i, n in enumerate(CL_I_FIELDS)}
 CL_F_IDX = {n: i for i, n in enumerate(CL_F_FIELDS)}
@@ -222,14 +279,21 @@ class Cloudlets(NamedTuple):
       ints[:, 4] wait_ticks i32 ticks spent in the waiting queue
       ints[:, 5] depth      i32 hops from the root cloudlet
       ints[:, 6] src_host   i32 transfer source host (-1 = client / none)
+      ints[:, 7] attempt    i32 retry attempt counter (0 = first try, §7)
+      ints[:, 8] edge       i32 service-graph edge this RPC traverses:
+                                parent_svc * d_max + slot for call edges,
+                                S * d_max + api for client→entry edges
+                                (retry policy / circuit breaker key, §7)
+      ints[:, 9] src_inst   i32 caller instance (-1 = external client);
+                                egress shaping + retry re-addressing
       flts[:, 0] length     f32 total MI (Gaussian, paper §4.1.2)
       flts[:, 1] rem        f32 remaining MI
-      flts[:, 2] arrival    f32 seconds
+      flts[:, 2] arrival    f32 seconds (of the current attempt)
       flts[:, 3] start      f32 first-execution time (-1 = not yet)
       flts[:, 4] rem_bytes  f32 MB still in flight (TRANSIT status, §6)
     """
 
-    ints: jnp.ndarray        # [C, 7] i32
+    ints: jnp.ndarray        # [C, 10] i32
     flts: jnp.ndarray        # [C, 5] f32
 
     @property
@@ -259,6 +323,18 @@ class Cloudlets(NamedTuple):
     @property
     def src_host(self) -> jnp.ndarray:
         return self.ints[:, 6]
+
+    @property
+    def attempt(self) -> jnp.ndarray:
+        return self.ints[:, 7]
+
+    @property
+    def edge(self) -> jnp.ndarray:
+        return self.ints[:, 8]
+
+    @property
+    def src_inst(self) -> jnp.ndarray:
+        return self.ints[:, 9]
 
     @property
     def length(self) -> jnp.ndarray:
@@ -351,6 +427,42 @@ class NetStats(NamedTuple):
     #                            (bin = net_hist_bin_s; last bin = overflow)
 
 
+class FaultState(NamedTuple):
+    """Fault-injection & resilience state (Disruption phase, DESIGN.md §7).
+
+    All zeros-of-the-right-shape in ``faults="none"`` mode — present so the
+    pytree shape is mode-independent, but never read or written there.
+
+    The circuit breaker per service edge is a pure status mask over
+    ``edge_open_until``: CLOSED while ``open_until <= 0``, OPEN while
+    ``time < open_until`` (new calls fail fast), HALF-OPEN once the cooldown
+    passes (``0 < open_until <= time`` — probe traffic flows; the first
+    observed failure re-opens, the first all-success tick closes).
+    """
+
+    host_up: jnp.ndarray         # [H] i32 1 = host up
+    nic_ok: jnp.ndarray          # [H] i32 1 = NIC healthy (degradation)
+    edge_open_until: jnp.ndarray # [E] f32 breaker clock (see above)
+    edge_err_ema: jnp.ndarray    # [E] f32 error-rate EMA per edge
+    edge_succ: jnp.ndarray       # [E] i32 successes since the last breaker
+    #                              update (written by execute, consumed and
+    #                              reset by the next Disruption phase)
+
+
+class FaultStats(NamedTuple):
+    """Cumulative resilience/availability history (joins QoSReport, §7)."""
+
+    host_crashes: jnp.ndarray    # i32 injected host-down events
+    host_recoveries: jnp.ndarray # i32 host recoveries (observed-MTTR denom.)
+    inst_kills: jnp.ndarray      # i32 injected instance kills
+    failed_attempts: jnp.ndarray # i32 cloudlet attempts that failed
+    retries: jnp.ndarray         # i32 retry attempts respawned
+    failfast: jnp.ndarray        # i32 attempts failed fast by an open breaker
+    failed_requests: jnp.ndarray # i32 requests completed as failed
+    breaker_trips: jnp.ndarray   # i32 closed → open transitions
+    down_time_s: jnp.ndarray     # f32 Σ host-down seconds (MTTR numerator)
+
+
 class SchedState(NamedTuple):
     """Service→replica dispatch tables, maintained incrementally.
 
@@ -404,6 +516,8 @@ class SimState(NamedTuple):
     sched: SchedState
     svc_stats: SvcStats
     counters: Counters
+    fault: FaultState
+    fstats: FaultStats
 
 
 class TickTrace(NamedTuple):
@@ -419,15 +533,22 @@ class TickTrace(NamedTuple):
     active_clients: jnp.ndarray
 
 
-def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1
-                ) -> SimState:
-    """Build the initial (empty) simulation state."""
+def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
+                n_edges: int | None = None) -> SimState:
+    """Build the initial (empty) simulation state.
+
+    ``n_edges`` sizes the per-service-edge resilience tables (retry policy /
+    circuit breaker, §7): ``n_services * d_max`` call edges plus one
+    client→entry edge per API.  Defaults to the caps-derived bound with a
+    single API.
+    """
     caps.validate()
     f32 = jnp.float32
     i32 = jnp.int32
     Nc, R, C, I, V = (caps.n_clients, caps.max_requests, caps.max_cloudlets,
                       caps.max_instances, caps.n_vms)
     S = n_services
+    E = n_edges if n_edges is not None else n_services * caps.d_max + 1
     return SimState(
         tick=jnp.zeros((), i32),
         time=jnp.zeros((), f32),
@@ -443,11 +564,12 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1
             finish=jnp.zeros((R,), f32),
             response=jnp.full((R,), -1.0, f32),
             critical_len=jnp.zeros((R,), i32),
+            failed=jnp.zeros((R,), jnp.uint8),
         ),
         cloudlets=Cloudlets(
             # column init values follow CL_I_FIELDS / CL_F_FIELDS order
-            ints=jnp.tile(jnp.asarray([[0, -1, -1, -1, 0, 0, -1]], i32),
-                          (C, 1)),
+            ints=jnp.tile(jnp.asarray([[0, -1, -1, -1, 0, 0, -1, 0, -1, -1]],
+                                      i32), (C, 1)),
             flts=jnp.tile(jnp.asarray([[0.0, 0.0, 0.0, -1.0, 0.0]], f32),
                           (C, 1)),
         ),
@@ -502,6 +624,15 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1
         ),
         counters=Counters(*([jnp.zeros((), i32)] * 5 + [jnp.zeros((), f32)]
                             + [jnp.zeros((), i32)] * 6)),
+        fault=FaultState(
+            host_up=jnp.ones((V,), i32),
+            nic_ok=jnp.ones((V,), i32),
+            edge_open_until=jnp.zeros((E,), f32),
+            edge_err_ema=jnp.zeros((E,), f32),
+            edge_succ=jnp.zeros((E,), i32),
+        ),
+        fstats=FaultStats(*([jnp.zeros((), i32)] * 8
+                            + [jnp.zeros((), f32)])),
     )
 
 

@@ -1,0 +1,326 @@
+"""Fault injection & resilience (DESIGN.md §7): the Disruption tick phase,
+retry/breaker semantics, and the faults="none" bit-identity guarantee.
+
+Pinned contracts:
+
+ * ``faults="none"`` (the default) compiles the exact pre-faults program:
+   the golden digests captured before the network fabric landed (and
+   re-pinned by tests/test_network.py) still hold bit for bit;
+ * a mass-kill wave frees its pool slots and respawns the retries in the
+   SAME tick through the two-scatter spawn path, without leaking ``n_exec``
+   or dropping a retry;
+ * retry-budget exhaustion propagates to the owning request as a failed
+   completion, counted exactly once;
+ * chaos conservation: every spawned cloudlet is finished, in flight, or a
+   counted failed attempt;
+ * fault rates sweep through ``run_batch`` with no recompile and bit-match
+   solo runs;
+ * the circuit breaker trips on a dead edge, fails fast while open, and
+   HS scale-out respawns replicas off down hosts.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
+                        batch_item, build_app, diamond, linear_chain,
+                        summarize)
+from repro.core.faults import disruption
+from repro.core.types import (CL_EXEC, CL_FREE, CL_WAITING, DynParams,
+                              INST_DOWN, INST_ON, zeros_state)
+
+from test_network import GOLDEN, _digest_f32, _diamond_sim
+
+i32, f32 = jnp.int32, jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# faults="none": bit-identical to the pre-faults engine
+# ---------------------------------------------------------------------------
+
+def test_faults_none_bit_identical_golden():
+    """The default mode (faults="none" is what _diamond_sim builds) still
+    reproduces the pre-fabric golden digests after the resilience columns
+    and state joined the pytrees."""
+    sim, _ = _diamond_sim()
+    assert sim.params.faults == "none"
+    res = sim.run()
+    st = res.state
+    assert _digest_f32(st.requests.response) == GOLDEN["diamond_resp"]
+    assert int(st.counters.completed) == GOLDEN["diamond_completed"]
+    assert int(st.counters.spawned) == GOLDEN["diamond_spawned"]
+    assert _digest_f32(res.trace.used_mips) == \
+        GOLDEN["diamond_trace_used_mips"]
+    # the fault state exists but never moves in faults="none" mode
+    assert int(np.asarray(st.fault.host_up).sum()) == sim.caps.n_vms
+    assert int(st.fstats.failed_attempts) == 0
+    assert int(st.fstats.retries) == 0
+    assert int(np.asarray(st.requests.failed).sum()) == 0
+
+
+def test_faults_param_validated():
+    sim, params = _diamond_sim()
+    bad = dataclasses.replace(params, faults="mayhem")
+    with pytest.raises(ValueError, match="none.*chaos|chaos.*none"):
+        Simulation(diamond(mi=400.0), caps=sim.caps, params=bad)
+
+
+def test_run_batch_rejects_faults_mode_sweep():
+    sim, params = _diamond_sim()
+    with pytest.raises(ValueError, match="structural"):
+        sim.run_batch([params, dataclasses.replace(params, faults="chaos")])
+
+
+# ---------------------------------------------------------------------------
+# Disruption phase unit semantics (direct call on a crafted state)
+# ---------------------------------------------------------------------------
+
+def _crafted(C=64, retry_budget=2, host_mtbf_s=1e-9):
+    """A full pool of EXEC cloudlets on one instance of one service, and a
+    fault schedule that crashes every host on the next sample."""
+    g = linear_chain(1, mi=100.0)
+    app = build_app(g)
+    caps = SimCaps(n_clients=4, max_requests=max(C, 4), max_cloudlets=C,
+                   max_instances=4, n_vms=2, d_max=1, max_replicas=1)
+    params = SimParams(dt=0.1, n_ticks=1, faults="chaos",
+                       retry_budget=retry_budget, host_mtbf_s=host_mtbf_s,
+                       host_mttr_s=float("inf"))
+    dyn = DynParams.from_params(params)
+    state = zeros_state(caps, params, jax.random.PRNGKey(0), n_services=1,
+                        n_edges=int(app.n_edges))
+    inst = state.instances._replace(
+        status=state.instances.status.at[0].set(INST_ON),
+        service=state.instances.service.at[0].set(0),
+        vm=state.instances.vm.at[0].set(0),
+        host=state.instances.host.at[0].set(0),
+        mips=state.instances.mips.at[0].set(1000.0),
+        n_exec=state.instances.n_exec.at[0].set(C),
+    )
+    sched = state.sched._replace(
+        inst_of_rank=state.sched.inst_of_rank.at[0, 0].set(0),
+        svc_replicas=state.sched.svc_replicas.at[0].set(1))
+    cl = state.cloudlets.with_cols(
+        status=CL_EXEC, req=jnp.arange(C, dtype=i32), service=0, inst=0,
+        wait_ticks=0, depth=0, src_host=-1, attempt=0, edge=0, src_inst=-1,
+        length=100.0, rem=50.0, arrival=0.0, start=0.0, rem_bytes=0.0)
+    req = state.requests._replace(
+        count=jnp.asarray(C, i32),
+        api=state.requests.api.at[:C].set(0),
+        arrival=state.requests.arrival.at[:C].set(0.0),
+        outstanding=state.requests.outstanding.at[:C].set(1),
+        spawned=state.requests.spawned.at[:C].set(1))
+    state = state._replace(instances=inst, sched=sched, cloudlets=cl,
+                           requests=req,
+                           time=jnp.asarray(1.0, f32))
+    return state, app, caps, params, dyn
+
+
+def test_mass_kill_recycles_slots_in_one_tick():
+    """A host crash fails a FULL pool of executing cloudlets; every one is
+    within its retry budget, so the wave frees C slots and respawns C
+    retries in the same Disruption pass — zero drops, zero n_exec leak."""
+    C = 64
+    state, app, caps, params, dyn = _crafted(C=C, retry_budget=2)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    out = disruption(state, app, caps, params, dyn, k1, k2, None)
+    cl_status = np.asarray(out.cloudlets.status)
+    # every slot was freed AND re-filled by its retry (WAITING, attempt 1)
+    assert (cl_status == CL_WAITING).all()
+    assert (np.asarray(out.cloudlets.attempt) == 1).all()
+    assert int(out.fstats.failed_attempts) == C
+    assert int(out.fstats.retries) == C
+    assert int(out.counters.spawned) == C        # retry spawns counted
+    assert int(out.counters.dropped_cloudlets) == 0
+    # the crashed instance is DOWN with a zeroed execution count
+    assert int(np.asarray(out.instances.status)[0]) == INST_DOWN
+    assert int(np.asarray(out.instances.n_exec)[0]) == 0
+    # outstanding untouched: a retry replaces its attempt
+    assert (np.asarray(out.requests.outstanding)[:C] == 1).all()
+    assert int(np.asarray(out.requests.failed).sum()) == 0
+    assert int(out.fstats.host_crashes) == caps.n_vms
+
+
+def test_budget_exhausted_wave_fails_requests_exactly_once():
+    """retry_budget=0: the same wave becomes C permanent failures — slots
+    free, outstanding drains, every request is marked failed once."""
+    C = 32
+    state, app, caps, params, dyn = _crafted(C=C, retry_budget=0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    out = disruption(state, app, caps, params, dyn, k1, k2, None)
+    assert (np.asarray(out.cloudlets.status) == CL_FREE).all()
+    assert int(out.fstats.retries) == 0
+    assert int(out.fstats.failed_attempts) == C
+    assert (np.asarray(out.requests.outstanding)[:C] == 0).all()
+    assert (np.asarray(out.requests.failed)[:C] == 1).all()
+    # finish was scatter-maxed with the failure time → response ≥ 0 later
+    assert (np.asarray(out.requests.finish)[:C] >= 1.0 - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# engine-level chaos semantics
+# ---------------------------------------------------------------------------
+
+def _chaos_sim(**over):
+    caps = SimCaps(n_clients=16, max_requests=1024, max_cloudlets=512,
+                   max_instances=8, n_vms=4, d_max=2, max_replicas=2)
+    kw = dict(dt=0.05, n_ticks=600, n_clients=12, spawn_rate=5.0,
+              wait_lo=0.5, wait_hi=1.5, seed=3, faults="chaos",
+              host_mtbf_s=20.0, host_mttr_s=5.0, retry_timeout_s=3.0,
+              retry_budget=2, inst_kill_rate=0.01)
+    kw.update(over)
+    params = SimParams(**kw)
+    tmpl = InstanceTemplate(mips=8000.0, limit_mips=16000.0, replicas=2)
+    return Simulation(diamond(mi=400.0), caps=caps, params=params,
+                      default_template=tmpl,
+                      vm_mips=np.full(4, 64000.0, np.float32)), params
+
+
+def test_chaos_conservation_and_availability():
+    """Acceptance: a deterministic seeded chaos run reports availability
+    < 1 and retries > 0, and the chaos conservation law holds — every
+    spawned cloudlet is finished, in flight, or a counted failed attempt
+    (no n_exec leak through the failure waves)."""
+    sim, _ = _chaos_sim()
+    res = sim.run()
+    st = res.state
+    rep = summarize(sim, res)
+    assert rep.host_crashes > 0
+    assert rep.retries > 0
+    assert rep.failed_requests > 0
+    assert 0.0 <= rep.availability < 1.0
+    assert rep.error_rate > 0.0
+    assert rep.retry_amplification > 1.0
+    assert rep.observed_mttr_s > 0.0
+
+    spawned = int(st.counters.spawned)
+    finished = int(st.counters.finished)
+    in_flight = int((np.asarray(st.cloudlets.status) != CL_FREE).sum())
+    assert spawned == finished + in_flight + int(st.fstats.failed_attempts)
+    # n_exec matches the pool exactly after hundreds of failure waves
+    cl_inst = np.asarray(st.cloudlets.inst)
+    cl_st = np.asarray(st.cloudlets.status)
+    I = st.instances.status.shape[0]
+    expect = np.bincount(cl_inst[cl_st == CL_EXEC], minlength=I)[:I]
+    np.testing.assert_array_equal(expect,
+                                  np.asarray(st.instances.n_exec))
+    # outstanding ≥ 0 and sums to the in-flight pool
+    out = np.asarray(st.requests.outstanding)[:int(st.requests.count)]
+    assert (out >= 0).all()
+    assert out.sum() == in_flight
+    # failed completions counted exactly once
+    resp = np.asarray(st.requests.response)
+    assert int(st.counters.completed) == int((resp >= 0).sum())
+    failed = np.asarray(st.requests.failed)
+    assert set(np.unique(failed)) <= {0, 1}
+    assert int(st.fstats.failed_requests) == \
+        int(((resp >= 0) & (failed > 0)).sum())
+
+
+def test_chaos_deterministic_given_seed():
+    sim1, _ = _chaos_sim()
+    sim2, _ = _chaos_sim()
+    r1, r2 = sim1.run(), sim2.run()
+    np.testing.assert_array_equal(np.asarray(r1.state.requests.response),
+                                  np.asarray(r2.state.requests.response))
+    assert int(r1.state.fstats.failed_attempts) == \
+        int(r2.state.fstats.failed_attempts)
+
+
+def test_fault_rates_sweep_via_run_batch_bitmatch_solo():
+    """Chaos intensity sweeps through DynParams: one compile, and every
+    point bit-matches its solo run — failures, retries and all."""
+    sim, base = _chaos_sim(n_ticks=300)
+    sweeps = [dataclasses.replace(base, host_mtbf_s=m, inst_kill_rate=k)
+              for m, k in ((60.0, 0.0), (20.0, 0.01), (8.0, 0.05))]
+    res_b = sim.run_batch(sweeps)
+    for b, p in enumerate(sweeps):
+        solo = Simulation(
+            sim.graph, caps=sim.caps, params=p,
+            default_template=InstanceTemplate(mips=8000.0,
+                                              limit_mips=16000.0,
+                                              replicas=2),
+            vm_mips=np.full(4, 64000.0, np.float32)).run()
+        item = batch_item(res_b, b)
+        np.testing.assert_array_equal(
+            np.asarray(item.state.requests.response),
+            np.asarray(solo.state.requests.response))
+        for field in ("failed_attempts", "retries", "host_crashes",
+                      "failed_requests"):
+            assert int(getattr(item.state.fstats, field)) == \
+                int(getattr(solo.state.fstats, field)), (b, field)
+    # more chaos → more failures across the sweep
+    fails = [int(batch_item(res_b, b).state.fstats.failed_attempts)
+             for b in range(3)]
+    assert fails[0] < fails[-1]
+
+
+def test_breaker_trips_open_and_fails_fast():
+    """All hosts die at t≈0 and never recover: calls time out, the
+    error-rate EMA saturates, the breaker trips and subsequent calls fail
+    fast.  With the threshold above 1 the breaker never engages."""
+    caps = SimCaps(n_clients=8, max_requests=512, max_cloudlets=256,
+                   max_instances=4, n_vms=2, d_max=1, max_replicas=1)
+    base = dict(dt=0.05, n_ticks=400, n_clients=8, spawn_rate=20.0,
+                wait_lo=0.3, wait_hi=0.8, seed=0, faults="chaos",
+                host_mtbf_s=1e-4, host_mttr_s=float("inf"),
+                retry_timeout_s=0.5, retry_budget=1, cb_cooldown_s=2.0)
+    on = SimParams(cb_err_thresh=0.3, **base)
+    off = SimParams(cb_err_thresh=2.0, **base)
+    g = linear_chain(1, mi=200.0)
+    rep_on = None
+    for params, name in ((on, "on"), (off, "off")):
+        sim = Simulation(g, caps=caps, params=params)
+        rep = summarize(sim, sim.run())
+        assert rep.availability == 0.0, name     # nothing can ever succeed
+        assert rep.failed_requests > 0, name
+        if name == "on":
+            rep_on = rep
+            assert rep.breaker_trips > 0
+            assert rep.failfast_failures > 0
+        else:
+            assert rep.breaker_trips == 0
+            assert rep.failfast_failures == 0
+            # fail-fast spares the doomed retries the full timeout ladder
+            assert rep.retries > rep_on.retries
+
+
+def test_hs_scale_out_respawns_off_down_hosts():
+    """Permanent host crashes + HS scaling: replicas are only ever placed
+    on up hosts, so no ON instance ends the run on a down host."""
+    caps = SimCaps(n_clients=16, max_requests=1024, max_cloudlets=512,
+                   max_instances=16, n_vms=4, d_max=2, max_replicas=4)
+    params = SimParams(dt=0.05, n_ticks=600, n_clients=16, spawn_rate=10.0,
+                       wait_lo=0.3, wait_hi=0.8, seed=5, faults="chaos",
+                       host_mtbf_s=40.0, host_mttr_s=float("inf"),
+                       retry_timeout_s=2.0, scaling_policy=1,
+                       scale_interval=20, hs_util_hi=0.4, hs_util_lo=0.01)
+    sim = Simulation(diamond(mi=400.0), caps=caps, params=params,
+                     default_template=InstanceTemplate(mips=1000.0,
+                                                       limit_mips=2000.0),
+                     vm_mips=np.full(4, 64000.0, np.float32))
+    res = sim.run()
+    st = res.state
+    up = np.asarray(st.fault.host_up)
+    assert up.sum() < len(up)                    # some hosts really died
+    assert int(st.counters.scale_out) > 0        # HS really respawned
+    on = np.asarray(st.instances.status) == INST_ON
+    hosts = np.asarray(st.instances.host)
+    assert on.any()
+    assert (up[hosts[on]] == 1).all()
+
+
+def test_recovery_restores_availability():
+    """Crash/recover churn with quick MTTR: recoveries are observed and a
+    healthy fraction of requests still completes successfully."""
+    sim, _ = _chaos_sim(host_mtbf_s=20.0, host_mttr_s=2.0,
+                        inst_mttr_s=0.5, inst_kill_rate=0.0,
+                        retry_timeout_s=3.0)
+    res = sim.run()
+    rep = summarize(sim, res)
+    assert rep.host_crashes > 0
+    assert int(res.state.fstats.host_recoveries) > 0
+    assert rep.availability > 0.2
+    assert rep.observed_mttr_s > 0.0

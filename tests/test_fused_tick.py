@@ -62,6 +62,9 @@ def test_scatter_pool_bitmatches_per_field(C, M, seed, rng):
         service=jnp.asarray(r.integers(0, 9, K), i32), inst=-1,
         wait_ticks=0, depth=jnp.asarray(r.integers(0, 4, K), i32),
         src_host=jnp.asarray(r.integers(-1, 4, K), i32),
+        attempt=jnp.asarray(r.integers(0, 3, K), i32),
+        edge=jnp.asarray(r.integers(-1, 12, K), i32),
+        src_inst=jnp.asarray(r.integers(-1, 6, K), i32),
         length=length, rem=length,
         arrival=jnp.asarray(r.uniform(0, 10, K), f32), start=-1.0,
         rem_bytes=jnp.asarray(r.uniform(0, 1, K), f32))

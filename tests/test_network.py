@@ -327,6 +327,36 @@ def test_fabric_round_robin_uses_all_replicas():
         assert (replicas_busy > 0).all(), (s, busy, svc)
 
 
+def test_egress_shaping_bw_starved_instance_slows_transit():
+    """PR-2 follow-up (§6): with ``egress_shaping=True`` an instance's
+    concurrent transfers share its own ``Instances.bw`` allowance, so a
+    bw-starved instance's transit time rises even on amply-provisioned
+    NICs; shaping off (the default, PR-2 program) is unaffected."""
+    def run_one(shaping: bool, bw: float):
+        caps = SimCaps(n_clients=16, max_requests=512, max_cloudlets=512,
+                       max_instances=8, n_vms=2, d_max=2, max_replicas=2)
+        params = SimParams(dt=0.05, n_ticks=300, n_clients=12,
+                           spawn_rate=5.0, wait_lo=0.5, wait_hi=1.5, seed=3,
+                           network="fabric", nic_egress_mbps=1000.0,
+                           nic_ingress_mbps=1000.0, egress_shaping=shaping)
+        from repro.core import policies
+        sim = Simulation(diamond(mi=400.0), caps=caps, params=params,
+                         default_template=InstanceTemplate(
+                             mips=8000.0, limit_mips=16000.0, bw=bw),
+                         vm_mips=np.full(2, 64000.0, np.float32),
+                         placement_policy=policies.PLACE_SPREAD)
+        return summarize(sim, sim.run())
+
+    rep_off = run_one(False, 0.5)
+    rep_on = run_one(True, 0.5)
+    rep_on_fat = run_one(True, 1000.0)
+    assert rep_on.net_transits > 0
+    # the starved instances' hops cross the fabric slower under shaping
+    assert rep_on.avg_transit_ms > 2.0 * rep_off.avg_transit_ms
+    # with ample instance bw the clamp never binds: same as shaping off
+    assert abs(rep_on_fat.avg_transit_ms - rep_off.avg_transit_ms) < 1e-3
+
+
 def test_network_param_validated():
     sim, params = _diamond_sim()
     bad = dataclasses.replace(params, network="mesh")
