@@ -166,6 +166,28 @@ def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
     )
 
 
+def bytes_per_tick(tag: str, network: bool = False,
+                   faults: bool = False) -> float:
+    """Per-tick "bytes accessed" of the compiled scan (XLA cost_analysis)
+    for a Table 2 case — the footprint metric behind the mode-keyed pool
+    layout (DESIGN.md §2.2): wall clocks drift on shared containers, but
+    the compiled program's byte traffic is deterministic, so the reclaim
+    from dropping disabled-phase columns is tracked PR-over-PR without
+    timing noise.  Compiles (cached) but never executes the case."""
+    from repro.core.types import DynParams
+
+    n_requests, n_services, replicas, cpr, fanout = CASES[tag]
+    sim, meta = build_case(n_requests, n_services, replicas, fanout,
+                           network=network, faults=faults)
+    state = sim.init_state()
+    dyn = DynParams.from_params(sim.params)
+    compiled, _ = sim._get_compiled(state, dyn)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):        # older jax returns one dict per device
+        ca = ca[0]
+    return float(ca.get("bytes accessed", -1.0)) / meta["n_ticks"]
+
+
 def run_case(tag, n_requests, n_services, replicas, cloudlets_per_req,
              paper_s, fanout=1):
     """Run one Table 2 case and emit the CSV rows."""

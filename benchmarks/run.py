@@ -7,7 +7,10 @@ CSV rows (see common.emit).
 ``--perf-json`` additionally writes the machine-readable perf-trajectory
 file (BENCH_perf.json): wall seconds and ticks/sec for the requested
 Table 2 capacity cases on the jnp path plus a scaled-down
-pallas-interpret case, so the hot-path trend is tracked across PRs.
+pallas-interpret case, so the hot-path trend is tracked across PRs, and
+bytes/tick per mode (default / +net / +faults) from XLA cost_analysis —
+the timing-noise-free footprint metric behind the mode-keyed pool layout
+(DESIGN.md §2.2).
 
     PYTHONPATH=src python -m benchmarks.run --only perf \
         --perf-json BENCH_perf.json --perf-cases case1b,case2b
@@ -33,10 +36,13 @@ def write_perf_json(path: str, cases, repeats: int = 2) -> None:
     from . import bench_capacity
 
     baselines = {}
+    bytes_baseline = {}
     if os.path.exists(path):
         try:
             with open(path) as f:
-                baselines = json.load(f).get("seed_baseline_wall_s", {})
+                prev = json.load(f)
+            baselines = prev.get("seed_baseline_wall_s", {})
+            bytes_baseline = prev.get("pr3_bytes_per_tick", {})
         except (OSError, ValueError):
             pass
 
@@ -106,6 +112,27 @@ def write_perf_json(path: str, cases, repeats: int = 2) -> None:
         "jax_backend": jax.default_backend(),
         "records": records,
     }
+    # bytes/tick per mode from XLA cost_analysis — NOT wall clock (container
+    # walls drift within a session); this is the stable footprint metric
+    # for the mode-keyed pool layout (DESIGN.md §2.2).  The PR-3 baseline
+    # (fixed 10-int/5-float layout) is carried over so the reclaim ratio
+    # stays comparable across regenerations.
+    if "case1b" in cases:
+        bpt = {}
+        for mode_tag, kw in (("case1b", {}), ("case1b+net", dict(network=True)),
+                             ("case1b+faults", dict(faults=True))):
+            bpt[mode_tag] = round(
+                bench_capacity.bytes_per_tick("case1b", **kw), 1)
+            base = bytes_baseline.get(mode_tag)
+            ratio = f" ({bpt[mode_tag] / base - 1.0:+.1%} vs pr3)" \
+                if base else ""
+            print(f"# bytes/tick {mode_tag}: {bpt[mode_tag]:.0f}{ratio}")
+        doc["bytes_per_tick"] = bpt
+        if bytes_baseline:
+            doc["pr3_bytes_per_tick"] = bytes_baseline
+            doc["bytes_reclaim_vs_pr3"] = {
+                k: round(1.0 - v / bytes_baseline[k], 4)
+                for k, v in bpt.items() if bytes_baseline.get(k)}
     if baselines:
         doc["seed_baseline_wall_s"] = baselines
     with open(path, "w") as f:

@@ -19,4 +19,5 @@ from .generator import (n_clients_analytic, qps_analytic,  # noqa: F401
 from .graph import ServiceGraph, build_graph, diamond, linear_chain, star  # noqa: F401
 from .qos import QoSReport, node_delays, report_text, summarize  # noqa: F401
 from .registry import register  # noqa: F401
-from .types import DynParams, SimCaps, SimParams, SimState  # noqa: F401
+from .types import (DynParams, PoolLayout, SimCaps, SimParams,  # noqa: F401
+                    SimState, resolve_layout)

@@ -54,6 +54,10 @@ class AppStatic(NamedTuple):
     edge_retry: jnp.ndarray     # [S*d_max + A] i32 per-edge retry budget,
     #                             -1 = run-wide default; indexed by the
     #                             cloudlet ``edge`` id (resilience, §7)
+    edge_timeout: jnp.ndarray   # [S*d_max + A] f32 per-edge attempt
+    #                             timeout (s), -1 = run-wide default
+    #                             (SimParams.retry_timeout_s); same edge-id
+    #                             layout as edge_retry
 
     @property
     def n_services(self) -> int:
@@ -124,4 +128,7 @@ def build_app(graph: ServiceGraph,
         edge_retry=jnp.concatenate(
             [jnp.asarray(graph.edge_retry, jnp.int32).reshape(-1),
              jnp.asarray(graph.api_retry, jnp.int32)]),
+        edge_timeout=jnp.concatenate(
+            [jnp.asarray(graph.edge_timeout, jnp.float32).reshape(-1),
+             jnp.asarray(graph.api_timeout, jnp.float32)]),
     )

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from . import network as netmod
 from .app import AppStatic
 from .pool import assign_free_slots, scatter_pool, segment_sum as _segsum
-from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING, Cloudlets,
+from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING,
                     DynParams, FaultState, INST_DOWN, INST_DRAIN, INST_FREE,
                     INST_ON, SimCaps, SimParams, SimState)
 
@@ -82,6 +82,17 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
     R = req.api.shape[0]
     V = state.vms.mips.shape[0]
     t, dt = state.time, dyn.dt
+    # Trace-time guard: the per-edge retry/breaker tables must cover every
+    # edge id the app can emit (S*d_max call edges + one client→entry edge
+    # per API) — an undersized table silently aliases breaker state via
+    # clamped gathers.  zeros_state sizes E correctly when given
+    # n_edges/n_apis; states built with a stale single-API default land
+    # here.
+    if int(app.n_edges) > E:
+        raise ValueError(
+            f"fault edge tables undersized: app emits edge ids up to "
+            f"{int(app.n_edges) - 1} but FaultState holds {E} edges — "
+            f"pass n_edges=app.n_edges (or n_apis) to zeros_state")
 
     k_host, k_inst, k_nic = jax.random.split(rng, 3)
 
@@ -127,15 +138,24 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
     ci = jnp.maximum(cl.inst, 0)
     inst_dead = (cl.inst >= 0) & (dead_now[ci]
                                   | (status_new[ci] == INST_DOWN))
-    src_dead = (cl.status == CL_TRANSIT) & (cl.src_host >= 0) \
-        & ~up_new[jnp.maximum(cl.src_host, 0)]
-    timeout = (t - cl.arrival) > dyn.retry_timeout_s
-    organic = active & (inst_dead | src_dead | timeout)
+    # Per-attempt timeout: the per-edge registry value ("timeouts" spec
+    # keys) when set, else the run-wide sweepable dyn.retry_timeout_s —
+    # mirroring the per-edge retry-budget resolver below.
+    e_safe = jnp.maximum(cl.edge, 0)
+    tmo = jnp.where(app.edge_timeout[e_safe] >= 0,
+                    app.edge_timeout[e_safe], dyn.retry_timeout_s)
+    doomed = inst_dead | ((t - cl.arrival) > tmo)
+    if "src_host" in cl.layout:
+        # fabric mode only: an in-flight transfer whose source host died
+        # loses its payload (uniform mode has no TRANSIT work by
+        # construction, and no src_host column to read)
+        doomed = doomed | ((cl.status == CL_TRANSIT) & (cl.src_host >= 0)
+                           & ~up_new[jnp.maximum(cl.src_host, 0)])
+    organic = active & doomed
 
     # circuit-breaker status masks (state machine documented in FaultState)
     open_m = fs.edge_open_until > t
     half_m = (fs.edge_open_until > 0) & ~open_m
-    e_safe = jnp.maximum(cl.edge, 0)
     cl_open = (cl.edge >= 0) & open_m[e_safe]
     # fail-fast only calls spawned since the previous Disruption pass: an
     # open breaker blocks NEW calls, it never cancels established work
@@ -234,15 +254,14 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
         src_host_sp = jnp.where(in_transit, sh, -1)
         bytes_sp = jnp.where(in_transit, payload, 0.0)
 
-    ints, flts = scatter_pool(
-        cl2.ints, cl2.flts, asg,
+    cloudlets = scatter_pool(
+        cl2, asg,
         status=status_sp, req=req_new, service=svc_new, inst=inst_sp,
         wait_ticks=0, depth=dep_new, src_host=src_host_sp,
         attempt=att_new, edge=edge_new, src_inst=sin_new,
         length=length, rem=length,
         arrival=jnp.full((Ka,), 0.0, f32) + t, start=-1.0,
         rem_bytes=bytes_sp)
-    cloudlets = Cloudlets(ints=ints, flts=flts)
 
     rds2 = jnp.where(asg.live, req_new, R)
     requests = requests._replace(

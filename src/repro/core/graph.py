@@ -43,6 +43,10 @@ class ServiceGraph:
     edge_retry : [S, d_max] int32 per-call-edge retry budget (-1 = use the
         run-wide ``SimParams.retry_budget`` — resilience, DESIGN.md §7).
     api_retry : [A] int32 client→entry retry budget (-1 = run-wide default).
+    edge_timeout : [S, d_max] float32 per-call-edge attempt timeout in
+        seconds (-1 = use the run-wide ``SimParams.retry_timeout_s``) —
+        timeout budgets match the per-edge retry budgets, DESIGN.md §7.
+    api_timeout : [A] float32 client→entry timeout (-1 = run-wide default).
     """
 
     names: List[str]
@@ -62,6 +66,8 @@ class ServiceGraph:
     api_payload_std: np.ndarray = None
     edge_retry: np.ndarray = None
     api_retry: np.ndarray = None
+    edge_timeout: np.ndarray = None
+    api_timeout: np.ndarray = None
 
     def __post_init__(self):
         """Fill default payload/retry tables for graphs built before the
@@ -85,6 +91,10 @@ class ServiceGraph:
             self.edge_retry = np.full((S, D), -1, np.int32)
         if self.api_retry is None:
             self.api_retry = np.full((A,), -1, np.int32)
+        if self.edge_timeout is None:
+            self.edge_timeout = np.full((S, D), -1.0, np.float32)
+        if self.api_timeout is None:
+            self.api_timeout = np.full((A,), -1.0, np.float32)
 
     # ------------------------------------------------------------------
     @property
@@ -169,6 +179,8 @@ def build_graph(
     default_payload_mb: float = DEFAULT_PAYLOAD_MB,
     retries: Dict[Tuple[str, str], int] | None = None,
     api_retries: Dict[str, int] | None = None,
+    timeouts: Dict[Tuple[str, str], float] | None = None,
+    api_timeouts: Dict[str, float] | None = None,
 ) -> ServiceGraph:
     """Construct a :class:`ServiceGraph`.
 
@@ -185,6 +197,10 @@ def build_graph(
     api_payloads : api name → client→entry payload mean in MB.
     retries / api_retries : per-edge retry budgets (resilience, §7);
         unlisted edges fall back to the run-wide ``SimParams.retry_budget``.
+    timeouts / api_timeouts : per-edge attempt timeouts in seconds (§7);
+        unlisted edges fall back to the run-wide
+        ``SimParams.retry_timeout_s``, so timeout budgets can match the
+        per-edge retry budgets.
     """
     names = list(services)
     index = {n: i for i, n in enumerate(names)}
@@ -262,6 +278,15 @@ def build_graph(
     api_retry = np.array(
         [int((api_retries or {}).get(a[0], -1)) for a in apis], np.int32)
 
+    # Per-edge attempt timeouts, same resolver/layout as the retry table.
+    edge_timeout = np.full((S, d_out), -1.0, np.float32)
+    for (src, dst), sec in (timeouts or {}).items():
+        s, d = edge_slot(src, dst, "timeout")
+        edge_timeout[s, d] = float(sec)
+    api_timeout = np.array(
+        [float((api_timeouts or {}).get(a[0], -1.0)) for a in apis],
+        np.float32)
+
     # Topological levels (longest distance from any root).
     levels = np.zeros(S, dtype=np.int32)
     indeg = n_pred.copy()
@@ -283,6 +308,7 @@ def build_graph(
         payload_mean=payload_mean, payload_std=payload_std,
         api_payload_mean=api_payload_mean, api_payload_std=api_payload_std,
         edge_retry=edge_retry, api_retry=api_retry,
+        edge_timeout=edge_timeout, api_timeout=api_timeout,
     )
     graph.validate()
     return graph

@@ -145,7 +145,9 @@ def transit(state: SimState, caps: SimCaps, params: SimParams,
         # Per-instance egress shaping (§6 follow-up): an instance's
         # concurrent transfers share its own ``Instances.bw`` allowance on
         # top of the port-level water-fill — the clamp only ever lowers
-        # rates, so NIC feasibility is preserved.
+        # rates, so NIC feasibility is preserved.  ``src_inst`` is a
+        # chaos-phase column otherwise; this opt-in registers it via
+        # PHASE_COLUMNS["Transit/egress_shaping"] (DESIGN.md §2.4).
         I = inst.status.shape[0]
         sin = cl.src_inst
         shaped = active & (sin >= 0)

@@ -69,8 +69,7 @@ def assign_free_slots(free_mask: jnp.ndarray, valid_mask: jnp.ndarray,
                           n_dropped=n_want - n_assigned)
 
 
-def scatter_pool(ints: jnp.ndarray, flts: jnp.ndarray, asg: SlotAssignment,
-                 **cols) -> tuple[jnp.ndarray, jnp.ndarray]:
+def scatter_pool(cl, asg: SlotAssignment, **cols):
     """Fused spawn writer: one wave of new cloudlets lands in exactly TWO
     scatters — every i32 field of the stacked [C, NI] pool in one, every
     f32 field of the [C, NF] pool in the other.  All three spawn sites —
@@ -78,19 +77,27 @@ def scatter_pool(ints: jnp.ndarray, flts: jnp.ndarray, asg: SlotAssignment,
     respawns (``faults.disruption``, §7) — go through here, so the pool
     write cost per tick is independent of how many columns exist.
 
-    Columns are passed BY NAME (the ``CL_I_FIELDS``/``CL_F_FIELDS``
-    vocabulary), each a rank-level [K] array or a scalar to broadcast,
-    so the storage order lives only in ``core.types``.  Every field must
-    be supplied — a spawn initializes whole rows.  Descriptor-level [M]
-    arrays must be pre-gathered by ``asg.src``.
+    ``cl`` is the :class:`core.types.Cloudlets` buffer; column order and
+    WIDTH come from its mode-keyed ``PoolLayout``, so the storage layout
+    lives only in ``core.types``.  Columns are passed BY NAME, each a
+    rank-level [K] array or a scalar to broadcast.  Every column of the
+    active layout must be supplied — a spawn initializes whole rows —
+    while registered columns outside the layout are accepted and skipped,
+    so spawn sites stay mode-agnostic (the dead values fold away under
+    jit).  Unregistered names raise.  Descriptor-level [M] arrays must be
+    pre-gathered by ``asg.src``.  Returns the updated ``Cloudlets``.
     """
     from .types import CL_F_FIELDS, CL_I_FIELDS
-    expect = set(CL_I_FIELDS) | set(CL_F_FIELDS)
-    if set(cols) != expect:
+    layout = cl.layout
+    vocab = set(CL_I_FIELDS) | set(CL_F_FIELDS)
+    missing = [n for n in layout.columns if n not in cols]
+    unknown = sorted(set(cols) - vocab)
+    if missing or unknown:
         raise TypeError(
-            f"scatter_pool needs exactly the fields {sorted(expect)}; "
-            f"missing {sorted(expect - set(cols))}, "
-            f"unknown {sorted(set(cols) - expect)}")
+            f"scatter_pool needs every column of the active layout "
+            f"{layout.columns}; missing {sorted(missing)}, "
+            f"unknown {unknown}")
+    ints, flts = cl.ints, cl.flts
     C = ints.shape[0]
     K = asg.dst.shape[0]
     dst = jnp.where(asg.live, asg.dst, C)  # sentinel C → dropped
@@ -100,8 +107,11 @@ def scatter_pool(ints: jnp.ndarray, flts: jnp.ndarray, asg: SlotAssignment,
             [jnp.broadcast_to(jnp.asarray(cols[n], dtype), (K,))
              for n in names], axis=1)
 
-    return (ints.at[dst].set(stacked(CL_I_FIELDS, ints.dtype), mode="drop"),
-            flts.at[dst].set(stacked(CL_F_FIELDS, flts.dtype), mode="drop"))
+    return cl.replace(
+        ints=ints.at[dst].set(stacked(layout.i_fields, ints.dtype),
+                              mode="drop"),
+        flts=flts.at[dst].set(stacked(layout.f_fields, flts.dtype),
+                              mode="drop"))
 
 
 def segment_rank(keys: jnp.ndarray, mask: jnp.ndarray,

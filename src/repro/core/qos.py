@@ -101,7 +101,11 @@ def summarize(sim: Simulation, result: SimResult,
     st = result.state
     params = params or sim.params
     resp_all = np.asarray(st.requests.response)
-    req_failed = np.asarray(st.requests.failed) > 0
+    # the failed flag is a chaos-mode column (zero-width under
+    # faults="none", where nothing ever fails)
+    failed_col = np.asarray(st.requests.failed)
+    req_failed = (failed_col > 0) if failed_col.size \
+        else np.zeros(resp_all.shape, bool)
     # response-time statistics cover SUCCESSFUL completions only (a failed
     # completion's "response" is its time-to-failure); identical to the
     # pre-faults report in faults="none" mode, where nothing ever fails

@@ -50,7 +50,10 @@ def graph_from_spec(spec: Dict[str, Any],
     Resilience extension (DESIGN.md §7): a service may carry a
     ``"retries": {callee: n}`` map (per-call-edge retry budget) and an API
     a ``"retries": n`` scalar (client→entry budget); unlisted edges use
-    the run-wide ``SimParams.retry_budget``.
+    the run-wide ``SimParams.retry_budget``.  Timeout budgets mirror the
+    retry resolver: a service ``"timeouts": {callee: seconds}`` map and an
+    API ``"timeout": seconds`` scalar override the run-wide
+    ``SimParams.retry_timeout_s`` per edge.
     """
     services = spec["services"]
     names = [s["name"] for s in services]
@@ -70,11 +73,18 @@ def graph_from_spec(spec: Dict[str, Any],
                for callee, n in s.get("retries", {}).items()}
     api_retries = {a["name"]: int(a["retries"])
                    for a in spec["apis"] if "retries" in a}
+    timeouts = {(s["name"], callee): float(sec)
+                for s in services
+                for callee, sec in s.get("timeouts", {}).items()}
+    api_timeouts = {a["name"]: float(a["timeout"])
+                    for a in spec["apis"] if "timeout" in a}
     return build_graph(names, calls, apis, len_mean, len_std,
                        payloads=payloads or None,
                        api_payloads=api_payloads or None,
                        retries=retries or None,
-                       api_retries=api_retries or None)
+                       api_retries=api_retries or None,
+                       timeouts=timeouts or None,
+                       api_timeouts=api_timeouts or None)
 
 
 def templates_from_spec(spec: Dict[str, Any],

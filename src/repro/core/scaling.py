@@ -105,17 +105,36 @@ def _scale_out(state: SimState, s, app: AppStatic) -> SimState:
 
 
 def _scale_in(state: SimState, s) -> SimState:
-    """Drain the newest replica; the slot frees once its queue empties."""
-    sched = state.sched
-    rank = sched.svc_replicas[s] - 1
-    slot = sched.inst_of_rank[s, rank]
-    ok = (rank >= 1) & (slot >= 0)
+    """Drain the newest ON replica; the slot frees once its queue empties.
+
+    Only ON replicas are eligible: flipping an ``INST_DOWN`` replica (chaos
+    mode, §7) to DRAIN would steal its restart path and let the VM share be
+    released twice (``drain_dies`` in the Disruption phase + ``drain_done``
+    in execute).  When the newest ON replica is not the newest rank, the
+    last rank's entry moves into the vacated rank so the dispatch table
+    stays compact (rank order is not load-bearing).  Rank 0 is never
+    drained; with no ON replica beyond it, scale-in skips.
+    """
+    sched, inst = state.sched, state.instances
+    R = sched.inst_of_rank.shape[1]
+    idx = jnp.arange(R)
+    slots = sched.inst_of_rank[s]
+    nrep = sched.svc_replicas[s]
+    on = ((idx < nrep) & (slots >= 0)
+          & (inst.status[jnp.maximum(slots, 0)] == INST_ON))
+    any_on = on.any()
+    rank = jnp.where(any_on, R - 1 - jnp.argmax(on[::-1]), -1)
+    slot = slots[jnp.maximum(rank, 0)]
+    ok = any_on & (rank >= 1)
 
     def commit(st: SimState) -> SimState:
         i = st.instances._replace(
             status=st.instances.status.at[slot].set(INST_DRAIN))
+        last = st.sched.svc_replicas[s] - 1
+        iof = st.sched.inst_of_rank.at[s, rank].set(
+            jnp.where(rank == last, -1, st.sched.inst_of_rank[s, last]))
         sc = st.sched._replace(
-            inst_of_rank=st.sched.inst_of_rank.at[s, rank].set(-1),
+            inst_of_rank=iof.at[s, last].set(-1),
             svc_replicas=st.sched.svc_replicas.at[s].add(-1))
         c = st.counters._replace(scale_in=st.counters.scale_in + 1)
         return st._replace(instances=i, sched=sc, counters=c)

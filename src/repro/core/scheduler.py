@@ -34,11 +34,11 @@ import jax.numpy as jnp
 
 from . import network as netmod
 from . import policies
-from ..kernels.cloudlet_step import cloudlet_finish as _cloudlet_finish_op
+from ..kernels.cloudlet_step import cloudlet_finish_pool as _cloudlet_finish_op
 from .app import AppStatic
 from .pool import (assign_free_slots, scatter_pool, segment_rank,
                    segment_sum as _segsum)
-from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING, Cloudlets,
+from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING,
                     DynParams, INST_DRAIN, INST_FREE, INST_ON, SimCaps,
                     SimParams, SimState)
 
@@ -146,16 +146,15 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
         bytes_new = jnp.where(tgt >= 0, payload, 0.0)
 
     # Fused spawn write: every i32 field in one scatter, every f32 field
-    # in the other.
-    ints, flts = scatter_pool(
-        cl.ints, cl.flts, asg,
+    # in the other (columns outside this mode's layout are skipped).
+    cloudlets = scatter_pool(
+        cl, asg,
         status=status_new, req=req_new, service=svc_new, inst=inst_new,
         wait_ticks=0, depth=0, src_host=src_host_new,
         attempt=0, edge=edge_new, src_inst=-1,
         length=length, rem=length,
         arrival=jnp.full((Ka,), 0.0, f32) + state.time, start=-1.0,
         rem_bytes=bytes_new)
-    cloudlets = Cloudlets(ints=ints, flts=flts)
 
     # direct scatter-adds: no [R]-sized temporaries on the spawn path
     rdst = jnp.where(asg.live, req_new, R)
@@ -313,11 +312,12 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
     # --- fused finish reduction: progress + every per-finish aggregate
     # (Pallas kernel on TPU / interpret, stacked-scatter jnp elsewhere);
     # the per-request arrays are updated in place, so the (often much
-    # larger) request pool is never re-streamed here ---
+    # larger) request pool is never re-streamed here.  The pool-level
+    # wrapper slices the kernel's input columns out of the stacked blocks
+    # through the mode-keyed PoolLayout ---
     req = state.requests
     out = _cloudlet_finish_op(
-        status_c, rem_c, inst_c, cl.req, cl.arrival, cl.start,
-        cl.depth, rate, state.time, dt,
+        cl, rate, state.time, dt,
         req.finish, req.critical_len, req.outstanding,
         n_inst=I,
         use_pallas=None if params.use_pallas_tick else False,
@@ -481,14 +481,13 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
         bytes_new = jnp.where(in_transit, payload, 0.0)
 
     # Fused spawn write: two scatters for the whole successor wave.
-    ints, flts = scatter_pool(
-        cl.ints, cl.flts, asg,
+    cloudlets = scatter_pool(
+        cl, asg,
         status=status_new, req=req_new, service=svc_new, inst=inst_new,
         wait_ticks=0, depth=dep_new, src_host=src_host_new,
         attempt=0, edge=edge_new, src_inst=pin_new,
         length=length, rem=length, arrival=tf_new, start=-1.0,
         rem_bytes=bytes_new)
-    cloudlets = Cloudlets(ints=ints, flts=flts)
 
     rdst = jnp.where(asg.live, req_new, R)
     requests = req._replace(

@@ -17,8 +17,10 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import functools
+from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -250,124 +252,264 @@ class Requests(NamedTuple):
     failed: jnp.ndarray       # [R] u8 1 = a cloudlet of this request failed
     #                           permanently (retries exhausted / fail-fast);
     #                           the request completes as a failed completion.
-    #                           uint8: the array rides the scan carry, so a
-    #                           word-sized flag would cost two [R] i32
-    #                           passes per tick in every mode
+    #                           A Disruption-phase column: shape [0] in
+    #                           faults="none" mode (mode-keyed registry) —
+    #                           uint8 so even chaos runs pay one byte per
+    #                           request on the scan carry, not a word
 
 
-# Column layout of the stacked cloudlet pool (DESIGN.md §2.2): all i32
-# fields live in one [C, NI] array and all f32 fields in one [C, NF] array,
-# so spawning writes the whole pool with TWO row scatters instead of one
-# scatter per field.  Order here is the storage order — keep in sync with
-# the property accessors below and `zeros_state`.
-CL_I_FIELDS = ("status", "req", "service", "inst", "wait_ticks", "depth",
-               "src_host", "attempt", "edge", "src_inst")
-CL_F_FIELDS = ("length", "rem", "arrival", "start", "rem_bytes")
-CL_I_IDX = {n: i for i, n in enumerate(CL_I_FIELDS)}
-CL_F_IDX = {n: i for i, n in enumerate(CL_F_FIELDS)}
+# --------------------------------------------------------------------------
+# Mode-keyed pool column registry (DESIGN.md §2.2).
+#
+# The stacked cloudlet pool stores all i32 fields as one [C, NI] array and
+# all f32 fields as one [C, NF] array, so spawning writes the whole pool
+# with TWO row scatters instead of one scatter per field.  WHICH columns
+# exist is mode-dependent: each tick phase declares the columns it needs,
+# and `resolve_layout` unions the declarations of the phases a SimParams
+# actually enables into a static `PoolLayout`.  A default
+# network="uniform"/faults="none" run therefore carries only the core
+# columns — the fabric (src_host/rem_bytes) and resilience
+# (attempt/edge/src_inst) columns never ride the scan carry unless their
+# phase is compiled in.
+# --------------------------------------------------------------------------
+
+# Full column vocabulary, in storage order: (name, block, init value).
+# The init value is what a free slot holds (`zeros_state`) — spawn waves
+# always initialize whole rows, so only free slots ever show it.
+POOL_COLUMNS = (
+    ("status", "i", 0),        # CL_*
+    ("req", "i", -1),          # owning request
+    ("service", "i", -1),      # service node
+    ("inst", "i", -1),         # assigned instance (-1 = unassigned)
+    ("wait_ticks", "i", 0),    # ticks spent in the waiting queue
+    ("depth", "i", 0),         # hops from the root cloudlet
+    ("src_host", "i", -1),     # transfer source host (-1 = client / none)
+    ("attempt", "i", 0),       # retry attempt counter (0 = first try, §7)
+    ("edge", "i", -1),         # service-graph edge this RPC traverses:
+    #                            parent_svc * d_max + slot for call edges,
+    #                            S * d_max + api for client→entry edges
+    #                            (retry policy / circuit breaker key, §7)
+    ("src_inst", "i", -1),     # caller instance (-1 = external client)
+    ("length", "f", 0.0),      # total MI (Gaussian, paper §4.1.2)
+    ("rem", "f", 0.0),         # remaining MI
+    ("arrival", "f", 0.0),     # seconds (of the current attempt)
+    ("start", "f", -1.0),      # first-execution time (-1 = not yet)
+    ("rem_bytes", "f", 0.0),   # MB still in flight (TRANSIT status, §6)
+)
+CL_I_FIELDS = tuple(n for n, b, _ in POOL_COLUMNS if b == "i")
+CL_F_FIELDS = tuple(n for n, b, _ in POOL_COLUMNS if b == "f")
+_COL_BLOCK = {n: b for n, b, _ in POOL_COLUMNS}
+_COL_INIT = {n: v for n, _, v in POOL_COLUMNS}
+
+# Tick phase → columns it reads/writes (the registry the layout is keyed
+# on).  The first four phases exist in every mode; Transit only under
+# network="fabric", Disruption only under faults="chaos", and the
+# egress-shaping clamp (a Transit sub-feature) only when opted in.
+PHASE_COLUMNS = {
+    "Generation": ("status", "req", "service", "inst", "wait_ticks",
+                   "depth", "length", "rem", "arrival", "start"),
+    "Dispatch":   ("status", "service", "inst", "wait_ticks", "arrival",
+                   "start"),
+    "Execute":    ("status", "req", "service", "inst", "depth", "rem",
+                   "arrival", "start"),
+    "Derive":     ("status", "req", "service", "inst", "depth", "length",
+                   "rem", "arrival", "start"),
+    "Transit":    ("status", "inst", "arrival", "src_host", "rem_bytes"),
+    "Transit/egress_shaping": ("src_inst",),
+    "Disruption": ("status", "req", "service", "inst", "depth", "attempt",
+                   "edge", "src_inst", "length", "rem", "arrival", "start"),
+}
 
 
-class Cloudlets(NamedTuple):
+@dataclasses.dataclass(frozen=True)
+class PoolLayout:
+    """Static name → column-index map of the stacked cloudlet pool.
+
+    Resolved once per mode combination (`resolve_layout`) and carried as
+    pytree *aux data* on :class:`Cloudlets`, so it is hashable, closed
+    over in jit, and keys the compile cache together with the structural
+    SimParams knobs that produced it.
+    """
+
+    i_fields: Tuple[str, ...]
+    f_fields: Tuple[str, ...]
+
+    def i(self, name: str) -> int:
+        """Index of an i32 column in the [C, NI] block."""
+        try:
+            return self.i_fields.index(name)
+        except ValueError:
+            raise KeyError(
+                f"pool column {name!r} is not part of this mode's layout "
+                f"(i32 columns: {self.i_fields})") from None
+
+    def f(self, name: str) -> int:
+        """Index of an f32 column in the [C, NF] block."""
+        try:
+            return self.f_fields.index(name)
+        except ValueError:
+            raise KeyError(
+                f"pool column {name!r} is not part of this mode's layout "
+                f"(f32 columns: {self.f_fields})") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.i_fields or name in self.f_fields
+
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return self.i_fields + self.f_fields
+
+    def init_ints(self) -> np.ndarray:
+        return np.array([_COL_INIT[n] for n in self.i_fields], np.int32)
+
+    def init_flts(self) -> np.ndarray:
+        return np.array([_COL_INIT[n] for n in self.f_fields], np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _layout_for(network: str, faults: str, egress_shaping: bool
+                ) -> PoolLayout:
+    phases = ["Generation", "Dispatch", "Execute", "Derive"]
+    if faults == "chaos":
+        phases.append("Disruption")
+    if network == "fabric":
+        phases.append("Transit")
+        if egress_shaping:
+            phases.append("Transit/egress_shaping")
+    need = {c for p in phases for c in PHASE_COLUMNS[p]}
+    return PoolLayout(
+        i_fields=tuple(n for n in CL_I_FIELDS if n in need),
+        f_fields=tuple(n for n in CL_F_FIELDS if n in need))
+
+
+def resolve_layout(params: "SimParams") -> PoolLayout:
+    """The static pool layout a SimParams' enabled phases require."""
+    return _layout_for(params.network, params.faults,
+                       params.network == "fabric" and params.egress_shaping)
+
+
+FULL_LAYOUT = _layout_for("fabric", "chaos", True)   # every column
+
+
+@jax.tree_util.register_pytree_node_class
+class Cloudlets:
     """Active-set RpcCloudlet buffer (paper §4.1.2, §4.2), stored as two
     stacked column blocks so one spawn wave is two scatters.
 
-    Field views (columns):
-      ints[:, 0] status     i32 CL_*
-      ints[:, 1] req        i32 owning request
-      ints[:, 2] service    i32 service node
-      ints[:, 3] inst       i32 assigned instance (-1 = unassigned)
-      ints[:, 4] wait_ticks i32 ticks spent in the waiting queue
-      ints[:, 5] depth      i32 hops from the root cloudlet
-      ints[:, 6] src_host   i32 transfer source host (-1 = client / none)
-      ints[:, 7] attempt    i32 retry attempt counter (0 = first try, §7)
-      ints[:, 8] edge       i32 service-graph edge this RPC traverses:
-                                parent_svc * d_max + slot for call edges,
-                                S * d_max + api for client→entry edges
-                                (retry policy / circuit breaker key, §7)
-      ints[:, 9] src_inst   i32 caller instance (-1 = external client);
-                                egress shaping + retry re-addressing
-      flts[:, 0] length     f32 total MI (Gaussian, paper §4.1.2)
-      flts[:, 1] rem        f32 remaining MI
-      flts[:, 2] arrival    f32 seconds (of the current attempt)
-      flts[:, 3] start      f32 first-execution time (-1 = not yet)
-      flts[:, 4] rem_bytes  f32 MB still in flight (TRANSIT status, §6)
+    The column set is the mode-keyed :class:`PoolLayout` (aux data, not a
+    leaf): named accessors (``cl.status`` …) and the column writers
+    (`with_cols`, `pool.scatter_pool`) resolve indices through it, so no
+    caller hard-codes a position and absent columns cost nothing.
+    Writers accept any registered column name and silently skip columns
+    outside the active layout — spawn sites stay mode-agnostic; reading
+    an absent column raises ``KeyError`` (reads are always mode-gated).
     """
 
-    ints: jnp.ndarray        # [C, 10] i32
-    flts: jnp.ndarray        # [C, 5] f32
+    __slots__ = ("ints", "flts", "layout")
+
+    def __init__(self, ints: jnp.ndarray, flts: jnp.ndarray,
+                 layout: PoolLayout = FULL_LAYOUT):
+        self.ints = ints        # [C, len(layout.i_fields)] i32
+        self.flts = flts        # [C, len(layout.f_fields)] f32
+        self.layout = layout
+
+    # --- pytree protocol (layout is static aux data) -------------------
+    def tree_flatten(self):
+        return (self.ints, self.flts), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        return cls(children[0], children[1], layout)
+
+    def replace(self, ints=None, flts=None) -> "Cloudlets":
+        return Cloudlets(self.ints if ints is None else ints,
+                         self.flts if flts is None else flts, self.layout)
+
+    # --- named column views --------------------------------------------
+    def col(self, name: str) -> jnp.ndarray:
+        if _COL_BLOCK.get(name) == "i":
+            return self.ints[:, self.layout.i(name)]
+        if _COL_BLOCK.get(name) == "f":
+            return self.flts[:, self.layout.f(name)]
+        raise KeyError(f"unknown pool column {name!r}")
 
     @property
     def status(self) -> jnp.ndarray:
-        return self.ints[:, 0]
+        return self.col("status")
 
     @property
     def req(self) -> jnp.ndarray:
-        return self.ints[:, 1]
+        return self.col("req")
 
     @property
     def service(self) -> jnp.ndarray:
-        return self.ints[:, 2]
+        return self.col("service")
 
     @property
     def inst(self) -> jnp.ndarray:
-        return self.ints[:, 3]
+        return self.col("inst")
 
     @property
     def wait_ticks(self) -> jnp.ndarray:
-        return self.ints[:, 4]
+        return self.col("wait_ticks")
 
     @property
     def depth(self) -> jnp.ndarray:
-        return self.ints[:, 5]
+        return self.col("depth")
 
     @property
     def src_host(self) -> jnp.ndarray:
-        return self.ints[:, 6]
+        return self.col("src_host")
 
     @property
     def attempt(self) -> jnp.ndarray:
-        return self.ints[:, 7]
+        return self.col("attempt")
 
     @property
     def edge(self) -> jnp.ndarray:
-        return self.ints[:, 8]
+        return self.col("edge")
 
     @property
     def src_inst(self) -> jnp.ndarray:
-        return self.ints[:, 9]
+        return self.col("src_inst")
 
     @property
     def length(self) -> jnp.ndarray:
-        return self.flts[:, 0]
+        return self.col("length")
 
     @property
     def rem(self) -> jnp.ndarray:
-        return self.flts[:, 1]
+        return self.col("rem")
 
     @property
     def arrival(self) -> jnp.ndarray:
-        return self.flts[:, 2]
+        return self.col("arrival")
 
     @property
     def start(self) -> jnp.ndarray:
-        return self.flts[:, 3]
+        return self.col("start")
 
     @property
     def rem_bytes(self) -> jnp.ndarray:
-        return self.flts[:, 4]
+        return self.col("rem_bytes")
 
     def with_cols(self, **cols) -> "Cloudlets":
         """Replace whole [C] field columns by name (dispatch/execute path);
-        consecutive column writes fuse into one pass under jit."""
+        consecutive column writes fuse into one pass under jit.  Registered
+        columns outside the active layout are skipped (mode-agnostic
+        callers); unregistered names raise."""
         ints, flts = self.ints, self.flts
+        L = self.layout
         for name, v in cols.items():
-            if name in CL_I_IDX:
-                ints = ints.at[:, CL_I_IDX[name]].set(
-                    jnp.asarray(v, ints.dtype))
+            if name not in _COL_BLOCK:
+                raise TypeError(f"unknown pool column {name!r}")
+            if name not in L:
+                continue
+            if _COL_BLOCK[name] == "i":
+                ints = ints.at[:, L.i(name)].set(jnp.asarray(v, ints.dtype))
             else:
-                flts = flts.at[:, CL_F_IDX[name]].set(
-                    jnp.asarray(v, flts.dtype))
-        return Cloudlets(ints=ints, flts=flts)
+                flts = flts.at[:, L.f(name)].set(jnp.asarray(v, flts.dtype))
+        return Cloudlets(ints, flts, L)
 
 
 class Instances(NamedTuple):
@@ -534,13 +676,19 @@ class TickTrace(NamedTuple):
 
 
 def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
-                n_edges: int | None = None) -> SimState:
+                n_edges: int | None = None, n_apis: int = 1) -> SimState:
     """Build the initial (empty) simulation state.
 
     ``n_edges`` sizes the per-service-edge resilience tables (retry policy /
     circuit breaker, §7): ``n_services * d_max`` call edges plus one
-    client→entry edge per API.  Defaults to the caps-derived bound with a
-    single API.
+    client→entry edge per API (ids ``S*d_max .. S*d_max + n_apis - 1``).
+    Defaults to the caps-derived bound with ``n_apis`` APIs — pass
+    ``n_edges`` (or ``n_apis``) for multi-API graphs, or the table is
+    undersized and the engine's trace-time check rejects the app.
+
+    The cloudlet pool is built to the mode-keyed :class:`PoolLayout` the
+    params resolve to — exactly the columns the enabled tick phases
+    declared, nothing more.
     """
     caps.validate()
     f32 = jnp.float32
@@ -548,7 +696,10 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
     Nc, R, C, I, V = (caps.n_clients, caps.max_requests, caps.max_cloudlets,
                       caps.max_instances, caps.n_vms)
     S = n_services
-    E = n_edges if n_edges is not None else n_services * caps.d_max + 1
+    E = n_edges if n_edges is not None \
+        else n_services * caps.d_max + max(n_apis, 1)
+    layout = resolve_layout(params)
+    chaos = params.faults == "chaos"
     return SimState(
         tick=jnp.zeros((), i32),
         time=jnp.zeros((), f32),
@@ -564,14 +715,14 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
             finish=jnp.zeros((R,), f32),
             response=jnp.full((R,), -1.0, f32),
             critical_len=jnp.zeros((R,), i32),
-            failed=jnp.zeros((R,), jnp.uint8),
+            # the failed flag is a Disruption-phase column: zero-width in
+            # faults="none" mode so it never rides the scan carry there
+            failed=jnp.zeros((R if chaos else 0,), jnp.uint8),
         ),
         cloudlets=Cloudlets(
-            # column init values follow CL_I_FIELDS / CL_F_FIELDS order
-            ints=jnp.tile(jnp.asarray([[0, -1, -1, -1, 0, 0, -1, 0, -1, -1]],
-                                      i32), (C, 1)),
-            flts=jnp.tile(jnp.asarray([[0.0, 0.0, 0.0, -1.0, 0.0]], f32),
-                          (C, 1)),
+            ints=jnp.tile(jnp.asarray(layout.init_ints()[None, :]), (C, 1)),
+            flts=jnp.tile(jnp.asarray(layout.init_flts()[None, :]), (C, 1)),
+            layout=layout,
         ),
         instances=Instances(
             status=jnp.zeros((I,), i32),

@@ -66,3 +66,24 @@ def cloudlet_finish(status, rem, inst, req, arrival, start, depth,
                                   n_inst=n_inst,
                                   bc=min(8192, C), interpret=interpret)
     return ref.FinishOut(*outs)
+
+
+def cloudlet_finish_pool(cl, rate, time, dt, req_finish, req_crit, req_out,
+                         n_inst: int, use_pallas: bool | None = None,
+                         interpret: bool = False) -> ref.FinishOut:
+    """Engine-facing entry over the stacked cloudlet pool.
+
+    The kernel's input columns are sliced out of the ``[C, NI]``/``[C, NF]``
+    blocks through the mode-keyed :class:`core.types.PoolLayout` carried by
+    ``cl`` — no hard-coded column positions — then dispatched exactly like
+    :func:`cloudlet_finish`.  Works for any layout that registers the
+    Execute-phase columns (every mode does).
+    """
+    L = cl.layout
+    ints, flts = cl.ints, cl.flts
+    return cloudlet_finish(
+        ints[:, L.i("status")], flts[:, L.f("rem")], ints[:, L.i("inst")],
+        ints[:, L.i("req")], flts[:, L.f("arrival")],
+        flts[:, L.f("start")], ints[:, L.i("depth")], rate, time, dt,
+        req_finish, req_crit, req_out, n_inst=n_inst,
+        use_pallas=use_pallas, interpret=interpret)

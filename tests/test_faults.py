@@ -26,11 +26,11 @@ import numpy as np
 import pytest
 
 from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
-                        batch_item, build_app, diamond, linear_chain,
-                        summarize)
+                        batch_item, build_app, build_graph, diamond,
+                        linear_chain, summarize)
 from repro.core.faults import disruption
 from repro.core.types import (CL_EXEC, CL_FREE, CL_WAITING, DynParams,
-                              INST_DOWN, INST_ON, zeros_state)
+                              INST_DOWN, INST_DRAIN, INST_ON, zeros_state)
 
 from test_network import GOLDEN, _digest_f32, _diamond_sim
 
@@ -310,6 +310,209 @@ def test_hs_scale_out_respawns_off_down_hosts():
     hosts = np.asarray(st.instances.host)
     assert on.any()
     assert (up[hosts[on]] == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# multi-API edge tables (zeros_state default sizing regression)
+# ---------------------------------------------------------------------------
+
+def _two_api_graph(mi=300.0):
+    return build_graph(["front", "back"], {"front": ["back"]},
+                       [("GET /a", "front", 1.0), ("GET /b", "front", 1.0)],
+                       {"front": mi, "back": mi})
+
+
+def test_zeros_state_default_edge_table_covers_all_apis():
+    """Regression: the default n_edges undersized the retry/breaker tables
+    for multi-API graphs (client→entry ids run to S*d_max + n_apis - 1),
+    aliasing breaker state through clamped gathers."""
+    g = _two_api_graph()
+    app = build_app(g)
+    caps = SimCaps(n_clients=4, max_requests=64, max_cloudlets=64,
+                   max_instances=4, n_vms=2, d_max=1)
+    params = SimParams(faults="chaos")
+    state = zeros_state(caps, params, jax.random.PRNGKey(0),
+                        n_services=g.n_services, n_apis=g.n_apis)
+    E = state.fault.edge_open_until.shape[0]
+    assert int(app.n_edges) == g.n_services * 1 + 2
+    assert E >= int(app.n_edges)
+    # an undersized table (the old single-API default) is rejected at
+    # trace time instead of silently aliasing the last edge
+    small = zeros_state(caps, params, jax.random.PRNGKey(0),
+                        n_services=g.n_services)  # n_apis defaults to 1
+    assert small.fault.edge_open_until.shape[0] == int(app.n_edges) - 1
+    dyn = DynParams.from_params(params)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="undersized"):
+        disruption(small, app, caps, params, dyn, k1, k2, None)
+
+
+def test_two_api_chaos_run_keeps_breaker_edges_distinct():
+    """Engine-level 2-API chaos run: edge ids stay in range, conservation
+    holds, and the per-edge breaker state is genuinely per-edge (the
+    second API's entry edge no longer aliases out of bounds)."""
+    caps = SimCaps(n_clients=16, max_requests=1024, max_cloudlets=512,
+                   max_instances=8, n_vms=4, d_max=2, max_replicas=2)
+    params = SimParams(dt=0.05, n_ticks=500, n_clients=12, spawn_rate=5.0,
+                       wait_lo=0.5, wait_hi=1.5, seed=3, faults="chaos",
+                       host_mtbf_s=20.0, host_mttr_s=5.0,
+                       retry_timeout_s=3.0, retry_budget=2)
+    sim = Simulation(_two_api_graph(), caps=caps, params=params,
+                     default_template=InstanceTemplate(mips=8000.0,
+                                                       limit_mips=16000.0,
+                                                       replicas=2),
+                     vm_mips=np.full(4, 64000.0, np.float32))
+    assert int(sim.app.n_edges) == \
+        sim.graph.n_services * sim.graph.d_max + 2
+    res = sim.run()
+    st = res.state
+    E = st.fault.edge_open_until.shape[0]
+    assert E == int(sim.app.n_edges)
+    edges = np.asarray(st.cloudlets.edge)
+    active = np.asarray(st.cloudlets.status) != CL_FREE
+    assert (edges[active] >= 0).all() and (edges[active] < E).all()
+    spawned = int(st.counters.spawned)
+    in_flight = int(active.sum())
+    assert spawned == int(st.counters.finished) + in_flight \
+        + int(st.fstats.failed_attempts)
+    # both APIs really generated traffic
+    api = np.asarray(st.requests.api)[:int(st.requests.count)]
+    assert set(np.unique(api)) == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# HS scale-in must not drain DOWN replicas (chaos-mode regression)
+# ---------------------------------------------------------------------------
+
+def _scale_in_state(statuses):
+    """One service with len(statuses) ranked replicas in the given INST_*
+    states (instance slot = rank)."""
+    from repro.core.scaling import _scale_in
+    n = len(statuses)
+    caps = SimCaps(n_clients=4, max_requests=16, max_cloudlets=32,
+                   max_instances=max(n, 2), n_vms=2, d_max=1,
+                   max_replicas=max(n, 2))
+    params = SimParams(faults="chaos")
+    state = zeros_state(caps, params, jax.random.PRNGKey(0), n_services=1)
+    inst = state.instances._replace(
+        status=state.instances.status.at[:n].set(jnp.asarray(statuses, i32)),
+        service=state.instances.service.at[:n].set(0),
+        vm=state.instances.vm.at[:n].set(0),
+        host=state.instances.host.at[:n].set(0),
+        mips=state.instances.mips.at[:n].set(1000.0))
+    sched = state.sched._replace(
+        inst_of_rank=state.sched.inst_of_rank.at[0, :n].set(
+            jnp.arange(n, dtype=i32)),
+        svc_replicas=state.sched.svc_replicas.at[0].set(n))
+    vms = state.vms._replace(
+        mips=state.vms.mips.at[0].set(64000.0),
+        mips_used=state.vms.mips_used.at[0].set(n * 1000.0))
+    return _scale_in, state._replace(instances=inst, sched=sched, vms=vms)
+
+
+def test_scale_in_skips_down_newest_replica():
+    """Regression: the newest rank is DOWN (chaos killed it) — scale-in
+    must NOT flip it to DRAIN (that steals its restart path and lets the
+    VM share release twice via drain_dies + drain_done).  With an older ON
+    replica available it drains that one and compacts the rank table."""
+    _scale_in, state = _scale_in_state([INST_ON, INST_ON, INST_DOWN])
+    out = _scale_in(state, 0)
+    status = np.asarray(out.instances.status)
+    assert status[2] == INST_DOWN                 # untouched, restartable
+    assert status[1] == INST_DRAIN                # newest ON rank drains
+    assert status[0] == INST_ON
+    iof = np.asarray(out.sched.inst_of_rank)[0]
+    assert iof[0] == 0 and iof[1] == 2 and iof[2] == -1  # table compacted
+    assert int(out.sched.svc_replicas[0]) == 2
+    assert int(out.counters.scale_in) == 1
+
+
+def test_scale_in_skips_entirely_when_only_rank0_is_on():
+    """Newest replica DOWN and only rank 0 ON: scale-in is a no-op (rank 0
+    is never drained) — previously the DOWN replica was drained."""
+    _scale_in, state = _scale_in_state([INST_ON, INST_DOWN])
+    out = _scale_in(state, 0)
+    np.testing.assert_array_equal(np.asarray(out.instances.status),
+                                  np.asarray(state.instances.status))
+    np.testing.assert_array_equal(np.asarray(out.sched.inst_of_rank),
+                                  np.asarray(state.sched.inst_of_rank))
+    assert int(out.sched.svc_replicas[0]) == 2
+    assert int(out.counters.scale_in) == 0
+
+
+def test_scale_in_all_on_unchanged_behavior():
+    """faults="none" invariant: with every ranked replica ON the guarded
+    scale-in behaves exactly like the old newest-rank drain."""
+    _scale_in, state = _scale_in_state([INST_ON, INST_ON, INST_ON])
+    out = _scale_in(state, 0)
+    status = np.asarray(out.instances.status)
+    assert status[2] == INST_DRAIN and status[1] == INST_ON
+    iof = np.asarray(out.sched.inst_of_rank)[0]
+    assert iof[0] == 0 and iof[1] == 1 and iof[2] == -1
+    assert int(out.sched.svc_replicas[0]) == 2
+    assert int(out.counters.scale_in) == 1
+
+
+# ---------------------------------------------------------------------------
+# per-edge timeout table (mirrors the per-edge retry resolver)
+# ---------------------------------------------------------------------------
+
+def _slow_service_sim(api_timeouts=None, n_ticks=300):
+    """A single slow service (≈0.5 s execution) with no injected faults:
+    only timeouts can fail attempts.  retry_budget=0 makes every timeout a
+    permanent failure, so failed_requests counts timeout hits."""
+    g = build_graph(["s0"], {}, [("api", "s0", 1.0)], {"s0": 500.0},
+                    len_std={"s0": 0.0}, api_timeouts=api_timeouts)
+    caps = SimCaps(n_clients=8, max_requests=256, max_cloudlets=128,
+                   max_instances=2, n_vms=2, d_max=1, max_replicas=1)
+    params = SimParams(dt=0.05, n_ticks=n_ticks, n_clients=8,
+                       spawn_rate=10.0, wait_lo=0.5, wait_hi=1.0, seed=0,
+                       faults="chaos", host_mtbf_s=float("inf"),
+                       inst_kill_rate=0.0, retry_budget=0,
+                       retry_timeout_s=float("inf"))
+    return Simulation(g, caps=caps, params=params,
+                      default_template=InstanceTemplate(mips=1000.0,
+                                                        limit_mips=1000.0))
+
+
+def test_per_edge_timeout_overrides_run_wide_default():
+    """A 0.2 s timeout on the client→entry edge fails the ≈0.5 s calls even
+    though the run-wide retry_timeout_s is inf; without the per-edge entry
+    nothing ever times out."""
+    sim_tight = _slow_service_sim(api_timeouts={"api": 0.2})
+    rep_tight = summarize(sim_tight, sim_tight.run())
+    sim_loose = _slow_service_sim()
+    rep_loose = summarize(sim_loose, sim_loose.run())
+    assert rep_loose.failed_requests == 0
+    assert rep_loose.availability == 1.0
+    assert rep_tight.failed_requests > 0
+    assert rep_tight.availability < 1.0
+
+
+def test_timeout_spec_keys_resolve_like_retries():
+    """Registry spec: service "timeouts" maps and API "timeout" scalars
+    land on the same edge-id layout as the retry table."""
+    from repro.core.registry import graph_from_spec
+    spec = {
+        "services": [
+            {"name": "a", "mi": 100, "calls": ["b"],
+             "retries": {"b": 5}, "timeouts": {"b": 1.5}},
+            {"name": "b", "mi": 100},
+        ],
+        "apis": [{"name": "GET /x", "entry": "a", "retries": 3,
+                  "timeout": 2.5}],
+    }
+    g = graph_from_spec(spec)
+    app = build_app(g)
+    S, D = g.n_services, g.d_max
+    et = np.asarray(app.edge_timeout)
+    er = np.asarray(app.edge_retry)
+    # call edge a→b is row 0 slot 0
+    assert er[0 * D + 0] == 5 and et[0 * D + 0] == pytest.approx(1.5)
+    # client→entry edge of api 0 sits after the S*D call edges
+    assert er[S * D + 0] == 3 and et[S * D + 0] == pytest.approx(2.5)
+    # unlisted edges fall back to the run-wide defaults (-1 sentinel)
+    assert er[1 * D + 0] == -1 and et[1 * D + 0] == -1.0
 
 
 def test_recovery_restores_availability():

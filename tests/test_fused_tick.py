@@ -18,14 +18,22 @@ import numpy as np
 import pytest
 
 from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
-                        batch_item, diamond, linear_chain)
+                        batch_item, diamond, linear_chain, resolve_layout)
 from repro.core.pool import (assign_free_slots, scatter_pool, segment_rank,
                              segment_rank_sorted)
-from repro.core.types import CL_F_FIELDS, CL_I_FIELDS, DynParams
+from repro.core.types import Cloudlets, DynParams
 from repro.kernels.cloudlet_step import cloudlet_finish_ref
 from repro.kernels.cloudlet_step.kernel import cloudlet_finish_pallas
 
 i32, f32 = jnp.int32, jnp.float32
+
+# Mode-keyed layouts (DESIGN.md §2.2): the spawn writer must behave
+# identically on the minimal default layout and the everything-enabled one.
+LAYOUTS = {
+    "minimal": resolve_layout(SimParams()),
+    "full": resolve_layout(SimParams(network="fabric", faults="chaos",
+                                     egress_shaping=True)),
+}
 
 
 # ---------------------------------------------------------------------------
@@ -46,17 +54,23 @@ def _per_field_spawn(ints, flts, asg, int_cols, flt_cols):
     return ints, flts
 
 
+@pytest.mark.parametrize("lname", sorted(LAYOUTS))
 @pytest.mark.parametrize("C,M,seed", [(64, 16, 0), (256, 300, 1),
                                       (1024, 512, 2), (33, 7, 3)])
-def test_scatter_pool_bitmatches_per_field(C, M, seed, rng):
+def test_scatter_pool_bitmatches_per_field(C, M, seed, lname, rng):
+    layout = LAYOUTS[lname]
     r = np.random.default_rng(seed)
-    ints = jnp.asarray(r.integers(-1, 5, size=(C, len(CL_I_FIELDS))), i32)
-    flts = jnp.asarray(r.normal(size=(C, len(CL_F_FIELDS))), f32)
+    ints = jnp.asarray(r.integers(-1, 5, size=(C, len(layout.i_fields))),
+                       i32)
+    flts = jnp.asarray(r.normal(size=(C, len(layout.f_fields))), f32)
+    cl = Cloudlets(ints, flts, layout)
     free = jnp.asarray(r.random(C) < 0.5)
     valid = jnp.asarray(r.random(M) < 0.7)
     asg = assign_free_slots(free, valid)
     K = asg.dst.shape[0]
     length = jnp.asarray(r.uniform(1, 100, K), f32)
+    # the full vocabulary is always passed — columns outside the layout
+    # must be skipped, so spawn sites stay mode-agnostic
     cols = dict(
         status=1, req=jnp.asarray(r.integers(0, 99, K), i32),
         service=jnp.asarray(r.integers(0, 9, K), i32), inst=-1,
@@ -68,16 +82,19 @@ def test_scatter_pool_bitmatches_per_field(C, M, seed, rng):
         length=length, rem=length,
         arrival=jnp.asarray(r.uniform(0, 10, K), f32), start=-1.0,
         rem_bytes=jnp.asarray(r.uniform(0, 1, K), f32))
-    int_cols = tuple(cols[n] for n in CL_I_FIELDS)
-    flt_cols = tuple(cols[n] for n in CL_F_FIELDS)
+    int_cols = tuple(cols[n] for n in layout.i_fields)
+    flt_cols = tuple(cols[n] for n in layout.f_fields)
 
-    gi, gf = scatter_pool(ints, flts, asg, **cols)
+    got = scatter_pool(cl, asg, **cols)
     wi, wf = _per_field_spawn(ints, flts, asg, int_cols, flt_cols)
-    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
-    np.testing.assert_array_equal(np.asarray(gf), np.asarray(wf))
+    np.testing.assert_array_equal(np.asarray(got.ints), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(got.flts), np.asarray(wf))
+    assert got.layout is layout
     with pytest.raises(TypeError, match="missing"):
-        scatter_pool(ints, flts, asg, **{k: v for k, v in cols.items()
-                                         if k != "rem"})
+        scatter_pool(cl, asg, **{k: v for k, v in cols.items()
+                                 if k != "rem"})
+    with pytest.raises(TypeError, match="unknown"):
+        scatter_pool(cl, asg, bogus_col=0, **cols)
 
 
 # ---------------------------------------------------------------------------
