@@ -39,7 +39,8 @@ def flat_services(n: int, mi: float) -> "ServiceGraph":
 
 
 def build_case(n_requests, n_services, replicas, fanout=1,
-               use_pallas_interpret=False, network=False, faults=False):
+               use_pallas_interpret=False, network=False, faults=False,
+               chaos2=False):
     """Build a capacity Simulation sized to the Table 2 object counts;
     returns (sim, meta) where meta records the sizing decisions.
 
@@ -52,6 +53,13 @@ def build_case(n_requests, n_services, replicas, fanout=1,
     chaos (long MTBF, quick MTTR, retries on): the full failure/retry/
     breaker machinery runs every tick without collapsing throughput, so
     the wall-time delta is the phase's overhead (target ≤ 1.3×).
+
+    ``chaos2=True`` layers the second-generation gray-failure machinery
+    (§7.1) on top of ``faults``: fail-slow episodes, NIC brownout spread,
+    zone-correlated draws over a 4-domain cluster, partition draws and
+    per-replica outlier ejection all sample every tick, so the delta over
+    the fault-free case prices the FULL chaos surface (same ≤ 1.3×
+    target, tracked as ``<tag>+chaos2``).
     """
     mi = 50.0
     if fanout > 1:
@@ -93,7 +101,17 @@ def build_case(n_requests, n_services, replicas, fanout=1,
     fault_kw = dict(
         faults="chaos", host_mtbf_s=duration * 2.0, host_mttr_s=2 * dt,
         inst_kill_rate=0.0, retry_timeout_s=20 * duration, retry_budget=2,
-    ) if faults else {}
+    ) if (faults or chaos2) else {}
+    if chaos2:
+        # mild gray chaos: every §7.1 stream samples each tick without
+        # collapsing throughput (rates sized to a handful of episodes)
+        fault_kw.update(
+            host_slow_mtbf_s=duration, host_slow_mttr_s=4 * dt,
+            host_slow_factor=0.5, nic_degrade_spread=0.2,
+            zone_slow_rate=1.0 / duration,
+            zone_partition_rate=1.0 / duration,
+            zone_partition_mttr_s=4 * dt,
+            eject_err_thresh=0.8, eject_cooldown_s=4 * dt)
     params = SimParams(
         dt=dt, n_ticks=n_ticks, n_clients=nc,
         spawn_rate=nc / 5.0, wait_lo=2.0, wait_hi=6.0,
@@ -114,9 +132,10 @@ def build_case(n_requests, n_services, replicas, fanout=1,
                             replicas=replicas)
     vm_mips = np.full(n_vms, 2.0 * mips * n_inst / n_vms + 1e4, np.float32)
     vm_ram = np.full(n_vms, 1e9, np.float32)
+    host_zone = (np.arange(n_vms, dtype=np.int32) % 4 if chaos2 else None)
     sim = Simulation(graph, caps=caps, params=params, default_template=tmpl,
                      vm_mips=vm_mips, vm_ram=vm_ram,
-                     api_entries=api_entries)
+                     api_entries=api_entries, host_zone=host_zone)
     meta = dict(n_requests=n_requests, n_services=n_services,
                 replicas=replicas, n_instances=n_inst, n_ticks=n_ticks,
                 pool=pool, k_fire=k_fire)
@@ -138,21 +157,25 @@ CASES = {
 
 
 def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
-                network: bool = False, faults: bool = False) -> dict:
+                network: bool = False, faults: bool = False,
+                chaos2: bool = False) -> dict:
     """One BENCH_perf.json record: wall seconds + ticks/sec for a Table 2
     case.  ``scale`` shrinks the request count (pallas-interpret runs are
     orders of magnitude slower than compiled backends).  ``network=True``
     re-runs the case with the fabric's Transit phase on (case tagged
     ``<tag>+net``), ``faults=True`` with the Disruption phase on
-    (``<tag>+faults``), so each phase's overhead is tracked PR-over-PR."""
+    (``<tag>+faults``), ``chaos2=True`` with the full gray-failure
+    surface on (``<tag>+chaos2``), so each phase's overhead is tracked
+    PR-over-PR."""
     n_requests, n_services, replicas, cpr, fanout = CASES[tag]
     n_requests = max(int(n_requests * scale), 100)
     sim, meta = build_case(n_requests, n_services, replicas, fanout,
                            use_pallas_interpret=(backend
                                                  == "pallas-interpret"),
-                           network=network, faults=faults)
+                           network=network, faults=faults, chaos2=chaos2)
     res = sim.run()
-    suffix = ("+net" if network else "") + ("+faults" if faults else "")
+    suffix = ("+net" if network else "") \
+        + ("+chaos2" if chaos2 else ("+faults" if faults else ""))
     return dict(
         case=tag + suffix, backend=backend, scale=scale,
         requests=int(res.state.requests.count),
@@ -167,7 +190,7 @@ def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
 
 
 def bytes_per_tick(tag: str, network: bool = False,
-                   faults: bool = False) -> float:
+                   faults: bool = False, chaos2: bool = False) -> float:
     """Per-tick "bytes accessed" of the compiled scan (XLA cost_analysis)
     for a Table 2 case — the footprint metric behind the mode-keyed pool
     layout (DESIGN.md §2.2): wall clocks drift on shared containers, but
@@ -178,7 +201,7 @@ def bytes_per_tick(tag: str, network: bool = False,
 
     n_requests, n_services, replicas, cpr, fanout = CASES[tag]
     sim, meta = build_case(n_requests, n_services, replicas, fanout,
-                           network=network, faults=faults)
+                           network=network, faults=faults, chaos2=chaos2)
     state = sim.init_state()
     dyn = DynParams.from_params(sim.params)
     compiled, _ = sim._get_compiled(state, dyn)

@@ -1,88 +1,131 @@
-"""Chaos/resilience study on SockShop (DESIGN.md §7).
+"""Availability vs blast radius on SockShop (DESIGN.md §7.1).
 
-The fair-weather engine cannot express availability: no host or instance
-can fail.  The Disruption phase can — this example spreads a 2-replica
-SockShop over the 10-node cluster, sweeps the host-failure rate (MTBF) as
-chaos intensity, and runs every point twice: circuit breaker off
-(``cb_err_thresh`` > 1 never trips) and on.  All fault knobs travel in
-``DynParams``, so the whole grid is ONE ``Simulation.run_batch`` call —
-one compile, one device dispatch.
+Second-generation chaos: instead of independent host crashes, faults are
+*zone-correlated* — the 10-node cluster is partitioned into failure
+domains of ``radius`` hosts, and a firing zone draw throws every host of
+the domain into a fail-slow episode at once (MIPS degraded to
+``host_slow_factor``).  Crash-stop tooling is blind to this gray mode:
+the replicas stay ON, they just crawl, so calls routed to them burn
+their full timeout before failing.
 
-Expected output: error rate rises and availability falls as MTBF shrinks;
-with the breaker ON the error-rate curve flattens — tripped edges fail
-fast instead of feeding the retry storm, so the overloaded survivors
-recover and p95 response (over successful requests) drops too.  A
-reference run on this scenario:
+The study sweeps the blast radius and, per radius, runs two arms:
 
-    mtbf= 120 cb=off err=0.186 p95=5616ms   cb=on err=0.044 p95=2543ms
-    mtbf=  30 cb=off err=0.446 p95=7982ms   cb=on err=0.241 p95=3469ms
+* **breaker only** — the per-edge circuit breaker (PR 3) trips when a
+  whole edge's error EMA saturates; ``eject_err_thresh`` > 1 disables
+  per-replica ejection.
+* **breaker + outlier ejection** — the load balancer additionally
+  tracks per-replica error EMAs and routes *around* a sick replica
+  (``policies.eject_view``) instead of waiting for the whole edge to
+  trip, with half-open re-admission after a cooldown.
 
-    PYTHONPATH=src python examples/chaos_study.py --mtbf 120,60,30
+Every fault/resilience knob travels in ``DynParams`` and the host→zone
+table is an ``AppStatic`` leaf, so the full radius × arm grid is ONE
+``Simulation.run_batch(points, apps=...)`` call — one compile.
+
+Expected output: the ejection arm sits strictly below the breaker-only
+arm at every radius — ejection drains traffic off the slow replicas the
+breaker cannot see — and its advantage *widens* with the radius.  Note
+the per-host hazard is identical at every radius (each host slows when
+its zone fires, at the same rate); what the sweep varies is pure
+correlation.  Many 1-host domains keep some replica degraded almost all
+the time, while rare 5-host blasts concentrate the same damage into
+short windows the resilience machinery rides out, so availability
+actually *improves* with radius under a fixed per-zone rate.  A
+reference run:
+
+    radius=1 eject=off err=0.209 avail=0.462   eject=on err=0.197 avail=0.497
+    radius=2 eject=off err=0.208 avail=0.526   eject=on err=0.167 avail=0.606
+    radius=5 eject=off err=0.143 avail=0.641   eject=on err=0.095 avail=0.743
+
+    PYTHONPATH=src python examples/chaos_study.py --radii 1,2,5
 """
 import argparse
 import dataclasses
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.configs import sockshop
 from repro.core import batch_item, policies, summarize
+
+N_HOSTS = 10        # the paper's cluster (sockshop.make_sim)
+
+
+def zones(radius: int) -> np.ndarray:
+    """Contiguous failure domains of ``radius`` hosts (last one ragged)."""
+    return (np.arange(N_HOSTS) // radius).astype(np.int32)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mtbf", default="120,60,30",
-                    help="comma list of host MTBF seconds (chaos intensity; "
-                         "'inf' allowed as fault-free baseline)")
-    ap.add_argument("--mttr", type=float, default=15.0,
-                    help="mean host recovery time, seconds")
+    ap.add_argument("--radii", default="1,2,5",
+                    help="comma list of blast radii (hosts per failure "
+                         "domain, 1..10)")
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--zone-rate", type=float, default=0.02,
+                    help="fail-slow episode rate per zone, 1/s")
+    ap.add_argument("--slow-factor", type=float, default=0.1,
+                    help="MIPS fraction a fail-slow host retains")
+    ap.add_argument("--slow-mttr", type=float, default=15.0,
+                    help="mean fail-slow episode length, seconds")
     ap.add_argument("--timeout", type=float, default=2.5,
                     help="per-attempt RPC timeout, seconds")
-    ap.add_argument("--budget", type=int, default=2, help="retry budget")
+    ap.add_argument("--eject-thresh", type=float, default=0.35,
+                    help="per-replica error-EMA ejection threshold "
+                         "(the 'on' arm; 'off' uses 2.0)")
     args = ap.parse_args()
-    mtbfs = [float(x) for x in args.mtbf.split(",") if x]
+    radii = [int(x) for x in args.radii.split(",") if x]
 
-    # 2 replicas per service, spread over hosts: a lone crash degrades a
-    # service to its survivor replica instead of blackholing it — the
-    # retry-storm-overloads-the-survivor dynamic the breaker protects
-    # against.  share=600 sizes the survivor to overload under 2× load.
+    # 2 replicas per service, spread over hosts: a fail-slow zone usually
+    # degrades ONE replica of an affected service, which is exactly the
+    # asymmetry outlier ejection exploits.  The breaker stays ON in both
+    # arms (0.5) — the study isolates what ejection adds on top of it.
     sim = sockshop.make_sim(
         n_clients=args.clients, duration_s=args.duration, replicas=2,
         share=600.0, placement_policy=policies.PLACE_SPREAD,
-        faults="chaos", retry_timeout_s=args.timeout,
-        retry_budget=args.budget, host_mttr_s=args.mttr,
-        cb_cooldown_s=5.0, cb_alpha=0.3)
+        faults="chaos", host_mtbf_s=float("inf"), inst_kill_rate=0.0,
+        retry_timeout_s=args.timeout, retry_budget=2,
+        cb_err_thresh=0.5, cb_cooldown_s=5.0, cb_alpha=0.3,
+        zone_slow_rate=args.zone_rate, host_slow_factor=args.slow_factor,
+        host_slow_mttr_s=args.slow_mttr, eject_cooldown_s=8.0,
+        host_zone=zones(radii[0]))
     base = sim.params
-    points, labels = [], []
-    for mtbf in mtbfs:
-        for thresh in (2.0, 0.5):      # > 1 = breaker off; 0.5 = on
-            points.append(dataclasses.replace(
-                base, host_mtbf_s=mtbf, cb_err_thresh=thresh))
-            labels.append((mtbf, thresh < 1.0))
-    res_b = sim.run_batch(points)
 
-    print(f"# sockshop x2 replicas, MTTR {args.mttr:.0f}s, timeout "
-          f"{args.timeout}s, budget {args.budget} "
+    points, apps, labels = [], [], []
+    for r in radii:
+        app_r = sim.app._replace(host_zone=jnp.asarray(zones(r), jnp.int32))
+        for thresh in (2.0, args.eject_thresh):   # > 1 = ejection off
+            points.append(dataclasses.replace(base,
+                                              eject_err_thresh=thresh))
+            apps.append(app_r)
+            labels.append((r, thresh < 1.0))
+    res_b = sim.run_batch(points, apps=apps)
+
+    print(f"# sockshop x2 replicas, zone fail-slow rate "
+          f"{args.zone_rate}/s, factor {args.slow_factor}, MTTR "
+          f"{args.slow_mttr:.0f}s, timeout {args.timeout}s "
           f"(batched sweep: compile {res_b.compile_time_s:.1f}s, "
           f"run {res_b.wall_time_s:.1f}s)")
-    print(f"{'mtbf_s':>7s} {'breaker':>7s} {'avail':>6s} {'err_rate':>8s} "
-          f"{'failed':>6s} {'retries':>7s} {'trips':>5s} {'failfast':>8s} "
-          f"{'p95_ms':>8s} {'mttr_obs':>8s}")
+    print(f"{'radius':>6s} {'eject':>5s} {'avail':>6s} {'err_rate':>8s} "
+          f"{'failed':>6s} {'slow_eps':>8s} {'ejects':>6s} {'readmit':>7s} "
+          f"{'trips':>5s} {'p95_ms':>8s}")
     flat = {}
-    for b, ((mtbf, cb_on), p) in enumerate(zip(labels, points)):
+    for b, ((r, ej_on), p) in enumerate(zip(labels, points)):
         rep = summarize(sim, batch_item(res_b, b), params=p)
-        flat[(mtbf, cb_on)] = rep
-        print(f"{mtbf:7.0f} {'on' if cb_on else 'off':>7s} "
+        flat[(r, ej_on)] = rep
+        print(f"{r:6d} {'on' if ej_on else 'off':>5s} "
               f"{rep.availability:6.3f} {rep.error_rate:8.3f} "
-              f"{rep.failed_requests:6d} {rep.retries:7d} "
-              f"{rep.breaker_trips:5d} {rep.failfast_failures:8d} "
-              f"{rep.p95_response_ms:8.0f} {rep.observed_mttr_s:8.1f}")
-    worse = [m for m in mtbfs
-             if flat[(m, True)].error_rate >= flat[(m, False)].error_rate]
+              f"{rep.failed_requests:6d} {rep.slow_episodes:8d} "
+              f"{rep.ejections:6d} {rep.readmissions:7d} "
+              f"{rep.breaker_trips:5d} {rep.p95_response_ms:8.0f}")
+    worse = [r for r in radii
+             if flat[(r, True)].error_rate >= flat[(r, False)].error_rate]
     if worse:
-        print(f"# (!) breaker did not reduce error rate at mtbf={worse}")
+        print(f"# (!) ejection did not reduce error rate at radius={worse}")
     else:
-        print("# breaker flattened the error-rate curve at every "
-              "failure rate")
+        print("# outlier ejection + breaker dominated breaker-only error "
+              "rate at every blast radius")
 
 
 if __name__ == "__main__":

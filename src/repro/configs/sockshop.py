@@ -130,6 +130,7 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
              scaling_policy: int = 0, seed: int = 0,
              max_replicas: int = 4, spawn_rate: float | None = None,
              placement_policy: int | None = None, replicas: int = 1,
+             host_zone: np.ndarray | None = None,
              **param_overrides) -> Simulation:
     """Build the paper's §6.3 experiment: Locust wait U[5,15] s, 600 s.
 
@@ -142,7 +143,9 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
     Disruption phase (DESIGN.md §7) — e.g. the availability study in
     examples/chaos_study.py; ``replicas`` sets the initial replica count
     per service (chaos runs want ≥ 2 so a lone host crash degrades rather
-    than blackholes a service).
+    than blackholes a service).  ``host_zone`` maps the 10 nodes onto
+    correlated failure domains for zone-level chaos (§7.1); default is
+    one zone per node.
     """
     param_overrides.setdefault("net_latency_s", net_latency_s)
     max_replicas = max(max_replicas, replicas)
@@ -175,7 +178,7 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
                       np.float32) * 1024.0
     return register(app_spec(mi_scale), instance_spec(share, replicas),
                     caps=caps, params=params, vm_mips=vm_mips, vm_ram=vm_ram,
-                    placement_policy=placement_policy)
+                    placement_policy=placement_policy, host_zone=host_zone)
 
 
 # Paper Fig 10 testbed reference (ms).  Only the 100/300-client values are

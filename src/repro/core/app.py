@@ -58,6 +58,10 @@ class AppStatic(NamedTuple):
     #                             timeout (s), -1 = run-wide default
     #                             (SimParams.retry_timeout_s); same edge-id
     #                             layout as edge_retry
+    host_zone: jnp.ndarray      # [H] i32 failure-domain (zone) id per host
+    #                             — zone-correlated fault draws hit every
+    #                             host sharing an id (DESIGN.md §7.1);
+    #                             default: each host its own zone
 
     @property
     def n_services(self) -> int:
@@ -71,21 +75,45 @@ class AppStatic(NamedTuple):
     def n_edges(self) -> int:
         return self.edge_retry.shape[0]
 
+    @property
+    def n_hosts(self) -> int:
+        return self.host_zone.shape[0]
+
 
 def build_app(graph: ServiceGraph,
               templates: dict[str, InstanceTemplate] | None = None,
               default_template: InstanceTemplate | None = None,
-              api_entries: Sequence[Sequence[str]] | None = None) -> AppStatic:
+              api_entries: Sequence[Sequence[str]] | None = None,
+              n_hosts: int = 0,
+              host_zone: Sequence[int] | None = None) -> AppStatic:
     """Assemble :class:`AppStatic` from a graph + instance templates.
 
     ``api_entries`` optionally overrides the per-API entry services with a
     *list* per API (fan-out at the entry, used by capacity benchmarks);
     default is the single entry service recorded in the graph.
+
+    ``host_zone`` maps each of the cluster's ``n_hosts`` hosts to a
+    failure domain for zone-correlated chaos (registry ``zones:`` key);
+    default is one zone per host (no correlation).
     """
     default_template = default_template or InstanceTemplate()
     templates = templates or {}
     S = graph.n_services
     A = graph.n_apis
+
+    if host_zone is None:
+        hz = np.arange(n_hosts, dtype=np.int32)
+    else:
+        hz = np.asarray(host_zone, dtype=np.int32).reshape(-1)
+        n_hosts = n_hosts or hz.shape[0]
+        if hz.shape[0] != n_hosts:
+            raise ValueError(
+                f"host_zone must list one zone per host: got {hz.shape[0]} "
+                f"entries for {n_hosts} hosts")
+        if hz.size and (hz.min() < 0 or hz.max() >= n_hosts):
+            raise ValueError(
+                f"host_zone ids must lie in [0, {n_hosts}): got "
+                f"[{hz.min()}, {hz.max()}]")
 
     def tarr(field: str, dtype=np.float32) -> np.ndarray:
         return np.array(
@@ -131,4 +159,5 @@ def build_app(graph: ServiceGraph,
         edge_timeout=jnp.concatenate(
             [jnp.asarray(graph.edge_timeout, jnp.float32).reshape(-1),
              jnp.asarray(graph.api_timeout, jnp.float32)]),
+        host_zone=jnp.asarray(hz),
     )

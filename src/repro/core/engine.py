@@ -93,7 +93,7 @@ def make_tick(caps: SimCaps, params: SimParams,
 
         # --- Transit (fabric mode: NIC fair-share water-filling) --------
         if network:
-            state = netmod.transit(state, caps, params, dyn)
+            state = netmod.transit(state, caps, params, dyn, app)
 
         # --- Dispatching (waiting → execution, load-balanced) ----------
         state = scheduler.dispatch(state, app, caps, params, dyn, k_lb,
@@ -192,12 +192,16 @@ class Simulation:
                  api_entries=None,
                  host_egress_scale: np.ndarray | None = None,
                  host_ingress_scale: np.ndarray | None = None,
-                 placement_policy: int | None = None):
+                 placement_policy: int | None = None,
+                 host_zone: np.ndarray | None = None):
         self.graph = graph
         self.caps = caps or SimCaps()
         self.params = params or SimParams()
-        self.app = build_app(graph, templates, default_template, api_entries)
         V = self.caps.n_vms
+        # host→zone table (failure domains for zone-correlated chaos, §7.1);
+        # defaults to one zone per host inside build_app
+        self.app = build_app(graph, templates, default_template, api_entries,
+                             n_hosts=V, host_zone=host_zone)
         self.vm_mips = np.asarray(
             vm_mips if vm_mips is not None
             else np.full(V, 32_000.0), np.float32)
@@ -227,9 +231,7 @@ class Simulation:
     # ------------------------------------------------------------------
     def init_state(self, seed: Optional[int] = None) -> SimState:
         rng = jax.random.PRNGKey(self.params.seed if seed is None else seed)
-        state = zeros_state(self.caps, self.params, rng,
-                            n_services=self.graph.n_services,
-                            n_edges=int(self.app.n_edges))
+        state = zeros_state(self.caps, self.params, rng, app=self.app)
         inst, iof, reps = initial_allocation(
             np.asarray(self.app.tmpl_replicas),
             np.asarray(self.app.tmpl_mips),
@@ -316,7 +318,8 @@ class Simulation:
                          wall_time_s=t2 - t1, compile_time_s=compile_s)
 
     # ------------------------------------------------------------------
-    def _get_compiled_batch(self, state: SimState, dyn_b: DynParams):
+    def _get_compiled_batch(self, state: SimState, dyn_b: DynParams,
+                            app_b: AppStatic | None = None):
         # The scaling cadence decision must live OUTSIDE the vmap: a
         # traced cond under vmap becomes a select that executes the whole
         # scaling body every tick for every sweep point.  When the sweep
@@ -328,14 +331,19 @@ class Simulation:
                            or self.params.migration_enabled)
         si = np.asarray(dyn_b.scale_interval)
         hoist = has_scaling and bool((si == si.flat[0]).all())
-        key = ("batch", hoist, self._static_key(),
-               self._shape_key((state, dyn_b, self.app)))
+        batched_app = app_b is not None
+        app_arg = app_b if batched_app else self.app
+        key = ("batch", hoist, batched_app, self._static_key(),
+               self._shape_key((state, dyn_b, app_arg)))
         hit = Simulation._compiled_cache.get(key)
         if hit is not None:
             return hit, 0.0
         t0 = _time.perf_counter()
         n_ticks = self.params.n_ticks
         B = np.asarray(dyn_b.dt).shape[0]
+        # app axis: batched sweeps vmap over (dyn, app); plain sweeps close
+        # over the one shared app (in_axes None keeps it unbatched)
+        app_ax = 0 if batched_app else None
 
         if hoist:
             tick_on = make_tick(self.caps, self.params, self._has_edges,
@@ -347,13 +355,15 @@ class Simulation:
                 st_b = jax.tree_util.tree_map(
                     lambda x: jnp.broadcast_to(x, (B,) + x.shape), st)
                 interval = dp_b.scale_interval[0]
-                on = jax.vmap(lambda s, d: tick_on(s, d, app))
-                off = jax.vmap(lambda s, d: tick_off(s, d, app))
+                on = jax.vmap(lambda s, d, a: tick_on(s, d, a),
+                              in_axes=(0, 0, app_ax))
+                off = jax.vmap(lambda s, d, a: tick_off(s, d, a),
+                               in_axes=(0, 0, app_ax))
 
                 def body(carry, _):
                     due = (carry.tick[0] % interval) == (interval - 1)
-                    return jax.lax.cond(due, lambda s: on(s, dp_b),
-                                        lambda s: off(s, dp_b), carry)
+                    return jax.lax.cond(due, lambda s: on(s, dp_b, app),
+                                        lambda s: off(s, dp_b, app), carry)
 
                 states, traces = jax.lax.scan(body, st_b, None,
                                               length=n_ticks)
@@ -364,12 +374,12 @@ class Simulation:
             tick = self._tick
 
             def run_fn(st: SimState, dp_b: DynParams, app: AppStatic):
-                def one(dp: DynParams):
-                    return jax.lax.scan(lambda s, _: tick(s, dp, app), st,
+                def one(dp: DynParams, app_p: AppStatic):
+                    return jax.lax.scan(lambda s, _: tick(s, dp, app_p), st,
                                         None, length=n_ticks)
-                return jax.vmap(one)(dp_b)
+                return jax.vmap(one, in_axes=(0, app_ax))(dp_b, app)
 
-        compiled = jax.jit(run_fn).lower(state, dyn_b, self.app).compile()
+        compiled = jax.jit(run_fn).lower(state, dyn_b, app_arg).compile()
         dt = _time.perf_counter() - t0
         Simulation._compiled_cache[key] = compiled
         return compiled, dt
@@ -394,7 +404,8 @@ class Simulation:
                 "point starts from the same initial state — pass seed= to "
                 "run_batch (or run separate simulations) instead")
 
-    def run_batch(self, dyn_batch, seed: Optional[int] = None) -> SimResult:
+    def run_batch(self, dyn_batch, seed: Optional[int] = None,
+                  apps=None) -> SimResult:
         """Run a whole parameter sweep as ONE compile + ONE device dispatch.
 
         ``dyn_batch`` is either a batched :class:`DynParams` (every leaf
@@ -405,6 +416,12 @@ class Simulation:
         dyn values.  Structure-changing knobs (policy selectors, pool
         sizes, ``n_ticks``) are static — sweep those with separate
         Simulations.
+
+        ``apps`` optionally supplies one :class:`AppStatic` per sweep
+        point (every leaf must match ``self.app``'s shape — e.g. re-zoned
+        ``host_zone`` tables for a blast-radius study, or re-parameterized
+        length/payload models for calibration); the whole sweep still
+        compiles and dispatches once, vmapped over (dyn, app).
         """
         if not isinstance(dyn_batch, DynParams):
             points = list(dyn_batch)
@@ -414,10 +431,28 @@ class Simulation:
             dyn_batch = stack_dyn(
                 d if isinstance(d, DynParams) else DynParams.from_params(d)
                 for d in points)
+        B = int(np.asarray(dyn_batch.dt).shape[0])
+        app_b = None
+        if apps is not None:
+            apps = list(apps)
+            if len(apps) != B:
+                raise ValueError(
+                    f"apps must supply one AppStatic per sweep point: got "
+                    f"{len(apps)} apps for {B} points")
+            ref = self._shape_key(self.app)
+            for b, a in enumerate(apps):
+                if self._shape_key(a) != ref:
+                    raise ValueError(
+                        f"apps[{b}] has different array shapes than the "
+                        "Simulation's app; shape-changing graphs need a "
+                        "separate Simulation")
+            app_b = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *apps)
         state = self.init_state(seed)
-        compiled, compile_s = self._get_compiled_batch(state, dyn_batch)
+        compiled, compile_s = self._get_compiled_batch(state, dyn_batch,
+                                                       app_b)
         t1 = _time.perf_counter()
-        out_state, trace = compiled(state, dyn_batch, self.app)
+        out_state, trace = compiled(state, dyn_batch,
+                                    app_b if app_b is not None else self.app)
         out_state = jax.block_until_ready(out_state)
         t2 = _time.perf_counter()
         return SimResult(state=out_state, trace=trace,

@@ -37,7 +37,8 @@ import jax.numpy as jnp
 
 from . import network as netmod
 from .app import AppStatic
-from .pool import assign_free_slots, scatter_pool, segment_sum as _segsum
+from .pool import (assign_free_slots, scatter_pool, segment_rank,
+                   segment_sum as _segsum)
 from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING,
                     DynParams, FaultState, INST_DOWN, INST_DRAIN, INST_FREE,
                     INST_ON, SimCaps, SimParams, SimState)
@@ -92,16 +93,47 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
         raise ValueError(
             f"fault edge tables undersized: app emits edge ids up to "
             f"{int(app.n_edges) - 1} but FaultState holds {E} edges — "
-            f"pass n_edges=app.n_edges (or n_apis) to zeros_state")
+            f"pass app=app (or n_edges/n_apis) to zeros_state")
+    if int(app.host_zone.shape[0]) != H:
+        raise ValueError(
+            f"host_zone table must cover every host: app maps "
+            f"{int(app.host_zone.shape[0])} hosts but the cluster has {H} — "
+            f"pass n_hosts (or host_zone) to build_app")
 
     k_host, k_inst, k_nic = jax.random.split(rng, 3)
+    # Gray-failure streams are folded off the tick key rather than widening
+    # the split above: jax.random.split is NOT prefix-stable, so one extra
+    # child would perturb every pre-existing chaos stream and break the
+    # pinned chaos goldens.
+    k_slow, k_sev, k_zone, k_zslow, k_part = jax.random.split(
+        jax.random.fold_in(rng, 1), 5)
+
+    # --- correlated failure domains (zone draws, DESIGN.md §7.1) ---------
+    # One uniform draw per *zone slot* ([H] slots bound Z); a firing draw
+    # downs (or slows) every host mapped to that zone.  Unused slots are
+    # masked out so the fired-zone counter stays meaningful.
+    hz = app.host_zone
+    zone_used = jnp.zeros((H,), bool).at[hz].set(True)
+    zone_down = zone_used & (jax.random.uniform(k_zone, (H,))
+                             < _p_rate(dyn.zone_fault_rate, dt))
+    zone_slow = zone_used & (jax.random.uniform(k_zslow, (H,))
+                             < _p_rate(dyn.zone_slow_rate, dt))
 
     # --- host crash / recovery (MTBF / MTTR) ---------------------------
     up = fs.host_up > 0
     u_h = jax.random.uniform(k_host, (H,))
-    crash = up & (u_h < _p_mean_time(dyn.host_mtbf_s, dt))
+    crash = up & ((u_h < _p_mean_time(dyn.host_mtbf_s, dt)) | zone_down[hz])
     recover = ~up & (u_h < _p_mean_time(dyn.host_mttr_s, dt))
     up_new = (up & ~crash) | recover
+
+    # --- host fail-slow episodes (degraded MIPS, MTBF/MTTR style) --------
+    slow = fs.host_slow > 0
+    u_sl = jax.random.uniform(k_slow, (H,))
+    slow_start = ~slow & up_new \
+        & ((u_sl < _p_mean_time(dyn.host_slow_mtbf_s, dt)) | zone_slow[hz])
+    slow_end = slow & (u_sl < _p_mean_time(dyn.host_slow_mttr_s, dt))
+    # a crashing host ends its episode: it restarts healthy
+    slow_new = ((slow & ~slow_end) | slow_start) & up_new
 
     # --- NIC degradation (capacity fraction while degraded) -------------
     ok = fs.nic_ok > 0
@@ -109,6 +141,27 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
     degrade = ok & (u_n < _p_rate(dyn.nic_degrade_rate, dt))
     fix = ~ok & (u_n < _p_mean_time(dyn.nic_mttr_s, dt))
     ok_new = (ok & ~degrade) | fix
+    # Brownout severity is sampled once per degradation from
+    # U[factor − spread, factor + spread] ∩ [0, 1] and held for the whole
+    # episode; Transit multiplies NIC capacity by the stored factor.
+    sev = jnp.clip(dyn.nic_degrade_factor
+                   + (2.0 * jax.random.uniform(k_sev, (H,)) - 1.0)
+                   * dyn.nic_degrade_spread, 0.0, 1.0)
+    nic_factor = jnp.where(degrade, sev,
+                           jnp.where(fix, 1.0, fs.nic_factor))
+
+    # --- partial partitions (zone-pair link cuts) ------------------------
+    # Symmetric [Z, Z] mask updated on the strictly-upper triangle (one
+    # draw per unordered pair) and mirrored; Transit zeroes the capacity
+    # of cut transfers in the water-fill instead of crashing anything.
+    cut = fs.zone_cut > 0
+    u_p = jax.random.uniform(k_part, (H, H))
+    upper = jnp.triu(jnp.ones((H, H), bool), 1)
+    pair_used = upper & zone_used[:, None] & zone_used[None, :]
+    p_open = pair_used & ~cut & (u_p < _p_rate(dyn.zone_partition_rate, dt))
+    p_heal = cut & upper & (u_p < _p_mean_time(dyn.zone_partition_mttr_s, dt))
+    cut_upper = (cut & upper & ~p_heal) | p_open
+    zone_cut_new = (cut_upper | cut_upper.T).astype(i32)
 
     # --- instance transitions -------------------------------------------
     host_safe = jnp.maximum(inst.host, 0)
@@ -286,9 +339,72 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
                            jnp.where(close, 0.0, fs.edge_open_until))
     ema = jnp.where(close, 0.0, ema)   # clean slate after a healthy probe
 
+    # --- per-replica outlier ejection (breaker-aware LB, §7.1) ------------
+    # Same three-state machine as the edge breaker, but per instance and
+    # enforced in the dispatch rank table (policies.eject_view) — a sick
+    # replica is routed around instead of the whole edge failing fast.
+    S = state.sched.svc_replicas.shape[0]
+    org_i = _segsum(organic.astype(i32), jnp.where(organic, cl.inst, -1), I)
+    succ_i = fs.inst_succ
+    n_i = org_i + succ_i
+    traffic_i = n_i > 0
+    err_i = org_i.astype(f32) / jnp.maximum(n_i.astype(f32), 1.0)
+    iema = jnp.where(traffic_i,
+                     fs.inst_err_ema + dyn.cb_alpha * (err_i - fs.inst_err_ema),
+                     fs.inst_err_ema)
+    mean_lat = fs.inst_lat_sum / jnp.maximum(succ_i.astype(f32), 1.0)
+    lema = jnp.where(succ_i > 0,
+                     fs.inst_lat_ema + dyn.cb_alpha * (mean_lat
+                                                       - fs.inst_lat_ema),
+                     fs.inst_lat_ema)
+    # latency outlier = EMA above eject_lat_factor × the service's mean
+    # over its ON replicas with signal (≥ 2 so a lone replica never
+    # outlies itself)
+    on_i = instances.status == INST_ON
+    isvc_safe = jnp.maximum(instances.service, 0)
+    sig = on_i & (lema > 0) & (instances.service >= 0)
+    lat_sum_s = _segsum(jnp.where(sig, lema, 0.0),
+                        jnp.where(sig, instances.service, -1), S)
+    lat_cnt_s = _segsum(sig.astype(i32), jnp.where(sig, instances.service,
+                                                   -1), S)
+    svc_lat = lat_sum_s / jnp.maximum(lat_cnt_s.astype(f32), 1.0)
+    lat_trip = (dyn.eject_lat_factor > 0) & (lat_cnt_s[isvc_safe] >= 2) \
+        & (lema > dyn.eject_lat_factor * svc_lat[isvc_safe])
+    ej_open = fs.inst_eject_until > t
+    ej_half = (fs.inst_eject_until > 0) & ~ej_open
+    ej_closed = fs.inst_eject_until <= 0
+    want = ej_closed & on_i & traffic_i \
+        & ((iema > dyn.eject_err_thresh) | lat_trip)
+    # last-replica guard: keep at least one admissible (ON, not-ejected)
+    # replica per service — cap this tick's ejections at admissible − 1
+    n_adm = _segsum((on_i & ~ej_open).astype(i32),
+                    jnp.where(instances.service >= 0, instances.service, -1),
+                    S)
+    eject_rank = segment_rank(isvc_safe, want, S)
+    trip_i = want & (eject_rank < jnp.maximum(n_adm[isvc_safe] - 1, 0))
+    probe_fail = ej_half & (org_i > 0)
+    probe_ok = ej_half & (org_i == 0) & (succ_i > 0)
+    eject_until = jnp.where(trip_i | probe_fail, t + dyn.eject_cooldown_s,
+                            jnp.where(probe_ok, 0.0, fs.inst_eject_until))
+    iema = jnp.where(probe_ok, 0.0, iema)
+    lema = jnp.where(probe_ok, 0.0, lema)
+    # dead / restarted pods shed their ejection history: a fresh pod is
+    # re-admitted clean
+    gone = dead_now | restarts
+    eject_until = jnp.where(gone, 0.0, eject_until)
+    iema = jnp.where(gone, 0.0, iema)
+    lema = jnp.where(gone, 0.0, lema)
+
     fault = FaultState(host_up=up_new.astype(i32), nic_ok=ok_new.astype(i32),
                        edge_open_until=open_until, edge_err_ema=ema,
-                       edge_succ=jnp.zeros_like(succ_e))
+                       edge_succ=jnp.zeros_like(succ_e),
+                       host_slow=slow_new.astype(i32),
+                       nic_factor=nic_factor,
+                       zone_cut=zone_cut_new,
+                       inst_err_ema=iema, inst_lat_ema=lema,
+                       inst_eject_until=eject_until,
+                       inst_succ=jnp.zeros_like(succ_i),
+                       inst_lat_sum=jnp.zeros_like(fs.inst_lat_sum))
 
     counters = state.counters._replace(
         spawned=state.counters.spawned + asg.n_assigned)
@@ -301,6 +417,13 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
         failfast=fst.failfast + jnp.sum(failfast.astype(i32)),
         breaker_trips=fst.breaker_trips + jnp.sum(trip.astype(i32)),
         down_time_s=fst.down_time_s + dt * jnp.sum((~up_new).astype(f32)),
+        ejections=fst.ejections + jnp.sum(trip_i.astype(i32)),
+        readmissions=fst.readmissions + jnp.sum(probe_ok.astype(i32)),
+        zone_faults=fst.zone_faults + jnp.sum(zone_down.astype(i32))
+        + jnp.sum(zone_slow.astype(i32)),
+        partitions=fst.partitions + jnp.sum(p_open.astype(i32)),
+        slow_episodes=fst.slow_episodes + jnp.sum(slow_start.astype(i32)),
+        slow_time_s=fst.slow_time_s + dt * jnp.sum(slow_new.astype(f32)),
     )
     return state._replace(rr=rr, cloudlets=cloudlets, requests=requests,
                           counters=counters, fault=fault, fstats=fstats)

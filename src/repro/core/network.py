@@ -66,8 +66,15 @@ def pick_replicas(svc: jnp.ndarray, live: jnp.ndarray, state: SimState,
     i32 = jnp.int32
     sched, inst = state.sched, state.instances
     S = sched.svc_replicas.shape[0]
+    if params.faults == "chaos":
+        # outlier ejection (§7.1): address around OPEN-ejected replicas —
+        # the exact identity view when nothing is ejected
+        iof, reps = policies.eject_view(sched, state.fault.inst_eject_until,
+                                        state.time)
+    else:
+        iof, reps = sched.inst_of_rank, sched.svc_replicas
     svc_safe = jnp.where(live, svc, 0)
-    replicas = sched.svc_replicas[svc_safe]
+    replicas = reps[svc_safe]
     rep_safe = jnp.maximum(replicas, 1)
 
     # Shared three-policy rank selection (policies.lb_rank); round-robin
@@ -78,10 +85,9 @@ def pick_replicas(svc: jnp.ndarray, live: jnp.ndarray, state: SimState,
               else jnp.zeros(svc.shape, i32))
     rank = policies.lb_rank(
         params.lb_policy, state.rr, svc_safe, rep_safe, offset, rng,
-        sched.inst_of_rank, inst.status, inst.n_exec, inst.mips)
+        iof, inst.status, inst.n_exec, inst.mips)
 
-    target = sched.inst_of_rank[
-        svc_safe, jnp.minimum(rank, caps.max_replicas - 1)]
+    target = iof[svc_safe, jnp.minimum(rank, caps.max_replicas - 1)]
     ok = live & (replicas > 0) & (target >= 0)
     tgt_safe = jnp.where(ok, target, 0)
     ok = ok & (inst.status[tgt_safe] == INST_ON)
@@ -105,7 +111,7 @@ def sample_payload(mean: jnp.ndarray, std: jnp.ndarray, rng: jnp.ndarray
 
 
 def transit(state: SimState, caps: SimCaps, params: SimParams,
-            dyn: DynParams) -> SimState:
+            dyn: DynParams, app: AppStatic | None = None) -> SimState:
     """One fabric tick: water-fill every NIC port, advance transfers,
     deliver arrivals into the waiting queue (Transit phase, DESIGN.md §6).
 
@@ -113,6 +119,11 @@ def transit(state: SimState, caps: SimCaps, params: SimParams,
     ``nic_*_mbps=0`` or a zero host scale) yields zero rates, and its
     transfers legitimately never arrive — the run reports zero completions
     rather than inventing transport.
+
+    ``app`` supplies the host→zone table for partial partitions under
+    ``faults="chaos"`` (zone-pair link cuts, §7.1): a cut transfer gets
+    zero capacity in the water-fill and stalls until the partition heals
+    or its attempt times out — nothing crashes.
     """
     cl, inst, net = state.cloudlets, state.instances, state.net
     i32, f32 = jnp.int32, jnp.float32
@@ -128,15 +139,25 @@ def transit(state: SimState, caps: SimCaps, params: SimParams,
              * MBIT_PER_S_TO_MBYTE_PER_S)
     cap_i = (state.hosts.ingress_scale * dyn.nic_ingress_mbps
              * MBIT_PER_S_TO_MBYTE_PER_S)
+    flowing = active & (dst >= 0)
     if params.faults == "chaos":
-        # NIC degradation (Disruption schedule, §7): a degraded host's
-        # ports run at a fraction of their capacity until they recover
-        nic = jnp.where(state.fault.nic_ok > 0, 1.0, dyn.nic_degrade_factor)
+        # NIC degradation / brownout (Disruption schedule, §7): a degraded
+        # host's ports run at the severity factor sampled when the episode
+        # began (FaultState.nic_factor, 1.0 while healthy)
+        nic = state.fault.nic_factor
         cap_e = cap_e * nic
         cap_i = cap_i * nic
+        if app is not None:
+            # partial partition: zero the capacity of transfers crossing a
+            # cut zone pair (client ingress, src = -1, is never cut)
+            hz = app.host_zone
+            cut = (src >= 0) & (dst >= 0) \
+                & (state.fault.zone_cut[hz[jnp.maximum(src, 0)],
+                                        hz[jnp.maximum(dst, 0)]] > 0)
+            flowing = flowing & ~cut
 
     rate = link_share(
-        src, dst, active & (dst >= 0), cap_e, cap_i,
+        src, dst, flowing, cap_e, cap_i,
         iters=params.waterfill_iters,
         use_pallas=None if params.use_pallas_tick else False,
         interpret=params.pallas_interpret)

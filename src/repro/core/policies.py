@@ -76,6 +76,36 @@ def lb_rank(lb_policy: int, rr: jnp.ndarray, svc: jnp.ndarray,
     return jnp.argmin(load, axis=1).astype(i32)[svc]
 
 
+def eject_view(sched, eject_until: jnp.ndarray, time: jnp.ndarray
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Breaker-aware outlier-ejection view of the dispatch rank table
+    (DESIGN.md §7.1): returns ``(inst_of_rank, svc_replicas)`` with every
+    OPEN-ejected replica (``time < eject_until``) compacted out, so the
+    LB policies route around a sick replica instead of the edge breaker
+    failing the whole edge.  HALF-OPEN replicas (cooldown elapsed) stay in
+    the rotation as probe targets.
+
+    When nothing is ejected the compaction is the exact identity — the
+    keep mask reduces to the in-rank mask, positions equal ranks, and the
+    returned tables are value-identical to ``sched``'s, which keeps the
+    fault-free and default-chaos goldens bit-pinned.
+    """
+    i32 = jnp.int32
+    iof = sched.inst_of_rank                      # [S, R]
+    S, Rm = iof.shape
+    idx = jnp.arange(Rm, dtype=i32)[None, :]
+    in_rank = idx < sched.svc_replicas[:, None]
+    ejected = eject_until[jnp.maximum(iof, 0)] > time
+    keep = in_rank & ~ejected
+    pos = jnp.cumsum(keep.astype(i32), axis=1) - 1
+    n_ok = jnp.where(keep, pos + 1, 0).max(axis=1)
+    rows = jnp.broadcast_to(jnp.arange(S, dtype=i32)[:, None], (S, Rm))
+    cols = jnp.where(keep, pos, Rm)               # Rm = out of bounds → drop
+    iof_eff = jnp.full((S, Rm), -1, i32).at[rows, cols].set(
+        iof, mode="drop")
+    return iof_eff, n_ok
+
+
 class LoadBalancer(Protocol):
     """Custom load-balancing hook.
 

@@ -66,6 +66,13 @@ class QoSReport:
     breaker_trips: int = 0
     host_crashes: int = 0
     observed_mttr_s: float = 0.0      # host down-time / recoveries
+    # gray failure / blast radius (DESIGN.md §7.1)
+    ejections: int = 0                # replica outlier ejections
+    readmissions: int = 0             # ejected replicas re-admitted clean
+    zone_faults: int = 0              # zone-correlated crash/slow draws
+    partitions: int = 0               # zone-pair partitions opened
+    slow_episodes: int = 0            # host fail-slow episodes
+    slow_time_s: float = 0.0          # Σ host-slow seconds
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
@@ -194,6 +201,12 @@ def summarize(sim: Simulation, result: SimResult,
         breaker_trips=int(fst.breaker_trips),
         host_crashes=int(fst.host_crashes),
         observed_mttr_s=float(fst.down_time_s) / max(recoveries, 1),
+        ejections=int(fst.ejections),
+        readmissions=int(fst.readmissions),
+        zone_faults=int(fst.zone_faults),
+        partitions=int(fst.partitions),
+        slow_episodes=int(fst.slow_episodes),
+        slow_time_s=float(fst.slow_time_s),
     )
 
 

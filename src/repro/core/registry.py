@@ -114,10 +114,18 @@ def templates_from_spec(spec: Dict[str, Any],
 def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
              params: SimParams | None = None, vm_mips=None, vm_ram=None,
              host_egress_scale=None, host_ingress_scale=None,
-             placement_policy=None) -> Simulation:
-    """One-call entity registration (paper Fig 4 ``Register`` class)."""
+             placement_policy=None, host_zone=None) -> Simulation:
+    """One-call entity registration (paper Fig 4 ``Register`` class).
+
+    Failure-domain extension (DESIGN.md §7.1): the app document may carry
+    a top-level ``"zones": [zone_id, ...]`` list (one entry per host) that
+    maps hosts to correlated failure domains for zone-level chaos; the
+    ``host_zone`` argument overrides it.  Default: one zone per host.
+    """
     spec = load_app_json(app_spec)
     graph = graph_from_spec(spec)
+    if host_zone is None and "zones" in spec:
+        host_zone = np.asarray(spec["zones"], np.int32)
     templates = {}
     if instance_spec is not None:
         inst_spec = load_instances_yaml(instance_spec)
@@ -126,4 +134,5 @@ def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
                       vm_mips=vm_mips, vm_ram=vm_ram,
                       host_egress_scale=host_egress_scale,
                       host_ingress_scale=host_ingress_scale,
-                      placement_policy=placement_policy)
+                      placement_policy=placement_policy,
+                      host_zone=host_zone)

@@ -197,8 +197,15 @@ def dispatch(state: SimState, app: AppStatic, caps: SimCaps,
         # transport) — the load-independent degenerate mode.
         waiting = (cl.status == CL_WAITING) & \
             (state.time + 1e-6 >= cl.arrival + dyn.net_latency)
+    if params.faults == "chaos":
+        # outlier ejection (§7.1): dispatch around OPEN-ejected replicas —
+        # the exact identity view when nothing is ejected
+        iof, reps = policies.eject_view(sched, state.fault.inst_eject_until,
+                                        state.time)
+    else:
+        iof, reps = sched.inst_of_rank, sched.svc_replicas
     svc = jnp.where(waiting, cl.service, 0)
-    replicas = sched.svc_replicas[svc]                      # [C]
+    replicas = reps[svc]                                    # [C]
     has_rep = waiting & (replicas > 0)
     rep_safe = jnp.maximum(replicas, 1)
 
@@ -209,9 +216,9 @@ def dispatch(state: SimState, app: AppStatic, caps: SimCaps,
     rank = policies.lb_rank(
         params.lb_policy, state.rr, svc, rep_safe,
         jnp.arange(C, dtype=i32), rng,
-        sched.inst_of_rank, inst.status, inst.n_exec, inst.mips)
+        iof, inst.status, inst.n_exec, inst.mips)
 
-    target = sched.inst_of_rank[svc, jnp.minimum(rank, caps.max_replicas - 1)]
+    target = iof[svc, jnp.minimum(rank, caps.max_replicas - 1)]
     ok = has_rep & (target >= 0)
     tgt_safe = jnp.where(ok, target, 0)
     ok = ok & (inst.status[tgt_safe] == INST_ON)
@@ -227,6 +234,11 @@ def dispatch(state: SimState, app: AppStatic, caps: SimCaps,
         use_pre = (waiting & (pre >= 0)
                    & (inst.status[pre_safe] == INST_ON)
                    & (inst.service[pre_safe] == cl.service))
+        if params.faults == "chaos":
+            # a replica ejected while the payload was in flight is not
+            # honored either — re-balance to a healthy one
+            use_pre = use_pre & ~(
+                state.fault.inst_eject_until[pre_safe] > state.time)
         target = jnp.where(use_pre, pre, target)
         ok = ok | use_pre
         tgt_safe = jnp.where(ok, target, 0)
@@ -305,8 +317,18 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
         w = execm.astype(f32)
         wsum = n_exec.astype(f32)
     inst_safe = jnp.where(execm, inst_c, 0)
+    mips_eff = inst.mips
+    if params.faults == "chaos":
+        # fail-slow hosts (§7.1): a slow host's instances run at a fraction
+        # of their allocation — the scheduling weights are untouched, only
+        # the effective rate degrades (allocation-based util still reads
+        # against inst.mips, so a slow host shows depressed utilization)
+        hs = jnp.maximum(inst.host, 0)
+        is_slow = (inst.host >= 0) & (state.fault.host_slow[hs] > 0)
+        mips_eff = jnp.where(is_slow, inst.mips * dyn.host_slow_factor,
+                             inst.mips)
     rate = jnp.where(execm,
-                     inst.mips[inst_safe] * w
+                     mips_eff[inst_safe] * w
                      / jnp.maximum(wsum[inst_safe], 1e-9), 0.0)  # MI/s
 
     # --- fused finish reduction: progress + every per-finish aggregate
@@ -402,13 +424,17 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
     counters = state.counters._replace(
         finished=state.counters.finished + jnp.sum(fin.astype(i32)))
 
-    # --- per-edge success counts (resilience §7, chaos mode only): the
-    # next Disruption pass folds them into the breaker error-rate EMA ----
+    # --- per-edge / per-replica success counts (resilience §7, chaos mode
+    # only): the next Disruption pass folds them into the breaker and
+    # outlier-ejection error/latency EMAs --------------------------------
     fault = state.fault
     if params.faults == "chaos":
         E = fault.edge_succ.shape[0]
-        fault = fault._replace(edge_succ=fault.edge_succ + _segsum(
-            fin.astype(i32), jnp.where(fin, cl.edge, -1), E))
+        fault = fault._replace(
+            edge_succ=fault.edge_succ + _segsum(
+                fin.astype(i32), jnp.where(fin, cl.edge, -1), E),
+            inst_succ=fault.inst_succ + fin_per_inst,
+            inst_lat_sum=fault.inst_lat_sum + out.inst_acc[:I, 2])
 
     return state._replace(cloudlets=cloudlets, instances=instances, vms=vms,
                           requests=requests, svc_stats=svc_stats,

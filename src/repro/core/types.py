@@ -141,6 +141,28 @@ class SimParams:
     egress_shaping: bool = False  # clamp per-instance Transit egress by
                                   # Instances.bw (fabric mode, §6)
 
+    # --- gray failure (fail-slow / blast radius, DESIGN.md §7.1) ---------
+    host_slow_mtbf_s: float = float("inf")  # mean time between fail-slow
+                                  # episodes per host (inf = never)
+    host_slow_mttr_s: float = 30.0          # mean fail-slow episode length
+    host_slow_factor: float = 0.25          # MIPS multiplier while slow
+    nic_degrade_spread: float = 0.0         # NIC brownout severity spread:
+                                  # each degradation samples its factor from
+                                  # U[factor − spread, factor + spread]∩[0,1]
+    zone_fault_rate: float = 0.0  # zone crash draws per second per zone —
+                                  # one draw downs EVERY host of the zone
+                                  # (hosts recover individually, host_mttr_s)
+    zone_slow_rate: float = 0.0   # zone fail-slow draws per second per zone
+    zone_partition_rate: float = 0.0   # partial-partition draws per second
+                                  # per zone PAIR (cuts their link capacity)
+    zone_partition_mttr_s: float = 30.0  # mean partition length
+    eject_err_thresh: float = 2.0 # outlier-ejection trip threshold on the
+                                  # per-replica error EMA (> 1 = disabled)
+    eject_lat_factor: float = 0.0 # latency outlier trip: replica latency
+                                  # EMA > factor × its service's mean
+                                  # (0 = latency ejection disabled)
+    eject_cooldown_s: float = 10.0  # ejected → probe (half-open) cooldown
+
     # --- usage accounting (paper §5.2 linear model) ----------------------
     idle_mips_frac: float = 0.0   # idle floor: instances consume a small
                                   # fraction of their allocation when ON
@@ -202,6 +224,17 @@ class DynParams(NamedTuple):
     cb_err_thresh: jnp.ndarray
     cb_alpha: jnp.ndarray
     cb_cooldown_s: jnp.ndarray
+    host_slow_mtbf_s: jnp.ndarray
+    host_slow_mttr_s: jnp.ndarray
+    host_slow_factor: jnp.ndarray
+    nic_degrade_spread: jnp.ndarray
+    zone_fault_rate: jnp.ndarray
+    zone_slow_rate: jnp.ndarray
+    zone_partition_rate: jnp.ndarray
+    zone_partition_mttr_s: jnp.ndarray
+    eject_err_thresh: jnp.ndarray
+    eject_lat_factor: jnp.ndarray
+    eject_cooldown_s: jnp.ndarray
 
     @staticmethod
     def from_params(p: "SimParams") -> "DynParams":
@@ -229,7 +262,18 @@ class DynParams(NamedTuple):
             retry_budget=i(p.retry_budget),
             retry_timeout_s=f(p.retry_timeout_s),
             cb_err_thresh=f(p.cb_err_thresh), cb_alpha=f(p.cb_alpha),
-            cb_cooldown_s=f(p.cb_cooldown_s))
+            cb_cooldown_s=f(p.cb_cooldown_s),
+            host_slow_mtbf_s=f(p.host_slow_mtbf_s),
+            host_slow_mttr_s=f(p.host_slow_mttr_s),
+            host_slow_factor=f(p.host_slow_factor),
+            nic_degrade_spread=f(p.nic_degrade_spread),
+            zone_fault_rate=f(p.zone_fault_rate),
+            zone_slow_rate=f(p.zone_slow_rate),
+            zone_partition_rate=f(p.zone_partition_rate),
+            zone_partition_mttr_s=f(p.zone_partition_mttr_s),
+            eject_err_thresh=f(p.eject_err_thresh),
+            eject_lat_factor=f(p.eject_lat_factor),
+            eject_cooldown_s=f(p.eject_cooldown_s))
 
 
 class Clients(NamedTuple):
@@ -572,14 +616,19 @@ class NetStats(NamedTuple):
 class FaultState(NamedTuple):
     """Fault-injection & resilience state (Disruption phase, DESIGN.md §7).
 
-    All zeros-of-the-right-shape in ``faults="none"`` mode — present so the
-    pytree shape is mode-independent, but never read or written there.
+    ``host_up`` / ``nic_ok`` are [H] in every mode (placement and scaling
+    read them unconditionally); every other table is a chaos-only column —
+    zero-width in ``faults="none"`` mode so the fault-free scan carry pays
+    nothing for the resilience machinery.
 
     The circuit breaker per service edge is a pure status mask over
     ``edge_open_until``: CLOSED while ``open_until <= 0``, OPEN while
     ``time < open_until`` (new calls fail fast), HALF-OPEN once the cooldown
     passes (``0 < open_until <= time`` — probe traffic flows; the first
     observed failure re-opens, the first all-success tick closes).
+    Outlier ejection (``inst_eject_until``) mirrors the same three states
+    per replica: an OPEN replica is compacted out of the dispatch rank
+    table (`policies.eject_view`), a HALF-OPEN one receives probe traffic.
     """
 
     host_up: jnp.ndarray         # [H] i32 1 = host up
@@ -589,6 +638,20 @@ class FaultState(NamedTuple):
     edge_succ: jnp.ndarray       # [E] i32 successes since the last breaker
     #                              update (written by execute, consumed and
     #                              reset by the next Disruption phase)
+    host_slow: jnp.ndarray       # [H] i32 1 = fail-slow episode active
+    #                              (Execute degrades MIPS by host_slow_factor)
+    nic_factor: jnp.ndarray      # [H] f32 NIC capacity multiplier Transit
+    #                              applies (1.0 healthy; sampled per brownout
+    #                              from the severity distribution)
+    zone_cut: jnp.ndarray        # [H, H] i32 symmetric zone-pair partition
+    #                              mask (zone ids index it; Z ≤ H so the
+    #                              host count bounds the table)
+    inst_err_ema: jnp.ndarray    # [I] f32 per-replica error-rate EMA
+    inst_lat_ema: jnp.ndarray    # [I] f32 per-replica mean-sojourn EMA (s)
+    inst_eject_until: jnp.ndarray# [I] f32 ejection clock (breaker states)
+    inst_succ: jnp.ndarray       # [I] i32 successes since the last ejection
+    #                              update (execute-written, like edge_succ)
+    inst_lat_sum: jnp.ndarray    # [I] f32 Σ sojourn of those successes
 
 
 class FaultStats(NamedTuple):
@@ -603,6 +666,12 @@ class FaultStats(NamedTuple):
     failed_requests: jnp.ndarray # i32 requests completed as failed
     breaker_trips: jnp.ndarray   # i32 closed → open transitions
     down_time_s: jnp.ndarray     # f32 Σ host-down seconds (MTTR numerator)
+    ejections: jnp.ndarray       # i32 replica outlier ejections
+    readmissions: jnp.ndarray    # i32 ejected replicas re-admitted clean
+    zone_faults: jnp.ndarray     # i32 zone-correlated crash/slow draws fired
+    partitions: jnp.ndarray      # i32 zone-pair partitions opened
+    slow_episodes: jnp.ndarray   # i32 host fail-slow episodes started
+    slow_time_s: jnp.ndarray     # f32 Σ host-slow seconds
 
 
 class SchedState(NamedTuple):
@@ -675,31 +744,49 @@ class TickTrace(NamedTuple):
     active_clients: jnp.ndarray
 
 
+def edge_table_size(n_services: int, d_max: int, n_apis: int) -> int:
+    """Length of every per-service-edge table — retry/timeout/payload on
+    :class:`AppStatic` AND the FaultState breaker tables: ``S * d_max``
+    call edges plus one client→entry edge per API (ids
+    ``S*d_max .. S*d_max + n_apis - 1``).  ONE resolver shared by
+    ``build_app`` and ``zeros_state`` so the two can never disagree."""
+    return n_services * d_max + max(n_apis, 1)
+
+
 def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
-                n_edges: int | None = None, n_apis: int = 1) -> SimState:
+                n_edges: int | None = None, n_apis: int = 1,
+                app=None) -> SimState:
     """Build the initial (empty) simulation state.
 
-    ``n_edges`` sizes the per-service-edge resilience tables (retry policy /
-    circuit breaker, §7): ``n_services * d_max`` call edges plus one
-    client→entry edge per API (ids ``S*d_max .. S*d_max + n_apis - 1``).
-    Defaults to the caps-derived bound with ``n_apis`` APIs — pass
-    ``n_edges`` (or ``n_apis``) for multi-API graphs, or the table is
-    undersized and the engine's trace-time check rejects the app.
+    Pass ``app`` (an :class:`AppStatic`) to size the per-service-edge
+    resilience tables (retry policy / circuit breaker, §7) from the app's
+    own edge tables — the same ``edge_table_size`` resolver that built its
+    retry/timeout/payload columns, so the FaultState tables can't be
+    undersized.  Without an app, sizing falls back to the caps-derived
+    bound with ``n_edges``/``n_apis`` overrides (legacy path; the engine's
+    trace-time check still rejects mismatched states).
 
     The cloudlet pool is built to the mode-keyed :class:`PoolLayout` the
     params resolve to — exactly the columns the enabled tick phases
-    declared, nothing more.
+    declared, nothing more.  In ``faults="none"`` mode every chaos-only
+    FaultState table (the [E] breaker tables, fail-slow / ejection /
+    partition state) is zero-width.
     """
     caps.validate()
     f32 = jnp.float32
     i32 = jnp.int32
     Nc, R, C, I, V = (caps.n_clients, caps.max_requests, caps.max_cloudlets,
                       caps.max_instances, caps.n_vms)
+    if app is not None:
+        n_services = int(app.n_services)
+        n_edges = int(app.n_edges)
     S = n_services
-    E = n_edges if n_edges is not None \
-        else n_services * caps.d_max + max(n_apis, 1)
-    layout = resolve_layout(params)
     chaos = params.faults == "chaos"
+    E = n_edges if n_edges is not None \
+        else edge_table_size(n_services, caps.d_max, n_apis)
+    if not chaos:
+        E = 0     # chaos-only columns: zero-width off the Disruption phase
+    layout = resolve_layout(params)
     return SimState(
         tick=jnp.zeros((), i32),
         time=jnp.zeros((), f32),
@@ -781,8 +868,18 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
             edge_open_until=jnp.zeros((E,), f32),
             edge_err_ema=jnp.zeros((E,), f32),
             edge_succ=jnp.zeros((E,), i32),
+            host_slow=jnp.zeros((V if chaos else 0,), i32),
+            nic_factor=jnp.ones((V if chaos else 0,), f32),
+            zone_cut=jnp.zeros((V, V) if chaos else (0, 0), i32),
+            inst_err_ema=jnp.zeros((I if chaos else 0,), f32),
+            inst_lat_ema=jnp.zeros((I if chaos else 0,), f32),
+            inst_eject_until=jnp.zeros((I if chaos else 0,), f32),
+            inst_succ=jnp.zeros((I if chaos else 0,), i32),
+            inst_lat_sum=jnp.zeros((I if chaos else 0,), f32),
         ),
         fstats=FaultStats(*([jnp.zeros((), i32)] * 8
+                            + [jnp.zeros((), f32)]
+                            + [jnp.zeros((), i32)] * 5
                             + [jnp.zeros((), f32)])),
     )
 

@@ -82,7 +82,7 @@ def _crafted(C=64, retry_budget=2, host_mtbf_s=1e-9):
     """A full pool of EXEC cloudlets on one instance of one service, and a
     fault schedule that crashes every host on the next sample."""
     g = linear_chain(1, mi=100.0)
-    app = build_app(g)
+    app = build_app(g, n_hosts=2)
     caps = SimCaps(n_clients=4, max_requests=max(C, 4), max_cloudlets=C,
                    max_instances=4, n_vms=2, d_max=1, max_replicas=1)
     params = SimParams(dt=0.1, n_ticks=1, faults="chaos",
@@ -327,7 +327,7 @@ def test_zeros_state_default_edge_table_covers_all_apis():
     for multi-API graphs (client→entry ids run to S*d_max + n_apis - 1),
     aliasing breaker state through clamped gathers."""
     g = _two_api_graph()
-    app = build_app(g)
+    app = build_app(g, n_hosts=2)
     caps = SimCaps(n_clients=4, max_requests=64, max_cloudlets=64,
                    max_instances=4, n_vms=2, d_max=1)
     params = SimParams(faults="chaos")
@@ -513,6 +513,348 @@ def test_timeout_spec_keys_resolve_like_retries():
     assert er[S * D + 0] == 3 and et[S * D + 0] == pytest.approx(2.5)
     # unlisted edges fall back to the run-wide defaults (-1 sentinel)
     assert er[1 * D + 0] == -1 and et[1 * D + 0] == -1.0
+
+
+# ---------------------------------------------------------------------------
+# gray failures: fail-slow hosts, failure domains, outlier ejection (§7.1)
+# ---------------------------------------------------------------------------
+
+def test_faults_none_gray_tables_zero_width():
+    """faults="none" pays zero bytes for resilience state: every per-edge
+    and gray-failure column is zero-width; only host_up/nic_ok stay [H]
+    (scaling and placement read them unconditionally)."""
+    caps = SimCaps(n_clients=4, max_requests=16, max_cloudlets=16,
+                   max_instances=4, n_vms=3, d_max=1)
+    st = zeros_state(caps, SimParams(), jax.random.PRNGKey(0))
+    f = st.fault
+    assert f.host_up.shape == (3,) and f.nic_ok.shape == (3,)
+    for name in ("edge_open_until", "edge_err_ema", "edge_succ",
+                 "host_slow", "nic_factor", "inst_err_ema", "inst_lat_ema",
+                 "inst_eject_until", "inst_succ", "inst_lat_sum"):
+        assert getattr(f, name).shape == (0,), name
+    assert f.zone_cut.shape == (0, 0)
+    # chaos sizes the edge tables through the one shared resolver
+    from repro.core.types import edge_table_size
+    g = linear_chain(2, mi=100.0)
+    app = build_app(g, n_hosts=3)
+    chaos = zeros_state(caps, SimParams(faults="chaos"),
+                        jax.random.PRNGKey(0), app=app)
+    assert int(app.n_edges) == edge_table_size(g.n_services, g.d_max,
+                                               g.n_apis)
+    assert chaos.fault.edge_open_until.shape == (int(app.n_edges),)
+    assert chaos.fault.host_slow.shape == (3,)
+    assert chaos.fault.nic_factor.shape == (3,)
+    assert chaos.fault.zone_cut.shape == (3, 3)
+    assert chaos.fault.inst_err_ema.shape == (4,)
+    assert chaos.fault.inst_eject_until.shape == (4,)
+
+
+def test_build_app_zone_defaults_and_validation():
+    g = linear_chain(1, mi=100.0)
+    app = build_app(g, n_hosts=3)          # default: one zone per host
+    np.testing.assert_array_equal(np.asarray(app.host_zone), [0, 1, 2])
+    app2 = build_app(g, host_zone=[0, 0, 1, 1])
+    assert int(app2.n_hosts) == 4
+    with pytest.raises(ValueError):
+        build_app(g, n_hosts=2, host_zone=[0, 0, 1])   # length mismatch
+    with pytest.raises(ValueError):
+        build_app(g, host_zone=[0, 5])                 # zone id out of range
+
+
+def test_registry_zones_spec_maps_hosts_to_domains():
+    from repro.core.registry import register
+    spec = {"services": [{"name": "a", "mi": 100}],
+            "apis": [{"name": "GET /x", "entry": "a"}],
+            "zones": [0, 0, 1, 1]}
+    caps = SimCaps(n_clients=4, max_requests=16, max_cloudlets=32,
+                   max_instances=4, n_vms=4, d_max=1)
+    sim = register(spec, caps=caps, params=SimParams(faults="chaos"))
+    np.testing.assert_array_equal(np.asarray(sim.app.host_zone),
+                                  [0, 0, 1, 1])
+
+
+def _zone_state(host_zone, **pover):
+    """Empty chaos-mode state over a zoned cluster (one host per list
+    entry), ready for direct disruption calls."""
+    g = linear_chain(1, mi=100.0)
+    app = build_app(g, host_zone=host_zone)
+    H = len(host_zone)
+    caps = SimCaps(n_clients=4, max_requests=8, max_cloudlets=16,
+                   max_instances=4, n_vms=H, d_max=1, max_replicas=1)
+    kw = dict(dt=0.1, n_ticks=1, faults="chaos",
+              host_mtbf_s=float("inf"), host_mttr_s=float("inf"),
+              inst_kill_rate=0.0)
+    kw.update(pover)
+    params = SimParams(**kw)
+    dyn = DynParams.from_params(params)
+    state = zeros_state(caps, params, jax.random.PRNGKey(0), app=app)
+    return state, app, caps, params, dyn
+
+
+def test_zone_fault_downs_the_whole_zone_atomically():
+    """One firing zone draw crashes every host of the zone in the same
+    tick while the other zone stays up (host MTBF is inf, so only the
+    zone draw can down anything).  Seed picked so zone 0's uniform falls
+    below p=0.5 and zone 1's above."""
+    import math
+    state, app, caps, params, dyn = _zone_state(
+        [0, 0, 1, 1], zone_fault_rate=math.log(2.0) / 0.1)  # p_tick = 0.5
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    out = disruption(state, app, caps, params, dyn, k1, k2, None)
+    np.testing.assert_array_equal(np.asarray(out.fault.host_up),
+                                  [0, 0, 1, 1])
+    assert int(out.fstats.zone_faults) == 1
+    assert int(out.fstats.host_crashes) == 2
+
+
+def test_partition_cuts_zone_pair_then_heals():
+    """A partition draw cuts the zone pair symmetrically (never the
+    diagonal); with the rate off and a tiny MTTR the next draw heals it."""
+    state, app, caps, params, dyn = _zone_state(
+        [0, 0, 1, 1], zone_partition_rate=1e9,
+        zone_partition_mttr_s=float("inf"))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    out = disruption(state, app, caps, params, dyn, k1, k2, None)
+    zc = np.asarray(out.fault.zone_cut)
+    assert zc[0, 1] == 1 and zc[1, 0] == 1
+    assert zc.diagonal().sum() == 0
+    assert zc.sum() == 2                       # exactly the one used pair
+    assert int(out.fstats.partitions) == 1
+    heal = dataclasses.replace(params, zone_partition_rate=0.0,
+                               zone_partition_mttr_s=1e-9)
+    out2 = disruption(out, app, caps, heal, DynParams.from_params(heal),
+                      k1, k2, None)
+    assert np.asarray(out2.fault.zone_cut).sum() == 0
+
+
+def test_partition_stalls_cross_zone_transfer_without_crashing():
+    """A cut zone pair zeroes the transfer's water-fill capacity: the
+    payload makes no progress but nothing crashes, and the same transfer
+    arrives normally once the pair heals."""
+    from repro.core import network as netmod
+    g = linear_chain(1, mi=100.0)
+    app = build_app(g, host_zone=[0, 0, 1, 1])
+    caps = SimCaps(n_clients=4, max_requests=8, max_cloudlets=8,
+                   max_instances=4, n_vms=4, d_max=1, max_replicas=1)
+    params = SimParams(dt=0.1, n_ticks=1, network="fabric", faults="chaos")
+    dyn = DynParams.from_params(params)
+    state = zeros_state(caps, params, jax.random.PRNGKey(0), app=app)
+    inst = state.instances._replace(
+        status=state.instances.status.at[0].set(INST_ON),
+        service=state.instances.service.at[0].set(0),
+        vm=state.instances.vm.at[0].set(2),
+        host=state.instances.host.at[0].set(2),      # zone 1
+        mips=state.instances.mips.at[0].set(1000.0))
+    first = jnp.arange(caps.max_cloudlets) == 0
+    from repro.core.types import CL_TRANSIT
+    cl = state.cloudlets.with_cols(
+        status=jnp.where(first, CL_TRANSIT, CL_FREE),
+        inst=jnp.where(first, 0, -1),
+        req=jnp.where(first, 0, -1),
+        service=0, depth=0, attempt=0, edge=0, src_inst=-1,
+        src_host=jnp.where(first, 0, -1),            # zone 0 → cross-zone
+        length=100.0, rem=100.0, arrival=0.0, start=-1.0,
+        rem_bytes=jnp.where(first, 1.0, 0.0))
+    cut = state.fault.zone_cut.at[0, 1].set(1).at[1, 0].set(1)
+    st = state._replace(instances=inst, cloudlets=cl,
+                        fault=state.fault._replace(zone_cut=cut))
+    out = netmod.transit(st, caps, params, dyn, app)
+    assert int(np.asarray(out.cloudlets.status)[0]) == CL_TRANSIT
+    assert float(np.asarray(out.cloudlets.rem_bytes)[0]) == 1.0
+    healed = st._replace(fault=st.fault._replace(
+        zone_cut=jnp.zeros_like(cut)))
+    out2 = netmod.transit(healed, caps, params, dyn, app)
+    assert int(np.asarray(out2.cloudlets.status)[0]) == CL_WAITING
+    assert float(np.asarray(out2.cloudlets.rem_bytes)[0]) == 0.0
+
+
+def test_fail_slow_host_degrades_only_execution_rate():
+    """A host in a fail-slow episode runs its instances' cloudlets at
+    host_slow_factor × MIPS; a healthy twin state finishes the same work
+    proportionally faster (allocation/util untouched — only the rate)."""
+    from repro.core.scheduler import execute
+    g = linear_chain(1, mi=100.0)
+    app = build_app(g, n_hosts=2)
+    caps = SimCaps(n_clients=4, max_requests=8, max_cloudlets=8,
+                   max_instances=4, n_vms=2, d_max=1, max_replicas=1)
+    params = SimParams(dt=0.1, n_ticks=1, faults="chaos",
+                       host_slow_factor=0.25)
+    dyn = DynParams.from_params(params)
+    state = zeros_state(caps, params, jax.random.PRNGKey(0), app=app)
+    inst = state.instances._replace(
+        status=state.instances.status.at[0].set(INST_ON),
+        service=state.instances.service.at[0].set(0),
+        vm=state.instances.vm.at[0].set(0),
+        host=state.instances.host.at[0].set(0),
+        mips=state.instances.mips.at[0].set(1000.0),
+        n_exec=state.instances.n_exec.at[0].set(1))
+    first = jnp.arange(caps.max_cloudlets) == 0
+    cl = state.cloudlets.with_cols(
+        status=jnp.where(first, CL_EXEC, CL_FREE),
+        inst=jnp.where(first, 0, -1), req=jnp.where(first, 0, -1),
+        service=0, depth=0, attempt=0, edge=0, src_inst=-1, src_host=-1,
+        length=1000.0, rem=1000.0, arrival=0.0, start=0.0, rem_bytes=0.0)
+    healthy = state._replace(instances=inst, cloudlets=cl)
+    slowed = healthy._replace(fault=healthy.fault._replace(
+        host_slow=healthy.fault.host_slow.at[0].set(1)))
+    rem_h = float(np.asarray(
+        execute(healthy, app, caps, params, dyn)[0].cloudlets.rem)[0])
+    rem_s = float(np.asarray(
+        execute(slowed, app, caps, params, dyn)[0].cloudlets.rem)[0])
+    # healthy burns 1000 MIPS × dt = 100 MI; slowed burns a quarter of it
+    assert rem_h == pytest.approx(900.0)
+    assert rem_s == pytest.approx(975.0)
+
+
+def _eject_state(**pover):
+    """Two ON replicas of one service; every pooled cloudlet is EXEC on
+    replica 0 and past its timeout, so replica 0 is the outlier."""
+    C = 8
+    g = linear_chain(1, mi=100.0)
+    app = build_app(g, n_hosts=2)
+    caps = SimCaps(n_clients=4, max_requests=8, max_cloudlets=C,
+                   max_instances=4, n_vms=2, d_max=1, max_replicas=2)
+    kw = dict(dt=0.1, n_ticks=1, faults="chaos", retry_budget=0,
+              host_mtbf_s=float("inf"), host_mttr_s=float("inf"),
+              inst_kill_rate=0.0, retry_timeout_s=1.0,
+              cb_alpha=0.9, eject_err_thresh=0.3, eject_cooldown_s=5.0)
+    kw.update(pover)
+    params = SimParams(**kw)
+    dyn = DynParams.from_params(params)
+    state = zeros_state(caps, params, jax.random.PRNGKey(0), app=app)
+    inst = state.instances._replace(
+        status=state.instances.status.at[:2].set(INST_ON),
+        service=state.instances.service.at[:2].set(0),
+        vm=state.instances.vm.at[:2].set(jnp.asarray([0, 1], i32)),
+        host=state.instances.host.at[:2].set(jnp.asarray([0, 1], i32)),
+        mips=state.instances.mips.at[:2].set(1000.0),
+        n_exec=state.instances.n_exec.at[0].set(C))
+    sched = state.sched._replace(
+        inst_of_rank=state.sched.inst_of_rank.at[0, :2].set(
+            jnp.asarray([0, 1], i32)),
+        svc_replicas=state.sched.svc_replicas.at[0].set(2))
+    cl = state.cloudlets.with_cols(
+        status=CL_EXEC, req=jnp.arange(C, dtype=i32), service=0, inst=0,
+        wait_ticks=0, depth=0, src_host=-1, attempt=0, edge=0, src_inst=-1,
+        length=100.0, rem=50.0, arrival=0.0, start=0.0, rem_bytes=0.0)
+    req = state.requests._replace(
+        count=jnp.asarray(C, i32),
+        outstanding=state.requests.outstanding.at[:C].set(1),
+        spawned=state.requests.spawned.at[:C].set(1))
+    state = state._replace(instances=inst, sched=sched, cloudlets=cl,
+                           requests=req, time=jnp.asarray(10.0, f32))
+    return state, app, caps, params, dyn
+
+
+def test_outlier_ejection_and_readmission_round_trip():
+    """Replica 0 times out a full wave → its error EMA trips the ejector;
+    the dispatch view compacts it out while replica 1 keeps serving.
+    After the cooldown a clean probe re-admits it with reset EMAs."""
+    from repro.core import policies
+    state, app, caps, params, dyn = _eject_state()
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    out = disruption(state, app, caps, params, dyn, k1, k2, None)
+    t = float(out.time)
+    ej = np.asarray(out.fault.inst_eject_until)
+    assert ej[0] > t                      # sick replica ejected
+    assert ej[1] == 0.0                   # healthy replica untouched
+    assert int(out.fstats.ejections) == 1
+    assert int(np.asarray(out.instances.status)[0]) == INST_ON  # not DOWN
+    # the LB view routes around it without shrinking the rank table
+    iof_eff, n_ok = policies.eject_view(out.sched,
+                                        out.fault.inst_eject_until, out.time)
+    assert np.asarray(iof_eff)[0, :2].tolist() == [1, -1]
+    assert int(n_ok[0]) == 1
+    # half-open probe after the cooldown: clean traffic re-admits it
+    st2 = out._replace(fault=out.fault._replace(
+        inst_eject_until=out.fault.inst_eject_until.at[0].set(5.0),
+        inst_succ=out.fault.inst_succ.at[0].set(3)))
+    out2 = disruption(st2, app, caps, params, dyn, k1, k2, None)
+    assert float(np.asarray(out2.fault.inst_eject_until)[0]) == 0.0
+    assert int(out2.fstats.readmissions) == 1
+    assert float(np.asarray(out2.fault.inst_err_ema)[0]) == 0.0
+    iof_eff2, n_ok2 = policies.eject_view(
+        out2.sched, out2.fault.inst_eject_until, out2.time)
+    np.testing.assert_array_equal(np.asarray(iof_eff2)[0, :2], [0, 1])
+    assert int(n_ok2[0]) == 2
+
+
+def test_ejection_spares_the_last_admissible_replica():
+    """Single-replica service: the outlier wants out but the last-replica
+    guard refuses — ejecting it would leave nothing to route to (that is
+    the edge breaker's job, not the LB's)."""
+    state, app, caps, params, dyn = _eject_state()
+    from repro.core.types import INST_FREE
+    inst = state.instances._replace(
+        status=state.instances.status.at[1].set(INST_FREE))
+    sched = state.sched._replace(
+        inst_of_rank=state.sched.inst_of_rank.at[0, 1].set(-1),
+        svc_replicas=state.sched.svc_replicas.at[0].set(1))
+    state = state._replace(instances=inst, sched=sched)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    out = disruption(state, app, caps, params, dyn, k1, k2, None)
+    assert float(np.asarray(out.fault.inst_eject_until)[0]) == 0.0
+    assert int(out.fstats.ejections) == 0
+
+
+def test_eject_view_identity_when_nothing_ejected():
+    from repro.core import policies
+    state, app, caps, params, dyn = _eject_state()
+    iof_eff, n_ok = policies.eject_view(
+        state.sched, state.fault.inst_eject_until, state.time)
+    np.testing.assert_array_equal(np.asarray(iof_eff),
+                                  np.asarray(state.sched.inst_of_rank))
+    np.testing.assert_array_equal(np.asarray(n_ok),
+                                  np.asarray(state.sched.svc_replicas))
+
+
+def test_conservation_under_fail_slow_and_partition_chaos():
+    """Gray-failure campaign point vs a calm point, one compile via
+    run_batch (every gray knob travels in DynParams): the conservation
+    law holds through fail-slow episodes, zone-slow draws and partitions,
+    and the gray chaos visibly hurts the workload."""
+    caps = SimCaps(n_clients=16, max_requests=1024, max_cloudlets=512,
+                   max_instances=8, n_vms=4, d_max=2, max_replicas=2)
+    gray = SimParams(dt=0.05, n_ticks=600, n_clients=12, spawn_rate=5.0,
+                     wait_lo=0.5, wait_hi=1.5, seed=3, faults="chaos",
+                     network="fabric", host_mtbf_s=float("inf"),
+                     inst_kill_rate=0.0, retry_timeout_s=2.0,
+                     retry_budget=2, host_slow_mtbf_s=5.0,
+                     host_slow_mttr_s=2.0, host_slow_factor=0.2,
+                     zone_slow_rate=0.1, zone_partition_rate=0.2,
+                     zone_partition_mttr_s=1.0)
+    calm = dataclasses.replace(gray, host_slow_mtbf_s=float("inf"),
+                               zone_slow_rate=0.0, zone_partition_rate=0.0)
+    tmpl = InstanceTemplate(mips=8000.0, limit_mips=16000.0, replicas=2)
+    sim = Simulation(diamond(mi=400.0), caps=caps, params=gray,
+                     default_template=tmpl,
+                     vm_mips=np.full(4, 64000.0, np.float32),
+                     host_zone=np.asarray([0, 0, 1, 1], np.int32))
+    res_b = sim.run_batch([gray, calm])
+    it_g, it_c = batch_item(res_b, 0), batch_item(res_b, 1)
+    rep_g = summarize(sim, it_g, params=gray)
+    rep_c = summarize(sim, it_c, params=calm)
+    assert rep_g.slow_episodes > 0 and rep_g.slow_time_s > 0.0
+    assert rep_g.partitions > 0
+    assert rep_g.zone_faults > 0
+    assert rep_c.slow_episodes == 0 and rep_c.slow_time_s == 0.0
+    assert rep_c.partitions == 0 and rep_c.zone_faults == 0
+    # gray failure hurts: slower responses or failed attempts appear
+    assert (rep_g.avg_response_ms > rep_c.avg_response_ms
+            or int(it_g.state.fstats.failed_attempts)
+            > int(it_c.state.fstats.failed_attempts))
+    for st in (it_g.state, it_c.state):
+        spawned = int(st.counters.spawned)
+        finished = int(st.counters.finished)
+        in_flight = int((np.asarray(st.cloudlets.status) != CL_FREE).sum())
+        assert spawned == finished + in_flight \
+            + int(st.fstats.failed_attempts)
+        cl_inst = np.asarray(st.cloudlets.inst)
+        cl_st = np.asarray(st.cloudlets.status)
+        I = st.instances.status.shape[0]
+        expect = np.bincount(cl_inst[cl_st == CL_EXEC], minlength=I)[:I]
+        np.testing.assert_array_equal(expect,
+                                      np.asarray(st.instances.n_exec))
 
 
 def test_recovery_restores_availability():
