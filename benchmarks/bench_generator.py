@@ -61,7 +61,8 @@ def main():
         err_n, qps, exp_qps, err_qps, err_total, res = run_one(cfg)
         tag = (f"Nc={cfg['n_clients']}_v={cfg['spawn_rate']}"
                f"_p={cfg['p'][0]}-{cfg['p'][1]}")
-        emit(f"fig9/{tag}/eq1_max_client_err", f"{err_n:.0f}", "0 (exact ramp)")
+        emit(f"fig9/{tag}/eq1_max_client_err", f"{err_n:.0f}",
+             "0 (exact ramp)")
         emit(f"fig9/{tag}/eq3_qps", f"{qps:.2f}", f"{exp_qps:.2f}",
              f"rel_err={err_qps:.3f}")
         emit(f"fig9/{tag}/eq4_total_rel_err", f"{err_total:.4f}", "<0.1")

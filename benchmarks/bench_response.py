@@ -57,7 +57,8 @@ def calibrate(max_iter=8):
     lat = max((sockshop.TESTBED_MS[100] - r100) / 1000.0 / 1.5, 0.0)
     for _ in range(4):
         r = run_point(100, mi_scale=b1, net_latency_s=lat).avg_response_ms
-        if abs(r - sockshop.TESTBED_MS[100]) / sockshop.TESTBED_MS[100] < 0.015:
+        if (abs(r - sockshop.TESTBED_MS[100])
+                / sockshop.TESTBED_MS[100] < 0.015):
             break
         lat = max(lat + (sockshop.TESTBED_MS[100] - r) / 1000.0 / 1.5, 0.0)
     return dict(mi_scale=b1, net_latency_s=lat)

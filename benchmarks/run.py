@@ -135,7 +135,8 @@ def write_perf_json(path: str, cases, repeats: int = 2) -> None:
     # stays comparable across regenerations.
     if "case1b" in cases:
         bpt = {}
-        for mode_tag, kw in (("case1b", {}), ("case1b+net", dict(network=True)),
+        for mode_tag, kw in (("case1b", {}),
+                             ("case1b+net", dict(network=True)),
                              ("case1b+faults", dict(faults=True)),
                              ("case1b+chaos2", dict(chaos2=True))):
             bpt[mode_tag] = round(

@@ -13,10 +13,10 @@ import argparse
 
 import numpy as np
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
-                        build_graph, policies, report_text, summarize)
-from repro.launch.roofline import PEAK_FLOPS, HBM_BW, model_flops
+                        build_graph, policies, summarize)
+from repro.launch.roofline import PEAK_FLOPS, HBM_BW
 from repro.models import build_model
 from repro.models.common import n_params
 

@@ -13,7 +13,7 @@ import tempfile
 import yaml
 
 from repro.configs import sockshop
-from repro.core import report_text, summarize
+from repro.core import summarize
 
 tmp = pathlib.Path(tempfile.mkdtemp(prefix="sockshop_"))
 app_json = tmp / "app.json"

@@ -1,0 +1,37 @@
+"""simcheck — static analysis of the jitted tick program (DESIGN.md §8).
+
+Four analyzers, one CLI (``python -m repro.analysis``):
+
+* :mod:`.jaxpr_lint` — walks the ClosedJaxpr of the scan body for every
+  network×faults combo: f64 introduction, host callbacks / transfers in
+  the hot loop, non-donated carry.
+* :mod:`.layout_check` — replays one tick against a recording layout
+  proxy and diffs actual column read/write sets against
+  ``PHASE_COLUMNS``.
+* :mod:`.streams` — named RNG streams; reuse/collision audit + golden
+  topology digest.  (The only module the core imports — it must stay
+  free of ``repro.core`` imports.)
+* :mod:`.recompile` — jit cache-miss sentinel over a ``run_batch``
+  sweep and the golden matrix.
+
+``streams`` is imported eagerly (the engine needs it on every import);
+the checkers — which import ``repro.core`` back — load lazily so that
+``core → analysis.streams`` stays cycle-free.
+"""
+from . import streams  # noqa: F401  (eager: the core's wrapper target)
+
+_LAZY = {
+    "jaxpr_lint": ".jaxpr_lint",
+    "layout_check": ".layout_check",
+    "recompile": ".recompile",
+    "simcheck": ".simcheck",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(_LAZY[name], __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

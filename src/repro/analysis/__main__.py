@@ -1,0 +1,51 @@
+"""CLI: ``python -m repro.analysis [--only SECTION,...] [--waive RULE,...]``
+
+Exit code 0 = every static invariant holds; 1 = violations (printed one
+per line, prefixed by their section).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .simcheck import run_simcheck
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="simcheck: static analysis of the jitted tick "
+                    "program (DESIGN.md §8)")
+    ap.add_argument("--only", default=None,
+                    help="comma list of sections to run "
+                         "(lint,layout,streams,recompile); default all")
+    ap.add_argument("--waive", default=None,
+                    help="comma list of jaxpr-lint rule ids to waive "
+                         "(f64,callback,transfer,donation)")
+    ap.add_argument("--sweep-points", type=int, default=8,
+                    help="run_batch sweep width for the recompile "
+                         "sentinel (default 8)")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    waive = set(args.waive.split(",")) if args.waive else None
+    report = run_simcheck(only=only, waive=waive,
+                          sweep_points=args.sweep_points)
+
+    for sec, probs in report.sections.items():
+        status = "clean" if not probs else f"{len(probs)} violation(s)"
+        print(f"[simcheck] {sec}: {status}")
+    for combo, digest in report.stream_digests.items():
+        print(f"[simcheck]   stream topology {combo}: {digest}")
+    if report.sentinel is not None:
+        print(f"[simcheck]   compiles: warm="
+              f"{report.sentinel.warm_compiles} "
+              f"counting={report.sentinel.counting_compiles}")
+    for p in report.problems:
+        print(f"VIOLATION {p}")
+    print(f"[simcheck] {'OK' if report.ok else 'FAILED'}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,229 @@
+"""Layout-access checker — PHASE_COLUMNS vs what the tick actually touches.
+
+The mode-keyed pool layout (PR 4) is only as honest as its registry:
+``PHASE_COLUMNS`` *declares* which columns each tick phase reads/writes,
+and ``resolve_layout`` shrinks the stacked pool to the union of the
+declared sets.  Nothing enforced the declarations — a phase could read a
+column another phase happened to pull into the layout (attribution
+drift, invisible until a mode stops carrying it), or keep claiming a
+column it no longer touches (pool bytes nobody uses).
+
+This checker replays ONE tick eagerly on a tiny diamond-graph sim with
+
+* a **recording layout proxy** in place of the ``PoolLayout`` carried by
+  ``Cloudlets`` — every ``layout.i(name)`` / ``layout.f(name)`` lookup
+  (the single funnel all named reads AND ``with_cols`` writes go
+  through) is logged, and ``i_fields``/``f_fields`` block reads (only
+  ``pool.scatter_pool`` touches those) are logged as whole-row *spawn*
+  writes;
+* the engine's ``probe`` hook attributing each access to the phase
+  being traced.
+
+Rules (per mode combo, then unioned where noted):
+
+* **undeclared-access** — a *named* access in a registry phase to a
+  column outside that phase's declared set fails.  Spawn writes are
+  exempt: a spawn initializes whole rows by design, mode-agnostically.
+* **declared-but-never-touched** — a declared column no combo ever
+  touches (named or spawn) in that phase fails; evaluated on the union
+  across all combos because several declarations are mode-conditional
+  (Dispatch reads ``arrival`` only on the uniform path, ``inst``
+  pre-addressing only on the fabric path).
+* **non-registry phases** (Response/Scaling/Trace) must stay inside the
+  always-on core columns — they run in every mode, so touching a
+  mode-keyed column would crash some layouts.
+* **spawns** may only occur in the three phases that respawn rows
+  (Generation, Derive, Disruption).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Set, Tuple
+
+from repro.core import SimCaps, SimParams, Simulation, diamond
+from repro.core.engine import make_tick
+from repro.core.types import (DynParams, PHASE_COLUMNS, Cloudlets,
+                              resolve_layout)
+
+# (network, faults, egress_shaping) combos replayed.  The four golden
+# combos plus the egress-shaping variant (the only consumer of the
+# Transit/egress_shaping sub-entry).
+COMBOS: Tuple[Tuple[str, str, bool], ...] = (
+    ("uniform", "none", False),
+    ("uniform", "chaos", False),
+    ("fabric", "none", False),
+    ("fabric", "chaos", False),
+    ("fabric", "chaos", True),
+)
+
+# Registry sub-entries ("Phase/feature") activate with these flags.
+_FEATURE_ON = {
+    "chaos": lambda net, fl, eg: fl == "chaos",
+    "fabric": lambda net, fl, eg: net == "fabric",
+    "egress_shaping": lambda net, fl, eg: eg,
+}
+
+_SPAWN_PHASES = ("Generation", "Derive", "Disruption")
+
+
+class RecordingLayout:
+    """Duck-typed ``PoolLayout`` stand-in that logs column accesses.
+
+    Delegates every real lookup to the wrapped layout, so the replayed
+    tick computes exactly what it would with the genuine layout;
+    ``__contains__``/``columns`` stay unrecorded (a skip decision or a
+    validation sweep is not an access).
+    """
+
+    def __init__(self, inner, log: "AccessLog"):
+        # object.__setattr__ not needed — plain class, but the attribute
+        # names must not collide with the recorded properties below.
+        self._inner = inner
+        self._log = log
+
+    def i(self, name: str) -> int:
+        self._log.touch(name, "named")
+        return self._inner.i(name)
+
+    def f(self, name: str) -> int:
+        self._log.touch(name, "named")
+        return self._inner.f(name)
+
+    @property
+    def i_fields(self):
+        for n in self._inner.i_fields:
+            self._log.touch(n, "spawn")
+        return self._inner.i_fields
+
+    @property
+    def f_fields(self):
+        for n in self._inner.f_fields:
+            self._log.touch(n, "spawn")
+        return self._inner.f_fields
+
+    @property
+    def columns(self):
+        return self._inner.columns
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._inner
+
+    def init_ints(self):
+        return self._inner.init_ints()
+
+    def init_flts(self):
+        return self._inner.init_flts()
+
+
+@dataclasses.dataclass
+class AccessLog:
+    """phase → {(column, kind)} with the engine-probe phase cursor."""
+
+    phase: str = "<init>"
+    accesses: Dict[str, Set[Tuple[str, str]]] = \
+        dataclasses.field(default_factory=dict)
+
+    def probe(self, phase: str) -> None:
+        self.phase = phase
+
+    def touch(self, column: str, kind: str) -> None:
+        self.accesses.setdefault(self.phase, set()).add((column, kind))
+
+
+def _tiny_sim(network: str, faults: str, egress: bool) -> Simulation:
+    caps = SimCaps(n_clients=8, max_requests=128, max_cloudlets=128,
+                   max_instances=8, n_vms=2, d_max=2, max_replicas=2)
+    params = SimParams(dt=0.05, n_ticks=4, n_clients=6, spawn_rate=10.0,
+                       wait_lo=0.1, wait_hi=0.3, seed=7,
+                       scaling_policy=1,  # exercise the Scaling phase too
+                       network=network, faults=faults,
+                       egress_shaping=egress)
+    return Simulation(diamond(mi=200.0), caps=caps, params=params)
+
+
+def replay_accesses(network: str, faults: str, egress: bool
+                    ) -> Dict[str, Set[Tuple[str, str]]]:
+    """Actual per-phase column accesses of one eagerly-executed tick."""
+    sim = _tiny_sim(network, faults, egress)
+    log = AccessLog()
+    tick = make_tick(sim.caps, sim.params, sim._has_edges, probe=log.probe)
+    state = sim.init_state()
+    cl = state.cloudlets
+    state = state._replace(cloudlets=Cloudlets(
+        cl.ints, cl.flts, RecordingLayout(cl.layout, log)))
+    dyn = DynParams.from_params(sim.params)
+    # Eager execution: lax.cond still traces both scaling branches, so
+    # the Scaling phase records even on a tick where it is not due.
+    tick(state, dyn, sim.app)
+    return log.accesses
+
+
+def declared_for(registry: dict, phase: str, network: str, faults: str,
+                 egress: bool) -> Set[str]:
+    """Declared column set of a registry phase under one mode combo
+    (base entry + active ``Phase/feature`` sub-entries)."""
+    cols = set(registry[phase])
+    for key, sub in registry.items():
+        if "/" not in key:
+            continue
+        base, feature = key.split("/", 1)
+        if base == phase and _FEATURE_ON[feature](network, faults, egress):
+            cols |= set(sub)
+    return cols
+
+
+def check_layout_access(phase_columns: dict | None = None) -> List[str]:
+    """All layout-access violations across :data:`COMBOS` (empty = clean).
+
+    ``phase_columns`` overrides the registry *for the diff only* — the
+    seeded-violation self-tests pass a perturbed copy to prove each rule
+    fires; production runs use the real ``PHASE_COLUMNS``.
+    """
+    registry = PHASE_COLUMNS if phase_columns is None else phase_columns
+    base_phases = [p for p in registry if "/" not in p]
+    core = set(resolve_layout(SimParams()).columns)
+    problems: List[str] = []
+    # union of actual touches per phase across combos (unused-rule input)
+    touched: Dict[str, Set[str]] = {p: set() for p in base_phases}
+    declared_any: Dict[str, Set[str]] = {p: set() for p in base_phases}
+
+    for network, faults, egress in COMBOS:
+        combo = f"network={network} faults={faults}" \
+            + (" egress_shaping" if egress else "")
+        actual = replay_accesses(network, faults, egress)
+        for phase, accs in actual.items():
+            spawns = {c for c, kind in accs if kind == "spawn"}
+            named = {c for c, kind in accs if kind == "named"}
+            if spawns and phase not in _SPAWN_PHASES:
+                problems.append(
+                    f"[{combo}] phase {phase!r} performs whole-row spawn "
+                    f"writes — only {_SPAWN_PHASES} respawn rows")
+            if phase in base_phases:
+                decl = declared_for(registry, phase, network,
+                                    faults, egress)
+                declared_any[phase] |= decl
+                touched[phase] |= named | spawns
+                undeclared = named - decl
+                if undeclared:
+                    problems.append(
+                        f"[{combo}] phase {phase!r} accesses undeclared "
+                        f"column(s) {sorted(undeclared)} — declare them "
+                        f"in PHASE_COLUMNS[{phase!r}] (or a mode "
+                        "sub-entry) so the layout resolver knows")
+            else:
+                off_core = named - core
+                if off_core:
+                    problems.append(
+                        f"[{combo}] non-registry phase {phase!r} touches "
+                        f"mode-keyed column(s) {sorted(off_core)} — it "
+                        "runs in every mode, so these reads crash "
+                        "layouts that don't carry them")
+
+    for phase in base_phases:
+        unused = declared_any[phase] - touched[phase]
+        if unused:
+            problems.append(
+                f"phase {phase!r} declares column(s) {sorted(unused)} "
+                "that no mode combo ever touches — stale declaration "
+                "holding dead pool bytes")
+    return problems

@@ -1,0 +1,97 @@
+"""simcheck orchestrator — run every analyzer, one report, one exit code.
+
+``python -m repro.analysis`` drives this module: jaxpr lint + donation
+check per golden combo, the layout-access diff, the RNG-stream audit
+(with per-combo topology digests), and the recompile sentinel.  Each
+section returns a list of violation strings; the CLI exits non-zero if
+any survive.  See DESIGN.md §8 for the rule catalog and waiver policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+from repro.core.types import DynParams
+
+from . import jaxpr_lint, layout_check, recompile, streams
+
+GOLDEN_COMBOS = (("uniform", "none"), ("uniform", "chaos"),
+                 ("fabric", "none"), ("fabric", "chaos"))
+
+
+def record_tick_streams(network: str, faults: str) -> streams.StreamRecorder:
+    """Replay one eager tick with stream recording; the state's rng is
+    the registered root, so every wrapped derivation resolves a path."""
+    sim = layout_check._tiny_sim(network, faults, False)
+    state = sim.init_state()
+    dyn = DynParams.from_params(sim.params)
+    with streams.recording() as rec:
+        rec.register(state.rng, "tick")
+        sim._tick(state, dyn, sim.app)
+    return rec
+
+
+def check_streams() -> Dict[str, object]:
+    """Audit all four combos; returns {'problems': [...], 'digests': {...}}."""
+    problems: List[str] = []
+    digests: Dict[str, str] = {}
+    for net, fl in GOLDEN_COMBOS:
+        rec = record_tick_streams(net, fl)
+        combo = f"{net}+{fl}"
+        digests[combo] = streams.topology_digest(rec)
+        for p in streams.audit_events(rec):
+            problems.append(f"[{combo}] {p}")
+        if not rec.events:
+            problems.append(
+                f"[{combo}] no stream derivations recorded — the engine "
+                "bypassed analysis.streams entirely")
+    return {"problems": problems, "digests": digests}
+
+
+@dataclasses.dataclass
+class SimcheckReport:
+    sections: Dict[str, List[str]]
+    stream_digests: Dict[str, str]
+    sentinel: Optional[recompile.SentinelReport]
+
+    @property
+    def problems(self) -> List[str]:
+        return [f"{sec}: {p}" for sec, ps in self.sections.items()
+                for p in ps]
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+
+def run_simcheck(only: Optional[Set[str]] = None,
+                 waive: Optional[Set[str]] = None,
+                 sweep_points: int = 8) -> SimcheckReport:
+    """Run the requested analyzer sections (default: all).
+
+    ``only`` limits to a subset of {'lint', 'layout', 'streams',
+    'recompile'}; ``waive`` forwards jaxpr-lint rule waivers.
+    """
+    run = lambda name: only is None or name in only
+    sections: Dict[str, List[str]] = {}
+    digests: Dict[str, str] = {}
+    sentinel = None
+
+    if run("lint"):
+        lint: List[str] = []
+        for net, fl in GOLDEN_COMBOS:
+            for p in jaxpr_lint.lint_combo(net, fl, waive=waive):
+                lint.append(f"[{net}+{fl}] {p}")
+        sections["lint"] = lint
+    if run("layout"):
+        sections["layout"] = layout_check.check_layout_access()
+    if run("streams"):
+        res = check_streams()
+        sections["streams"] = res["problems"]
+        digests = res["digests"]
+    if run("recompile"):
+        sentinel = recompile.run_sentinel(n_points=sweep_points)
+        sections["recompile"] = sentinel.problems
+
+    return SimcheckReport(sections=sections, stream_digests=digests,
+                          sentinel=sentinel)

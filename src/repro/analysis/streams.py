@@ -1,0 +1,224 @@
+"""Named RNG streams — auditable `split`/`fold_in` wrappers (simcheck).
+
+The engine's RNG-stream topology is a correctness contract: every tick
+phase consumes keys derived from ``state.rng`` along a fixed tree, and
+`jax.random.split` is NOT prefix-stable — widening a split or reordering
+a ``fold_in`` silently perturbs every downstream stream and breaks the
+pinned golden digests (the hazard documented at the gray-failure fork in
+``core/faults.py``).  Until this module, that discipline lived in
+comments.
+
+``split`` and ``fold_in`` here are drop-in wrappers over ``jax.random``:
+outside an audit they ARE the underlying calls (one ``is None`` check at
+trace time, nothing in the compiled program).  Inside a
+:func:`recording` context every derivation is logged as a
+:class:`StreamEvent` carrying the *named path* of the parent key and its
+children, so the auditor can
+
+* rebuild the stream-derivation tree of one traced tick,
+* detect key reuse (two identical derivations off one parent — their
+  children collide bit-for-bit) and path collisions (two streams bound
+  to the same name),
+* pin the whole topology under a golden digest
+  (:func:`topology_digest`) so any reordering/widening fails a test
+  instead of corrupting seeded experiments silently.
+
+Call-site contract: every ``jax.random.split`` / ``fold_in`` on the tick
+path (``core/engine.py``, ``core/faults.py``, ``core/generator.py``,
+``core/scheduler.py``) goes through this module with a ``names=`` /
+``name=`` label.  Leaf keys are consumed directly by samplers
+(``normal``/``uniform``/...), which need no wrapping — reuse is only
+ever *created* at a derivation site.  This module must not import
+``repro.core`` (the cores import it).
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+# The active recorder (trace-time only; never touched by compiled code).
+_RECORDER: Optional["StreamRecorder"] = None
+
+
+@dataclass
+class StreamEvent:
+    """One derivation: ``parent --op(arg)--> children``."""
+
+    parent: str               # named path of the parent key
+    op: str                   # "split" | "fold_in"
+    arg: object               # split width / fold_in data
+    children: Tuple[str, ...]  # named paths of the derived keys
+
+
+@dataclass
+class StreamRecorder:
+    """Trace-time log of every named derivation plus the key→path map.
+
+    Key identity is Python object identity: the recorder pins every key
+    object it has named (``_keepalive``) so a recycled ``id()`` can never
+    misattribute a stream within one audit.
+    """
+
+    events: List[StreamEvent] = field(default_factory=list)
+    unnamed: List[str] = field(default_factory=list)
+    _paths: dict = field(default_factory=dict)      # id(key) -> path
+    _keepalive: list = field(default_factory=list)
+
+    def register(self, key, path: str) -> None:
+        self._paths[id(key)] = path
+        self._keepalive.append(key)
+
+    def path_of(self, key) -> Optional[str]:
+        return self._paths.get(id(key))
+
+    def _parent_path(self, key, op: str, arg) -> str:
+        path = self.path_of(key)
+        if path is None:
+            path = f"<unnamed#{len(self.unnamed)}>"
+            self.unnamed.append(f"{op}({arg!r}) off an unregistered key — "
+                                "wrap the site that derived it")
+        return path
+
+
+class _NamedKeys:
+    """Recording view of a stacked ``jax.random.split`` result.
+
+    Indexing (including negative indices, slices, unpacking) returns the
+    underlying key rows while binding each accessed child to its declared
+    name, so call sites keep the exact ``keys[i]`` shape of the raw API.
+    """
+
+    __slots__ = ("_keys", "_names", "_rec", "_parent")
+
+    def __init__(self, keys, names: Tuple[str, ...], rec: StreamRecorder,
+                 parent: str):
+        self._keys = keys
+        self._names = names
+        self._rec = rec
+        self._parent = parent
+
+    def __len__(self) -> int:
+        return len(self._names)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(len(self._names))[i]]
+        k = self._keys[i]
+        self._rec.register(k, f"{self._parent}/{self._names[i]}")
+        return k
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self._names)))
+
+
+def split(key, num: int = 2, *, names: Sequence[str]):
+    """`jax.random.split` with named children.
+
+    ``names`` must have exactly ``num`` entries.  Returns the raw split
+    result outside an audit; inside one, a :class:`_NamedKeys` view that
+    binds children to ``<parent>/<name>`` as they are indexed.
+    """
+    names = tuple(names)
+    if len(names) != num:
+        raise ValueError(
+            f"split(num={num}) needs exactly {num} names, got {names!r}")
+    if len(set(names)) != len(names):
+        raise ValueError(f"split names must be unique, got {names!r}")
+    keys = jax.random.split(key, num)
+    rec = _RECORDER
+    if rec is None:
+        return keys
+    parent = rec._parent_path(key, "split", num)
+    rec.events.append(StreamEvent(parent, "split", num,
+                                  tuple(f"{parent}/{n}" for n in names)))
+    return _NamedKeys(keys, names, rec, parent)
+
+
+def fold_in(key, data, *, name: str):
+    """`jax.random.fold_in` with a named child stream."""
+    child = jax.random.fold_in(key, data)
+    rec = _RECORDER
+    if rec is None:
+        return child
+    parent = rec._parent_path(key, "fold_in", data)
+    path = f"{parent}/{name}"
+    rec.events.append(StreamEvent(parent, "fold_in", data, (path,)))
+    rec.register(child, path)
+    return child
+
+
+@contextlib.contextmanager
+def recording():
+    """Audit context: every named derivation inside is logged.
+
+    Not reentrant (the engine has exactly one audit driver); the recorder
+    is detached even on error so a failed audit can't leak trace-time
+    overhead into later runs.
+    """
+    global _RECORDER
+    if _RECORDER is not None:
+        raise RuntimeError("stream recording is already active")
+    rec = StreamRecorder()
+    _RECORDER = rec
+    try:
+        yield rec
+    finally:
+        _RECORDER = None
+
+
+# ---------------------------------------------------------------------------
+# Auditing: reuse/collision detection + the golden topology digest
+# ---------------------------------------------------------------------------
+
+def audit_events(rec: StreamRecorder) -> List[str]:
+    """Stream-topology violations in one recorded trace.
+
+    * **key reuse** — two derivations with identical (parent, op, arg):
+      their children are bit-identical keys feeding different consumers;
+    * **path collision** — two distinct streams bound to one name (the
+      digest could not tell them apart);
+    * **unnamed derivation** — a `split`/`fold_in` reached through a key
+      no named site produced (an unwrapped call site upstream).
+    """
+    problems: List[str] = []
+    seen_derivations: dict = {}
+    seen_paths: dict = {}
+    for i, ev in enumerate(rec.events):
+        sig = (ev.parent, ev.op, repr(ev.arg))
+        if sig in seen_derivations:
+            problems.append(
+                f"key reuse: {ev.op}({ev.arg!r}) applied to "
+                f"{ev.parent!r} twice (events "
+                f"{seen_derivations[sig]} and {i}) — the derived keys "
+                "collide bit-for-bit")
+        else:
+            seen_derivations[sig] = i
+        for child in ev.children:
+            if child in seen_paths:
+                problems.append(
+                    f"stream path collision: {child!r} produced by events "
+                    f"{seen_paths[child]} and {i}")
+            else:
+                seen_paths[child] = i
+    for msg in rec.unnamed:
+        problems.append(f"unnamed stream: {msg}")
+    return problems
+
+
+def topology_lines(rec: StreamRecorder) -> List[str]:
+    """Canonical one-line-per-derivation serialization, in call order —
+    call order IS part of the contract (split widths and fold_in
+    positions are what prefix-instability is sensitive to)."""
+    return [f"{ev.parent} --{ev.op}({ev.arg!r})--> [" +
+            ", ".join(n.rsplit("/", 1)[-1] for n in ev.children) + "]"
+            for ev in rec.events]
+
+
+def topology_digest(rec: StreamRecorder) -> str:
+    """Golden digest of the stream-derivation tree (16 hex chars)."""
+    blob = "\n".join(topology_lines(rec)).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]

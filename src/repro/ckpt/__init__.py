@@ -1,2 +1,3 @@
-from .checkpoint import CheckpointManager, load_checkpoint, save_checkpoint  # noqa: F401
+from .checkpoint import (CheckpointManager,  # noqa: F401
+                         load_checkpoint, save_checkpoint)  # noqa: F401
 from .elastic import reshard_tree  # noqa: F401

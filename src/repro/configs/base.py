@@ -1,4 +1,4 @@
-"""Architecture configuration schema + the shape grid assigned to every arch."""
+"""Architecture config schema + the shape grid assigned to every arch."""
 from __future__ import annotations
 
 import dataclasses
@@ -24,7 +24,7 @@ class ArchConfig:
     mrope_sections: Optional[Tuple[int, int, int]] = None
     moe: Optional[MoECfg] = None
     mamba: Optional[MambaDims] = None
-    attn_period: int = 0         # hybrid: layers per period (1 attn + rest mamba)
+    attn_period: int = 0     # hybrid: layers per period (1 attn + rest mamba)
     ssd_chunk: int = 128
     n_enc_layers: int = 0        # enc-dec only
     n_frames: int = 0            # audio/vision stub frontend length

@@ -131,6 +131,8 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
              max_replicas: int = 4, spawn_rate: float | None = None,
              placement_policy: int | None = None, replicas: int = 1,
              host_zone: np.ndarray | None = None,
+             vm_mips: np.ndarray | None = None,
+             host_cpu_scale: np.ndarray | None = None,
              **param_overrides) -> Simulation:
     """Build the paper's §6.3 experiment: Locust wait U[5,15] s, 600 s.
 
@@ -171,14 +173,23 @@ def make_sim(n_clients: int = 100, duration_s: float = 600.0,
         **param_overrides,
     )
     # 3 master + 7 workers; capacities follow the paper's node list
-    # (32..104 cores), 1 core ≡ 1000 milicores ≡ 1000 MIPS.
-    vm_mips = np.array([32, 32, 32, 32, 32, 32, 32, 56, 104, 64],
-                       np.float32) * 1000.0
+    # (32..104 cores), 1 core ≡ 1000 milicores ≡ 1000 MIPS.  ``vm_mips``
+    # overrides the node capacities (heterogeneous-hardware studies, e.g.
+    # examples/hetero_study.py) while keeping the 10-node shape.
+    if vm_mips is None:
+        vm_mips = np.array([32, 32, 32, 32, 32, 32, 32, 56, 104, 64],
+                           np.float32) * 1000.0
+    vm_mips = np.asarray(vm_mips, np.float32)
+    if vm_mips.shape != (10,):
+        raise ValueError("sockshop runs on the paper's 10-node cluster; "
+                         f"vm_mips must have 10 entries, got "
+                         f"{vm_mips.shape}")
     vm_ram = np.array([64, 64, 64, 64, 64, 64, 64, 128, 256, 64],
                       np.float32) * 1024.0
     return register(app_spec(mi_scale), instance_spec(share, replicas),
                     caps=caps, params=params, vm_mips=vm_mips, vm_ram=vm_ram,
-                    placement_policy=placement_policy, host_zone=host_zone)
+                    placement_policy=placement_policy, host_zone=host_zone,
+                    host_cpu_scale=host_cpu_scale)
 
 
 # Paper Fig 10 testbed reference (ms).  Only the 100/300-client values are

@@ -11,13 +11,15 @@ Public API:
 from . import policies  # noqa: F401
 from .app import AppStatic, InstanceTemplate, build_app  # noqa: F401
 from .critical_path import (critical_path, path_delay,  # noqa: F401
-                            response_times, response_times_batched)
+                            response_times,  # noqa: F401
+                            response_times_batched)  # noqa: F401
 from .engine import (SimResult, Simulation, batch_item,  # noqa: F401
-                     make_tick, stack_dyn)
+                     make_tick, stack_dyn)  # noqa: F401
 from .generator import (n_clients_analytic, qps_analytic,  # noqa: F401
-                        total_requests_analytic)
-from .graph import ServiceGraph, build_graph, diamond, linear_chain, star  # noqa: F401
+                        total_requests_analytic)  # noqa: F401
+from .graph import (ServiceGraph, build_graph, diamond,  # noqa: F401
+                    linear_chain, star)  # noqa: F401
 from .qos import QoSReport, node_delays, report_text, summarize  # noqa: F401
 from .registry import register  # noqa: F401
 from .types import (DynParams, PoolLayout, SimCaps, SimParams,  # noqa: F401
-                    SimState, resolve_layout)
+                    SimState, resolve_layout)  # noqa: F401

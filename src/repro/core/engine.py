@@ -9,13 +9,13 @@ from __future__ import annotations
 
 import dataclasses
 import time as _time
-from functools import partial
 from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import streams
 from . import faults as faultsmod
 from . import network as netmod
 from . import policies
@@ -30,7 +30,8 @@ from .types import (CL_EXEC, CL_TRANSIT, CL_WAITING, DynParams, INST_ON,
 
 
 def make_tick(caps: SimCaps, params: SimParams,
-              has_edges: bool = True, scaling: str = "cond") -> Callable:
+              has_edges: bool = True, scaling: str = "cond",
+              probe: Optional[Callable[[str], None]] = None) -> Callable:
     """Build the jit-able tick function (paper event cycle, vectorized).
 
     ``params`` supplies the *static* knobs (policy selectors — they choose
@@ -54,6 +55,12 @@ def make_tick(caps: SimCaps, params: SimParams,
     program; ``"chaos"`` inserts the Disruption phase (core/faults.py)
     between Generation and Transit — host crash/recovery, instance kills,
     NIC degradation, retries and circuit breakers (DESIGN.md §7).
+
+    ``probe`` is a trace-time hook for simcheck's layout-access checker
+    (repro/analysis): called with each phase name just before that
+    phase's ops trace, it lets the checker attribute recorded column
+    accesses to `PHASE_COLUMNS` entries.  ``None`` (the default) adds
+    nothing to the traced program.
     """
     if params.network not in ("uniform", "fabric"):
         raise ValueError(
@@ -66,19 +73,27 @@ def make_tick(caps: SimCaps, params: SimParams,
     network = params.network == "fabric"
     faults_on = params.faults == "chaos"
 
+    # Stream names for the tick's single wide split; positions are the
+    # contract (split is NOT prefix-stable), names are the audit labels.
+    key_names = ("carry", "gen", "spawn", "lb", "derive") \
+        + (("net_gen", "net_derive") if network else ()) \
+        + (("faults", "retry_len", "retry_net") if faults_on else ())
+
     def tick(state: SimState, dyn: DynParams, app: AppStatic
              ) -> Tuple[SimState, TickTrace]:
         # rng split counts are mode-static; the first five (seven with the
         # fabric) match the fault-free program exactly, so faults="none"
         # stays bit-identical to the pre-faults engine.
         n_keys = (7 if network else 5) + (3 if faults_on else 0)
-        keys = jax.random.split(state.rng, n_keys)
+        keys = streams.split(state.rng, n_keys, names=key_names)
         rng, k_gen, k_gen2, k_lb, k_der = (keys[0], keys[1], keys[2],
                                            keys[3], keys[4])
         k_net_g, k_net_d = (keys[5], keys[6]) if network else (None, None)
         state = state._replace(rng=rng)
 
         # --- Generation (paper Alg 1) ---------------------------------
+        if probe:
+            probe("Generation")
         gen = client_phase(state.clients.wait, state.time,
                            state.requests.count, app.api_cdf, dyn, k_gen)
         state, gen_res = scheduler.gen_spawn(
@@ -87,30 +102,44 @@ def make_tick(caps: SimCaps, params: SimParams,
 
         # --- Disruption (chaos mode: faults, retries, breakers) ----------
         if faults_on:
+            if probe:
+                probe("Disruption")
             state = faultsmod.disruption(
                 state, app, caps, params, dyn, keys[-3], keys[-2],
                 keys[-1] if network else None)
 
         # --- Transit (fabric mode: NIC fair-share water-filling) --------
         if network:
+            if probe:
+                probe("Transit")
             state = netmod.transit(state, caps, params, dyn, app)
 
         # --- Dispatching (waiting → execution, load-balanced) ----------
+        if probe:
+            probe("Dispatch")
         state = scheduler.dispatch(state, app, caps, params, dyn, k_lb,
                                    network=network)
 
         # --- Scheduling (time-shared execution + finish) ----------------
+        if probe:
+            probe("Execute")
         state, fin_info = scheduler.execute(state, app, caps, params, dyn)
 
         # --- Derivative (spawn successors along the service chain) ------
         if has_edges:  # static: edge-free graphs skip the spawn machinery
+            if probe:
+                probe("Derive")
             state = scheduler.derive(state, app, caps, fin_info, k_der,
                                      params=params, net_rng=k_net_d)
 
         # --- Response (critical-path completion, paper §4.3.2) ----------
+        if probe:
+            probe("Response")
         state, n_done = scheduler.complete(state, dyn, faults=faults_on)
 
         # --- Scaling & Migration (paper §5) ------------------------------
+        if probe:
+            probe("Scaling")
         if (params.scaling_policy or params.migration_enabled) \
                 and scaling != "never":
 
@@ -127,6 +156,8 @@ def make_tick(caps: SimCaps, params: SimParams,
                     (dyn.scale_interval - 1)
                 state = jax.lax.cond(due, do_scale, lambda st: st, state)
 
+        if probe:
+            probe("Trace")
         trace = TickTrace(
             completed=n_done,
             generated=gen_res.n_new_requests,
@@ -193,7 +224,8 @@ class Simulation:
                  host_egress_scale: np.ndarray | None = None,
                  host_ingress_scale: np.ndarray | None = None,
                  placement_policy: int | None = None,
-                 host_zone: np.ndarray | None = None):
+                 host_zone: np.ndarray | None = None,
+                 host_cpu_scale: np.ndarray | None = None):
         self.graph = graph
         self.caps = caps or SimCaps()
         self.params = params or SimParams()
@@ -219,9 +251,17 @@ class Simulation:
         self.host_ingress_scale = np.asarray(
             host_ingress_scale if host_ingress_scale is not None
             else np.ones(V), np.float32)
+        # CPU-speed analogue of the NIC scales: instances on host h run at
+        # cpu_scale[h] × their allocated MIPS (heterogeneous-hardware
+        # studies, e.g. examples/hetero_study.py); placement still sees
+        # the full requested milicores.
+        self.host_cpu_scale = np.asarray(
+            host_cpu_scale if host_cpu_scale is not None
+            else np.ones(V), np.float32)
         if len(self.host_egress_scale) != V \
-                or len(self.host_ingress_scale) != V:
-            raise ValueError("host NIC scales must have n_vms entries")
+                or len(self.host_ingress_scale) != V \
+                or len(self.host_cpu_scale) != V:
+            raise ValueError("host NIC/CPU scales must have n_vms entries")
         self.placement_policy = (policies.PLACE_MOST_AVAILABLE
                                  if placement_policy is None
                                  else placement_policy)
@@ -257,7 +297,8 @@ class Simulation:
                                      svc_replicas=jnp.asarray(reps))
         hosts = state.hosts._replace(
             egress_scale=jnp.asarray(self.host_egress_scale),
-            ingress_scale=jnp.asarray(self.host_ingress_scale))
+            ingress_scale=jnp.asarray(self.host_ingress_scale),
+            cpu_scale=jnp.asarray(self.host_cpu_scale))
         return state._replace(instances=instances, vms=vms, sched=sched,
                               hosts=hosts)
 
@@ -300,14 +341,40 @@ class Simulation:
             return jax.lax.scan(lambda s, _: tick(s, dp, app), st, None,
                                 length=n_ticks)
 
-        compiled = jax.jit(run_fn).lower(state, dyn, self.app).compile()
+        # The input state is consumed: run() builds a fresh one per call,
+        # so the [C,*] pool blocks alias the output instead of doubling
+        # resident bytes.  (Batch paths can't donate — their [B,...]
+        # outputs don't match the unbatched input shapes.)  simcheck's
+        # jaxpr lint enforces this stays donated.
+        compiled = (jax.jit(run_fn, donate_argnums=0)
+                    .lower(state, dyn, self.app).compile())
         dt = _time.perf_counter() - t0
         Simulation._compiled_cache[key] = compiled
         return compiled, dt
 
+    @staticmethod
+    def _unalias(state: SimState) -> SimState:
+        """Copy state leaves that share a device buffer with an earlier
+        leaf.  zeros_state's identical constant fills can alias one
+        buffer, and donating the same buffer twice is an XLA error."""
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        seen: set = set()
+        out = []
+        for x in leaves:
+            try:
+                ptr = x.unsafe_buffer_pointer()
+            except Exception:
+                ptr = None
+            if ptr is not None and ptr in seen:
+                x = jnp.array(x, copy=True)
+            elif ptr is not None:
+                seen.add(ptr)
+            out.append(x)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     def run(self, seed: Optional[int] = None) -> SimResult:
         """Compile (AOT, timed separately) and execute the full scan."""
-        state = self.init_state(seed)
+        state = self._unalias(self.init_state(seed))
         dyn = DynParams.from_params(self.params)
         compiled, compile_s = self._get_compiled(state, dyn)
         t1 = _time.perf_counter()

@@ -35,6 +35,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..analysis import streams
 from . import network as netmod
 from .app import AppStatic
 from .pool import (assign_free_slots, scatter_pool, segment_rank,
@@ -100,13 +101,16 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
             f"{int(app.host_zone.shape[0])} hosts but the cluster has {H} — "
             f"pass n_hosts (or host_zone) to build_app")
 
-    k_host, k_inst, k_nic = jax.random.split(rng, 3)
+    k_host, k_inst, k_nic = streams.split(
+        rng, 3, names=("host", "inst", "nic"))
     # Gray-failure streams are folded off the tick key rather than widening
     # the split above: jax.random.split is NOT prefix-stable, so one extra
     # child would perturb every pre-existing chaos stream and break the
-    # pinned chaos goldens.
-    k_slow, k_sev, k_zone, k_zslow, k_part = jax.random.split(
-        jax.random.fold_in(rng, 1), 5)
+    # pinned chaos goldens.  The whole derivation tree is now pinned by
+    # the stream-topology digest test (repro/analysis/streams.py).
+    k_slow, k_sev, k_zone, k_zslow, k_part = streams.split(
+        streams.fold_in(rng, 1, name="gray"), 5,
+        names=("slow", "sev", "zone", "zslow", "part"))
 
     # --- correlated failure domains (zone draws, DESIGN.md §7.1) ---------
     # One uniform draw per *zone slot* ([H] slots bound Z); a firing draw
@@ -289,7 +293,7 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
         src_host_sp, bytes_sp = -1, 0.0
         rr = state.rr
     else:                                # fabric mode: re-address + payload
-        k_lb, k_pay = jax.random.split(rng_net)
+        k_lb, k_pay = streams.split(rng_net, names=("lb", "payload"))
         tgt, rr = netmod.pick_replicas(svc_new, asg.live, state, caps,
                                        params, k_lb)
         pay_mean, pay_std = edge_payload_tables(app)
@@ -350,7 +354,8 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
     traffic_i = n_i > 0
     err_i = org_i.astype(f32) / jnp.maximum(n_i.astype(f32), 1.0)
     iema = jnp.where(traffic_i,
-                     fs.inst_err_ema + dyn.cb_alpha * (err_i - fs.inst_err_ema),
+                     fs.inst_err_ema
+                     + dyn.cb_alpha * (err_i - fs.inst_err_ema),
                      fs.inst_err_ema)
     mean_lat = fs.inst_lat_sum / jnp.maximum(succ_i.astype(f32), 1.0)
     lema = jnp.where(succ_i > 0,

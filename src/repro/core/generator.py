@@ -8,12 +8,13 @@ the simulated trace in tests and `benchmarks/bench_generator.py` (Fig 9).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import streams
 from .types import DynParams, SimParams
 
 
@@ -43,7 +44,7 @@ def client_phase(wait: jnp.ndarray, time: jnp.ndarray, req_count: jnp.ndarray,
     under_limit = req_count < dyn.num_limit
     fired = active & (wait <= 0) & under_limit
 
-    k_api, k_wait = jax.random.split(rng)
+    k_api, k_wait = streams.split(rng, names=("api", "wait"))
     # Weighted API selection (Alg 1 line 9): inverse-CDF on the weight set.
     u = jax.random.uniform(k_api, (Nc,))
     api = jnp.searchsorted(api_weight_cdf, u).astype(jnp.int32)
@@ -68,7 +69,8 @@ def n_clients_analytic(t: np.ndarray, params: SimParams) -> np.ndarray:
 
 def qps_analytic(t: np.ndarray, params: SimParams) -> np.ndarray:
     """Eq 3: λ(t) = N(t) · 2/(p0+p1)."""
-    return n_clients_analytic(t, params) * 2.0 / (params.wait_lo + params.wait_hi)
+    return (n_clients_analytic(t, params) * 2.0
+            / (params.wait_lo + params.wait_hi))
 
 
 def total_requests_analytic(t: np.ndarray, params: SimParams) -> np.ndarray:

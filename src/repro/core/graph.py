@@ -314,7 +314,8 @@ def build_graph(
     return graph
 
 
-def linear_chain(n: int, mi: float = 1000.0, name: str = "svc") -> ServiceGraph:
+def linear_chain(n: int, mi: float = 1000.0,
+                 name: str = "svc") -> ServiceGraph:
     """n-service pipeline svc0 → svc1 → … (test/benchmark helper)."""
     names = [f"{name}{i}" for i in range(n)]
     calls = {names[i]: [names[i + 1]] for i in range(n - 1)}

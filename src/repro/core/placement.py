@@ -13,7 +13,7 @@ import numpy as np
 
 from . import policies
 from .app import AppStatic
-from .types import DynParams, INST_FREE, INST_ON, SimCaps, SimParams, SimState
+from .types import DynParams, INST_ON, SimCaps, SimState
 
 
 class PlacementError(RuntimeError):
@@ -60,10 +60,12 @@ def initial_allocation(app_replicas: np.ndarray, tmpl_mips: np.ndarray,
         n_rep = int(app_replicas[s])
         if n_rep > caps.max_replicas:
             raise PlacementError(
-                f"service {s}: {n_rep} replicas > max_replicas={caps.max_replicas}")
+                f"service {s}: {n_rep} replicas > "
+                f"max_replicas={caps.max_replicas}")
         for r in range(n_rep):
             if slot >= I:
-                raise PlacementError("instance pool exhausted during placement")
+                raise PlacementError(
+                    "instance pool exhausted during placement")
             free_mips = vm_mips - vm_used_mips
             free_ram = vm_ram - vm_used_ram
             if policy == policies.PLACE_FIRST_FIT:

@@ -128,4 +128,5 @@ class ScalingPolicy(Protocol):
     """
 
     def __call__(self, util_ema: jnp.ndarray, inst_service: jnp.ndarray,
-                 inst_status: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+                 inst_status: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]: ...

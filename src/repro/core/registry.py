@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Any, Dict, Sequence
+from typing import Any, Dict
 
 import numpy as np
 import yaml
@@ -114,7 +114,8 @@ def templates_from_spec(spec: Dict[str, Any],
 def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
              params: SimParams | None = None, vm_mips=None, vm_ram=None,
              host_egress_scale=None, host_ingress_scale=None,
-             placement_policy=None, host_zone=None) -> Simulation:
+             placement_policy=None, host_zone=None,
+             host_cpu_scale=None) -> Simulation:
     """One-call entity registration (paper Fig 4 ``Register`` class).
 
     Failure-domain extension (DESIGN.md §7.1): the app document may carry
@@ -135,4 +136,5 @@ def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
                       host_egress_scale=host_egress_scale,
                       host_ingress_scale=host_ingress_scale,
                       placement_policy=placement_policy,
-                      host_zone=host_zone)
+                      host_zone=host_zone,
+                      host_cpu_scale=host_cpu_scale)

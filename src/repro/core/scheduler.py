@@ -32,6 +32,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..analysis import streams
 from . import network as netmod
 from . import policies
 from ..kernels.cloudlet_step import cloudlet_finish_pool as _cloudlet_finish_op
@@ -133,7 +134,7 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
         src_host_new, bytes_new = -1, 0.0
         rr = state.rr
     else:                                # fabric mode: address + payload
-        k_lb, k_pay = jax.random.split(net_rng)
+        k_lb, k_pay = streams.split(net_rng, names=("lb", "payload"))
         tgt, rr = netmod.pick_replicas(svc_new, asg.live, state, caps,
                                        params, k_lb)
         payload = netmod.sample_payload(app.api_payload_mean[api_new],
@@ -317,7 +318,10 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
         w = execm.astype(f32)
         wsum = n_exec.astype(f32)
     inst_safe = jnp.where(execm, inst_c, 0)
-    mips_eff = inst.mips
+    # Hardware heterogeneity: instances run at their host's CPU speed
+    # (hosts.cpu_scale, 1.0 everywhere by default — an exact multiply);
+    # the scheduler/placement still accounts the full allocation.
+    mips_eff = inst.mips * state.hosts.cpu_scale[jnp.maximum(inst.host, 0)]
     if params.faults == "chaos":
         # fail-slow hosts (§7.1): a slow host's instances run at a fraction
         # of their allocation — the scheduling weights are untouched, only
@@ -325,8 +329,8 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
         # against inst.mips, so a slow host shows depressed utilization)
         hs = jnp.maximum(inst.host, 0)
         is_slow = (inst.host >= 0) & (state.fault.host_slow[hs] > 0)
-        mips_eff = jnp.where(is_slow, inst.mips * dyn.host_slow_factor,
-                             inst.mips)
+        mips_eff = jnp.where(is_slow, mips_eff * dyn.host_slow_factor,
+                             mips_eff)
     rate = jnp.where(execm,
                      mips_eff[inst_safe] * w
                      / jnp.maximum(wsum[inst_safe], 1e-9), 0.0)  # MI/s
@@ -363,7 +367,7 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
                          a * util + (1 - a) * inst.util_ema, 0.0)
     used_ram = jnp.where(svc_of_inst >= 0,
                          app.ram_per_cl[jnp.maximum(svc_of_inst, 0)]
-                         * n_exec, 0.0)
+                         * n_exec.astype(f32), 0.0)
 
     # --- per-service usage history / node-delay estimates ---------------
     # The cloudlet-axis statistics were accumulated per instance by the
@@ -486,7 +490,7 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
         src_host_new, bytes_new = -1, 0.0
         rr = state.rr
     else:                                # fabric mode: address + payload
-        k_lb, k_pay = jax.random.split(net_rng)
+        k_lb, k_pay = streams.split(net_rng, names=("lb", "payload"))
         tgt, rr = netmod.pick_replicas(svc_new, asg.live, state, caps,
                                        params, k_lb)
         payload = netmod.sample_payload(app.payload_mean[psvc_new, slot_new],

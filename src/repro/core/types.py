@@ -64,7 +64,8 @@ class SimCaps:
             v = getattr(self, f.name)
             lo = 0 if f.name in ("k_fire", "k_retry") else 1
             if not isinstance(v, int) or v < lo:
-                raise ValueError(f"SimCaps.{f.name} must be an int ≥ {lo}, got {v!r}")
+                raise ValueError(
+                    f"SimCaps.{f.name} must be an int ≥ {lo}, got {v!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -356,12 +357,21 @@ PHASE_COLUMNS = {
                    "start"),
     "Execute":    ("status", "req", "service", "inst", "depth", "rem",
                    "arrival", "start"),
+    # Chaos-mode Execute additionally folds per-edge success counts for
+    # the breaker EMA off cl.edge — drift simcheck's layout-access
+    # checker caught (the column was only declared under Disruption; the
+    # resolved layout is unchanged, the *attribution* was wrong).
+    "Execute/chaos": ("edge",),
     "Derive":     ("status", "req", "service", "inst", "depth", "length",
                    "rem", "arrival", "start"),
     "Transit":    ("status", "inst", "arrival", "src_host", "rem_bytes"),
     "Transit/egress_shaping": ("src_inst",),
     "Disruption": ("status", "req", "service", "inst", "depth", "attempt",
                    "edge", "src_inst", "length", "rem", "arrival", "start"),
+    # Fabric-mode retry respawns re-derive the retried hop's source host
+    # (same checker catch as Execute/chaos: the column was riding on
+    # Transit's declaration; resolved layouts are unchanged).
+    "Disruption/fabric": ("src_host",),
 }
 
 
@@ -416,8 +426,11 @@ def _layout_for(network: str, faults: str, egress_shaping: bool
     phases = ["Generation", "Dispatch", "Execute", "Derive"]
     if faults == "chaos":
         phases.append("Disruption")
+        phases.append("Execute/chaos")
     if network == "fabric":
         phases.append("Transit")
+        if faults == "chaos":
+            phases.append("Disruption/fabric")
         if egress_shaping:
             phases.append("Transit/egress_shaping")
     need = {c for p in phases for c in PHASE_COLUMNS[p]}
@@ -587,16 +600,22 @@ class VMs(NamedTuple):
 
 
 class Hosts(NamedTuple):
-    """Per-host NIC description (network fabric, DESIGN.md §6).
+    """Per-host hardware description (fabric §6, heterogeneity §7.1).
 
     One host per VM slot (host id = vm id).  Effective port capacity is
     ``scale * dyn.nic_{egress,ingress}_mbps`` so heterogeneous clusters keep
     their shape while sweeps scale the whole fabric through one traced
-    scalar.
+    scalar.  ``cpu_scale`` is the CPU analogue: instances execute at
+    ``cpu_scale[host] ×`` their allocated MIPS, so a slow hardware class
+    (old CPUs, throttled nodes) degrades *speed* while the placement
+    bin-packing still sees the full requested milicores — the
+    resource-model asymmetry real schedulers suffer (default 1.0
+    everywhere, which multiplies out exactly).
     """
 
     egress_scale: jnp.ndarray    # [H] f32 NIC egress capacity multiplier
     ingress_scale: jnp.ndarray   # [H] f32 NIC ingress capacity multiplier
+    cpu_scale: jnp.ndarray       # [H] f32 execution-rate multiplier
 
 
 class NetStats(NamedTuple):
@@ -839,6 +858,7 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
         hosts=Hosts(
             egress_scale=jnp.ones((V,), f32),
             ingress_scale=jnp.ones((V,), f32),
+            cpu_scale=jnp.ones((V,), f32),
         ),
         net=NetStats(
             bytes_out=jnp.zeros((V,), f32),

@@ -4,7 +4,6 @@ from __future__ import annotations
 import os
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .kernel import cloudlet_finish_pallas, cloudlet_step_pallas

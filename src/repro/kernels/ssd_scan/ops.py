@@ -69,7 +69,8 @@ def _ssd_kernel_vjp(x, dt, A, B, C, D, chunk, interpret):
 
 
 def _fwd(x, dt, A, B, C, D, chunk, interpret):
-    return _kernel_ssd(x, dt, A, B, C, D, chunk, interpret), (x, dt, A, B, C, D)
+    return (_kernel_ssd(x, dt, A, B, C, D, chunk, interpret),
+            (x, dt, A, B, C, D))
 
 
 def _bwd(chunk, interpret, res, g):

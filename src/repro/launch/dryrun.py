@@ -17,7 +17,8 @@ Results are cached as JSON under ``results/dryrun`` so reruns are
 incremental (delete the file to force).
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only-sample]
 """
 import argparse
@@ -128,10 +129,12 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
         try:
             mem = compiled.memory_analysis()
             mem_rec = {
-                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "argument_bytes":
+                    int(getattr(mem, "argument_size_in_bytes", 0)),
                 "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
                 "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
-                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+                "code_bytes":
+                    int(getattr(mem, "generated_code_size_in_bytes", 0)),
                 "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
             }
         except Exception as e:                      # pragma: no cover

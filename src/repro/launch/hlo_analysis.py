@@ -34,7 +34,8 @@ def parse_collectives(hlo_text: str) -> dict:
     out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
         s = line.strip()
-        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+([a-z\-]+)", s)
+        m = re.match(r"%?[\w.\-]+\s*=\s*"
+                     r"(\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+([a-z\-]+)", s)
         if not m:
             continue
         op = m.group(2)

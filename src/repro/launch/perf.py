@@ -15,7 +15,6 @@ cached under results/perf/ and summarized into EXPERIMENTS.md §Perf.
 import argparse
 import dataclasses as dc
 import json
-import pathlib
 
 from repro.configs import SHAPES, get_config
 from repro.launch.dryrun import RESULTS as DRYRUN_RESULTS

@@ -10,11 +10,9 @@ checkpoints → crash-resume (bit-exact thanks to the step-indexed pipeline).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ArchConfig

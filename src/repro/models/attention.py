@@ -8,7 +8,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 from ..kernels.flash_attention import attention as flash_attention
-from ..kernels.flash_attention import attention_ref
 from .common import P, apply_mrope, apply_rope, rmsnorm
 
 

@@ -8,18 +8,17 @@ seq_len plus the (precomputed) cross-attention K/V.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import (KVCache, attn_apply, attn_decode, attn_schema,
+from .attention import (attn_apply, attn_decode, attn_schema,
                         kv_cache_schema)
 from .common import P, abstract, apply_mlp, initialize, logical_axes, \
     mlp_schema, rmsnorm, sinusoid_positions, unembed
-from .transformer import DecodeState, _stack_schema
+from .transformer import _stack_schema
 
 
 class EncDecState(NamedTuple):

@@ -7,7 +7,7 @@ unrolling its K sub-layers — compile time O(period), run depth O(L).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,17 +11,17 @@ frontend per the assignment); text decode goes through the embedding table.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import (KVCache, attn_apply, attn_decode, attn_schema,
+from .attention import (attn_apply, attn_decode, attn_schema,
                         kv_cache_schema)
 from .common import (P, abstract, apply_mlp, initialize, logical_axes,
                      mlp_schema, rmsnorm, unembed)
-from .mamba2 import (MambaState, mamba_apply, mamba_decode, mamba_schema,
+from .mamba2 import (mamba_apply, mamba_decode, mamba_schema,
                      mamba_state_schema)
 from .moe import moe_apply, moe_schema
 

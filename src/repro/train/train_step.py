@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..dist.compression import compress_decompress
 from .optimizer import AdamWCfg, AdamWState, adamw_update

@@ -11,7 +11,8 @@ from __future__ import annotations
 import pytest
 
 try:
-    from hypothesis import HealthCheck, given, settings, strategies as st
+    from hypothesis import (HealthCheck, given, settings,  # noqa: F401
+                            strategies as st)
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False

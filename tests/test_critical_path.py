@@ -26,7 +26,8 @@ def _random_dag(rng, n, p=0.35):
     return g, delays
 
 
-@given(st.integers(min_value=2, max_value=12), st.integers(min_value=0, max_value=10_000))
+@given(st.integers(min_value=2, max_value=12),
+       st.integers(min_value=0, max_value=10_000))
 @settings(max_examples=60, deadline=None)
 def test_tropical_matches_dp_oracle(n, seed):
     rng = np.random.default_rng(seed)

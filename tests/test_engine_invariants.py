@@ -4,15 +4,12 @@ These are the system-level properties the tensor-DES must satisfy for any
 configuration: cloudlet conservation, request accounting, capacity limits,
 and monotonicity of the usage history.
 """
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _hyp import given, settings, st  # skips gracefully without hypothesis
 
 from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
                         diamond, linear_chain, star, summarize)
-from repro.core.types import CL_EXEC, CL_WAITING
 
 
 def _run(graph, caps, params, tmpl=None):

@@ -12,7 +12,6 @@ Three contracts of the single-pass tick refactor are pinned here:
 """
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -21,7 +20,7 @@ from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
                         batch_item, diamond, linear_chain, resolve_layout)
 from repro.core.pool import (assign_free_slots, scatter_pool, segment_rank,
                              segment_rank_sorted)
-from repro.core.types import Cloudlets, DynParams
+from repro.core.types import Cloudlets
 from repro.kernels.cloudlet_step import cloudlet_finish_ref
 from repro.kernels.cloudlet_step.kernel import cloudlet_finish_pallas
 

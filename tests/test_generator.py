@@ -7,8 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (SimCaps, SimParams, Simulation, linear_chain,
-                        n_clients_analytic, qps_analytic,
-                        total_requests_analytic)
+                        qps_analytic, total_requests_analytic)
 
 
 def _run_generator(n_clients, spawn_rate, p, n_ticks=3000, dt=0.1, seed=0):

@@ -49,6 +49,7 @@ def test_ops_dispatch_property(seed, dt):
     # physical invariants
     assert (new_rem >= 0).all()
     exec_mask = np.asarray(status) == 2
-    assert (consumed[exec_mask] <= np.asarray(rate)[exec_mask] * dt + 1e-5).all()
+    assert (consumed[exec_mask]
+            <= np.asarray(rate)[exec_mask] * dt + 1e-5).all()
     assert not fin[~exec_mask].any()
     assert (tfin[fin] >= 3.0).all() and (tfin[fin] <= 3.0 + dt + 1e-6).all()

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ssd_scan import ssd, ssd_chunked_ref, ssd_decode_step, ssd_ref
+from repro.kernels.ssd_scan import (ssd, ssd_chunked_ref,
+                                    ssd_decode_step, ssd_ref)
 
 
 def _mk(rng, B, T, H, P, G, N, dtype=np.float32):

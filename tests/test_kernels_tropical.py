@@ -64,7 +64,8 @@ def test_closure_longest_path_vs_numpy_dp(rng):
 def test_closure_interpret_kernel_path(rng):
     n = 12
     mask = np.triu(rng.random((n, n)) < 0.4, k=1)
-    a = np.where(mask, rng.uniform(0.5, 1.5, (n, n)), -np.inf).astype(np.float32)
+    a = np.where(mask, rng.uniform(0.5, 1.5, (n, n)),
+                 -np.inf).astype(np.float32)
     got = tropical_closure(jnp.asarray(a), use_pallas=True, interpret=True)
     want = tropical_closure(jnp.asarray(a), use_pallas=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -67,7 +67,8 @@ def test_moe_capacity_drops_are_graceful(rng):
     # an uncapped run — but never explodes
     loose = dc.replace(tight, capacity_factor=8.0)
     out_loose = moe_apply(params, x, loose)
-    assert float(jnp.abs(out).mean()) <= float(jnp.abs(out_loose).mean()) + 1e-5
+    assert (float(jnp.abs(out).mean())
+            <= float(jnp.abs(out_loose).mean()) + 1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,7 @@ import pytest
 
 from repro.core import (InstanceTemplate, SimCaps, SimParams, Simulation,
                         batch_item, diamond, summarize)
-from repro.core.types import CL_TRANSIT, DynParams
+from repro.core.types import CL_TRANSIT
 from repro.kernels.link_share import link_share_pallas, link_share_ref
 
 i32, f32 = jnp.int32, jnp.float32

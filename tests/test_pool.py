@@ -6,7 +6,6 @@ respected, and overflow is counted — never silent.
 """
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _hyp import given, settings, st  # skips gracefully without hypothesis
 

@@ -3,7 +3,6 @@ behaviours, and kernel-path equivalence of the engine tick."""
 import json
 
 import numpy as np
-import pytest
 import yaml
 
 from repro.configs import sockshop

@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, checkpoint/restart, elastic reshard,
 gradient compression, deterministic data pipeline, sharding resolver."""
-import dataclasses
 import pathlib
 import tempfile
 
