@@ -40,7 +40,7 @@ def flat_services(n: int, mi: float) -> "ServiceGraph":
 
 def build_case(n_requests, n_services, replicas, fanout=1,
                use_pallas_interpret=False, network=False, faults=False,
-               chaos2=False):
+               chaos2=False, telemetry=False):
     """Build a capacity Simulation sized to the Table 2 object counts;
     returns (sim, meta) where meta records the sizing decisions.
 
@@ -60,6 +60,11 @@ def build_case(n_requests, n_services, replicas, fanout=1,
     per-replica outlier ejection all sample every tick, so the delta over
     the fault-free case prices the FULL chaos surface (same ≤ 1.3×
     target, tracked as ``<tag>+chaos2``).
+
+    ``telemetry=True`` streams observability (DESIGN.md §9): per-window
+    metric rows flushed through the io_callback tap every 16 ticks plus
+    1-in-100 span sampling — the delta over the telemetry-off case is
+    the observation cost (target ≤ 1.05×, tracked as ``<tag>+obs``).
     """
     mi = 50.0
     if fanout > 1:
@@ -112,6 +117,10 @@ def build_case(n_requests, n_services, replicas, fanout=1,
             zone_partition_rate=1.0 / duration,
             zone_partition_mttr_s=4 * dt,
             eject_err_thresh=0.8, eject_cooldown_s=4 * dt)
+    tel_kw = dict(
+        telemetry="stream", tel_window_ticks=16, tel_windows=8,
+        tel_span_k=100, tel_span_cap=4096,
+    ) if telemetry else {}
     params = SimParams(
         dt=dt, n_ticks=n_ticks, n_clients=nc,
         spawn_rate=nc / 5.0, wait_lo=2.0, wait_hi=6.0,
@@ -121,7 +130,7 @@ def build_case(n_requests, n_services, replicas, fanout=1,
         network="fabric" if network else "uniform",
         # ample per-host NICs: the phase runs, the workload doesn't starve
         nic_egress_mbps=10_000.0, nic_ingress_mbps=10_000.0,
-        **fault_kw,
+        **fault_kw, **tel_kw,
     )
     # Instance speed: each tick's per-instance batch drains in ~0.4 ticks,
     # keeping residence ≈ 2 ticks and utilization < 1 (no blow-up).
@@ -158,24 +167,27 @@ CASES = {
 
 def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
                 network: bool = False, faults: bool = False,
-                chaos2: bool = False) -> dict:
+                chaos2: bool = False, telemetry: bool = False) -> dict:
     """One BENCH_perf.json record: wall seconds + ticks/sec for a Table 2
     case.  ``scale`` shrinks the request count (pallas-interpret runs are
     orders of magnitude slower than compiled backends).  ``network=True``
     re-runs the case with the fabric's Transit phase on (case tagged
     ``<tag>+net``), ``faults=True`` with the Disruption phase on
     (``<tag>+faults``), ``chaos2=True`` with the full gray-failure
-    surface on (``<tag>+chaos2``), so each phase's overhead is tracked
-    PR-over-PR."""
+    surface on (``<tag>+chaos2``), ``telemetry=True`` with streaming
+    observability on (``<tag>+obs``), so each phase's overhead is
+    tracked PR-over-PR."""
     n_requests, n_services, replicas, cpr, fanout = CASES[tag]
     n_requests = max(int(n_requests * scale), 100)
     sim, meta = build_case(n_requests, n_services, replicas, fanout,
                            use_pallas_interpret=(backend
                                                  == "pallas-interpret"),
-                           network=network, faults=faults, chaos2=chaos2)
+                           network=network, faults=faults, chaos2=chaos2,
+                           telemetry=telemetry)
     res = sim.run()
     suffix = ("+net" if network else "") \
-        + ("+chaos2" if chaos2 else ("+faults" if faults else ""))
+        + ("+chaos2" if chaos2 else ("+faults" if faults else "")) \
+        + ("+obs" if telemetry else "")
     return dict(
         case=tag + suffix, backend=backend, scale=scale,
         requests=int(res.state.requests.count),

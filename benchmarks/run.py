@@ -104,6 +104,22 @@ def write_perf_json(path: str, cases, repeats: int = 2) -> None:
         records.append(best)
         print(f"# perf case1b+chaos2: {best['wall_s']:.2f}s "
               f"({best['chaos2_overhead_ratio']}x of fault-free)")
+    # Streaming-observability overhead on case1b (DESIGN.md §9): metric
+    # rows flushed through the io_callback tap every 16 ticks + 1-in-100
+    # span sampling — ratio over the telemetry-off run (target ≤ 1.05×)
+    if "case1b" in cases:
+        best = None
+        for _ in range(max(repeats, 1)):
+            rec = bench_capacity.perf_record("case1b", backend="jnp",
+                                             telemetry=True)
+            if best is None or rec["wall_s"] < best["wall_s"]:
+                best = rec
+        base_rec = next(r for r in records if r["case"] == "case1b")
+        best["obs_overhead_ratio"] = round(
+            best["wall_s"] / max(base_rec["wall_s"], 1e-9), 3)
+        records.append(best)
+        print(f"# perf case1b+obs: {best['wall_s']:.2f}s "
+              f"({best['obs_overhead_ratio']}x of telemetry-off)")
     # interpret-mode kernel trend on a scaled-down case (interpret is
     # orders of magnitude slower — the trend matters, not the magnitude)
     rec = bench_capacity.perf_record("case1a", backend="pallas-interpret",

@@ -45,22 +45,25 @@ from repro.core.engine import make_tick
 from repro.core.types import (DynParams, PHASE_COLUMNS, Cloudlets,
                               resolve_layout)
 
-# (network, faults, egress_shaping) combos replayed.  The four golden
-# combos plus the egress-shaping variant (the only consumer of the
-# Transit/egress_shaping sub-entry).
-COMBOS: Tuple[Tuple[str, str, bool], ...] = (
-    ("uniform", "none", False),
-    ("uniform", "chaos", False),
-    ("fabric", "none", False),
-    ("fabric", "chaos", False),
-    ("fabric", "chaos", True),
+# (network, faults, egress_shaping, telemetry) combos replayed.  The
+# four golden combos plus the egress-shaping variant (the only consumer
+# of the Transit/egress_shaping sub-entry) plus the telemetry combo
+# (the only one tracing the Telemetry phase — full-mode so both its
+# chaos and fabric sub-entries activate).
+COMBOS: Tuple[Tuple[str, str, bool, bool], ...] = (
+    ("uniform", "none", False, False),
+    ("uniform", "chaos", False, False),
+    ("fabric", "none", False, False),
+    ("fabric", "chaos", False, False),
+    ("fabric", "chaos", True, False),
+    ("fabric", "chaos", False, True),
 )
 
 # Registry sub-entries ("Phase/feature") activate with these flags.
 _FEATURE_ON = {
-    "chaos": lambda net, fl, eg: fl == "chaos",
-    "fabric": lambda net, fl, eg: net == "fabric",
-    "egress_shaping": lambda net, fl, eg: eg,
+    "chaos": lambda net, fl, eg, tel: fl == "chaos",
+    "fabric": lambda net, fl, eg, tel: net == "fabric",
+    "egress_shaping": lambda net, fl, eg, tel: eg,
 }
 
 _SPAWN_PHASES = ("Generation", "Derive", "Disruption")
@@ -130,21 +133,31 @@ class AccessLog:
         self.accesses.setdefault(self.phase, set()).add((column, kind))
 
 
-def _tiny_sim(network: str, faults: str, egress: bool) -> Simulation:
+def _tiny_sim(network: str, faults: str, egress: bool,
+              telemetry: bool | str = False) -> Simulation:
     caps = SimCaps(n_clients=8, max_requests=128, max_cloudlets=128,
                    max_instances=8, n_vms=2, d_max=2, max_replicas=2)
+    tel_on = telemetry in (True, "stream")
+    # telemetry knobs shrunk so a 4-tick replay closes windows (Wt=2)
+    # and a 4-tick lint program contains a real chunk flush (W=2 →
+    # flush every 2 ticks); k=1 samples every request so the span path
+    # traces its chaos/fabric column reads.
     params = SimParams(dt=0.05, n_ticks=4, n_clients=6, spawn_rate=10.0,
                        wait_lo=0.1, wait_hi=0.3, seed=7,
                        scaling_policy=1,  # exercise the Scaling phase too
                        network=network, faults=faults,
-                       egress_shaping=egress)
+                       egress_shaping=egress,
+                       telemetry="stream" if tel_on else "none",
+                       tel_window_ticks=2, tel_windows=2,
+                       tel_span_k=1, tel_span_cap=64)
     return Simulation(diamond(mi=200.0), caps=caps, params=params)
 
 
-def replay_accesses(network: str, faults: str, egress: bool
+def replay_accesses(network: str, faults: str, egress: bool,
+                    telemetry: bool = False
                     ) -> Dict[str, Set[Tuple[str, str]]]:
     """Actual per-phase column accesses of one eagerly-executed tick."""
-    sim = _tiny_sim(network, faults, egress)
+    sim = _tiny_sim(network, faults, egress, telemetry)
     log = AccessLog()
     tick = make_tick(sim.caps, sim.params, sim._has_edges, probe=log.probe)
     state = sim.init_state()
@@ -159,7 +172,7 @@ def replay_accesses(network: str, faults: str, egress: bool
 
 
 def declared_for(registry: dict, phase: str, network: str, faults: str,
-                 egress: bool) -> Set[str]:
+                 egress: bool, telemetry: bool = False) -> Set[str]:
     """Declared column set of a registry phase under one mode combo
     (base entry + active ``Phase/feature`` sub-entries)."""
     cols = set(registry[phase])
@@ -167,7 +180,8 @@ def declared_for(registry: dict, phase: str, network: str, faults: str,
         if "/" not in key:
             continue
         base, feature = key.split("/", 1)
-        if base == phase and _FEATURE_ON[feature](network, faults, egress):
+        if base == phase and _FEATURE_ON[feature](network, faults,
+                                                  egress, telemetry):
             cols |= set(sub)
     return cols
 
@@ -187,10 +201,11 @@ def check_layout_access(phase_columns: dict | None = None) -> List[str]:
     touched: Dict[str, Set[str]] = {p: set() for p in base_phases}
     declared_any: Dict[str, Set[str]] = {p: set() for p in base_phases}
 
-    for network, faults, egress in COMBOS:
+    for network, faults, egress, telemetry in COMBOS:
         combo = f"network={network} faults={faults}" \
-            + (" egress_shaping" if egress else "")
-        actual = replay_accesses(network, faults, egress)
+            + (" egress_shaping" if egress else "") \
+            + (" telemetry" if telemetry else "")
+        actual = replay_accesses(network, faults, egress, telemetry)
         for phase, accs in actual.items():
             spawns = {c for c, kind in accs if kind == "spawn"}
             named = {c for c, kind in accs if kind == "named"}
@@ -200,7 +215,7 @@ def check_layout_access(phase_columns: dict | None = None) -> List[str]:
                     f"writes — only {_SPAWN_PHASES} respawn rows")
             if phase in base_phases:
                 decl = declared_for(registry, phase, network,
-                                    faults, egress)
+                                    faults, egress, telemetry)
                 declared_any[phase] |= decl
                 touched[phase] |= named | spawns
                 undeclared = named - decl

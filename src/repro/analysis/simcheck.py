@@ -17,12 +17,18 @@ from . import jaxpr_lint, layout_check, recompile, streams
 
 GOLDEN_COMBOS = (("uniform", "none"), ("uniform", "chaos"),
                  ("fabric", "none"), ("fabric", "chaos"))
+# Fifth combo (PR 8): telemetry="stream" on the full mode.  The
+# Telemetry phase consumes no tick RNG (its sample mask is a named
+# init-time fold_in), so its stream digest must EQUAL fabric+chaos —
+# checked below, pinning the observation-only contract.
+TELEMETRY_COMBO = ("fabric", "chaos", "stream")
 
 
-def record_tick_streams(network: str, faults: str) -> streams.StreamRecorder:
+def record_tick_streams(network: str, faults: str,
+                        telemetry: bool = False) -> streams.StreamRecorder:
     """Replay one eager tick with stream recording; the state's rng is
     the registered root, so every wrapped derivation resolves a path."""
-    sim = layout_check._tiny_sim(network, faults, False)
+    sim = layout_check._tiny_sim(network, faults, False, telemetry)
     state = sim.init_state()
     dyn = DynParams.from_params(sim.params)
     with streams.recording() as rec:
@@ -32,7 +38,7 @@ def record_tick_streams(network: str, faults: str) -> streams.StreamRecorder:
 
 
 def check_streams() -> Dict[str, object]:
-    """Audit all four combos; returns {'problems': [...], 'digests': {...}}."""
+    """Audit all five combos; returns {'problems': [...], 'digests': {...}}."""
     problems: List[str] = []
     digests: Dict[str, str] = {}
     for net, fl in GOLDEN_COMBOS:
@@ -45,6 +51,17 @@ def check_streams() -> Dict[str, object]:
             problems.append(
                 f"[{combo}] no stream derivations recorded — the engine "
                 "bypassed analysis.streams entirely")
+    net, fl, _ = TELEMETRY_COMBO
+    rec = record_tick_streams(net, fl, telemetry=True)
+    combo = f"{net}+{fl}+telemetry"
+    digests[combo] = streams.topology_digest(rec)
+    for p in streams.audit_events(rec):
+        problems.append(f"[{combo}] {p}")
+    if digests[combo] != digests[f"{net}+{fl}"]:
+        problems.append(
+            f"[{combo}] tick stream topology differs from {net}+{fl} — "
+            "the Telemetry phase must not consume tick RNG (its sample "
+            "mask is an init-time named fold_in)")
     return {"problems": problems, "digests": digests}
 
 
@@ -82,6 +99,10 @@ def run_simcheck(only: Optional[Set[str]] = None,
         for net, fl in GOLDEN_COMBOS:
             for p in jaxpr_lint.lint_combo(net, fl, waive=waive):
                 lint.append(f"[{net}+{fl}] {p}")
+        net, fl, tel = TELEMETRY_COMBO
+        for p in jaxpr_lint.lint_combo(net, fl, waive=waive,
+                                       telemetry=tel):
+            lint.append(f"[{net}+{fl}+telemetry] {p}")
         sections["lint"] = lint
     if run("layout"):
         sections["layout"] = layout_check.check_layout_access()

@@ -26,12 +26,18 @@ from .graph import ServiceGraph
 from .placement import initial_allocation, migrate
 from .scaling import scaling_event
 from .types import (CL_EXEC, CL_TRANSIT, CL_WAITING, DynParams, INST_ON,
-                    SimCaps, SimParams, SimState, TickTrace, zeros_state)
+                    SimCaps, SimParams, SimState, TickTrace,
+                    validate_telemetry, zeros_state)
+
+# make_tick's phase sequence — ``stop_after`` prefixes must name one.
+TICK_PHASES = ("Generation", "Disruption", "Transit", "Dispatch",
+               "Execute", "Derive", "Response", "Scaling")
 
 
 def make_tick(caps: SimCaps, params: SimParams,
               has_edges: bool = True, scaling: str = "cond",
-              probe: Optional[Callable[[str], None]] = None) -> Callable:
+              probe: Optional[Callable[[str], None]] = None,
+              stop_after: Optional[str] = None) -> Callable:
     """Build the jit-able tick function (paper event cycle, vectorized).
 
     ``params`` supplies the *static* knobs (policy selectors — they choose
@@ -61,6 +67,17 @@ def make_tick(caps: SimCaps, params: SimParams,
     phase's ops trace, it lets the checker attribute recorded column
     accesses to `PHASE_COLUMNS` entries.  ``None`` (the default) adds
     nothing to the traced program.
+
+    ``params.telemetry`` is static: ``"stream"`` adds the Telemetry
+    recording ops (span capture after Execute, window close after
+    Trace — repro/obs, DESIGN.md §9); ``"none"`` builds the exact
+    pre-observability program (the telemetry buffers are zero-width).
+
+    ``stop_after`` truncates the tick right after the named phase
+    (``"Execute"``, or a Disruption stage like ``"Disruption/respawn"``)
+    and returns a zero trace — the obs profiler's prefix programs
+    (obs/profile.py) difference their walls to attribute per-phase cost.
+    ``None`` (the default) builds the full tick.
     """
     if params.network not in ("uniform", "fabric"):
         raise ValueError(
@@ -70,8 +87,17 @@ def make_tick(caps: SimCaps, params: SimParams,
         raise ValueError(
             f"SimParams.faults must be 'none' or 'chaos', "
             f"got {params.faults!r}")
+    validate_telemetry(params)
     network = params.network == "fabric"
     faults_on = params.faults == "chaos"
+    telemetry = params.telemetry == "stream"
+    if telemetry:
+        from ..obs import telemetry as telmod
+    if stop_after is not None \
+            and stop_after.split("/", 1)[0] not in TICK_PHASES:
+        raise ValueError(
+            f"stop_after must name a tick phase {TICK_PHASES} "
+            f"(optionally 'Disruption/<stage>'), got {stop_after!r}")
 
     # Stream names for the tick's single wide split; positions are the
     # contract (split is NOT prefix-stable), names are the audit labels.
@@ -91,6 +117,16 @@ def make_tick(caps: SimCaps, params: SimParams,
         k_net_g, k_net_d = (keys[5], keys[6]) if network else (None, None)
         state = state._replace(rng=rng)
 
+        def early(st: SimState) -> Tuple[SimState, TickTrace]:
+            # profiler prefix cut: advance the clock, zero the trace
+            i0 = jnp.zeros((), jnp.int32)
+            tr = TickTrace(completed=i0, generated=i0, n_waiting=i0,
+                           n_exec=i0, n_transit=i0,
+                           used_mips=jnp.zeros((), jnp.float32),
+                           active_instances=i0, active_clients=i0)
+            return st._replace(tick=st.tick + 1,
+                               time=st.time + dyn.dt), tr
+
         # --- Generation (paper Alg 1) ---------------------------------
         if probe:
             probe("Generation")
@@ -99,31 +135,51 @@ def make_tick(caps: SimCaps, params: SimParams,
         state, gen_res = scheduler.gen_spawn(
             state, app, caps, gen.fired, gen.api, gen.wait_proposal, k_gen2,
             dyn, params=params, net_rng=k_net_g)
+        if stop_after == "Generation":
+            return early(state)
 
         # --- Disruption (chaos mode: faults, retries, breakers) ----------
         if faults_on:
             if probe:
                 probe("Disruption")
+            stage = (stop_after.split("/", 1)[1]
+                     if stop_after and stop_after.startswith("Disruption/")
+                     else None)
             state = faultsmod.disruption(
                 state, app, caps, params, dyn, keys[-3], keys[-2],
-                keys[-1] if network else None)
+                keys[-1] if network else None, stop_after=stage)
+        if stop_after and stop_after.startswith("Disruption"):
+            return early(state)
 
         # --- Transit (fabric mode: NIC fair-share water-filling) --------
         if network:
             if probe:
                 probe("Transit")
             state = netmod.transit(state, caps, params, dyn, app)
+        if stop_after == "Transit":
+            return early(state)
 
         # --- Dispatching (waiting → execution, load-balanced) ----------
         if probe:
             probe("Dispatch")
         state = scheduler.dispatch(state, app, caps, params, dyn, k_lb,
                                    network=network)
+        if stop_after == "Dispatch":
+            return early(state)
 
         # --- Scheduling (time-shared execution + finish) ----------------
         if probe:
             probe("Execute")
         state, fin_info = scheduler.execute(state, app, caps, params, dyn)
+        if stop_after == "Execute":
+            return early(state)
+
+        # --- Telemetry: span capture (execute cleared only status/rem/
+        # inst, and Derive has not yet respawned over the freed slots) ---
+        if telemetry:
+            if probe:
+                probe("Telemetry")
+            state = telmod.record_spans(state, fin_info, params)
 
         # --- Derivative (spawn successors along the service chain) ------
         if has_edges:  # static: edge-free graphs skip the spawn machinery
@@ -131,11 +187,15 @@ def make_tick(caps: SimCaps, params: SimParams,
                 probe("Derive")
             state = scheduler.derive(state, app, caps, fin_info, k_der,
                                      params=params, net_rng=k_net_d)
+        if stop_after == "Derive":
+            return early(state)
 
         # --- Response (critical-path completion, paper §4.3.2) ----------
         if probe:
             probe("Response")
         state, n_done = scheduler.complete(state, dyn, faults=faults_on)
+        if stop_after == "Response":
+            return early(state)
 
         # --- Scaling & Migration (paper §5) ------------------------------
         if probe:
@@ -155,6 +215,8 @@ def make_tick(caps: SimCaps, params: SimParams,
                 due = (state.tick % dyn.scale_interval) == \
                     (dyn.scale_interval - 1)
                 state = jax.lax.cond(due, do_scale, lambda st: st, state)
+        if stop_after == "Scaling":
+            return early(state)
 
         if probe:
             probe("Trace")
@@ -172,6 +234,13 @@ def make_tick(caps: SimCaps, params: SimParams,
                                      .astype(jnp.int32)),
             active_clients=gen.n_active,
         )
+
+        # --- Telemetry: window accumulate/close (observation-only) ------
+        if telemetry:
+            if probe:
+                probe("Telemetry")
+            state = telmod.close_window(state, params, dyn, trace)
+
         state = state._replace(tick=state.tick + 1, time=state.time + dyn.dt)
         return state, trace
 
@@ -320,12 +389,38 @@ class Simulation:
     _STATIC_FIELDS = ("lb_policy", "share_policy", "scaling_policy",
                       "migration_enabled", "n_ticks", "use_pallas_tick",
                       "pallas_interpret", "network", "waterfill_iters",
-                      "net_hist_bin_s", "faults", "egress_shaping")
+                      "net_hist_bin_s", "faults", "egress_shaping",
+                      "telemetry", "tel_window_ticks", "tel_windows",
+                      "tel_span_k", "tel_span_cap")
 
     def _static_key(self) -> tuple:
         p = self.params
         return (self.caps, self._has_edges, p.max_concurrent > 0,
                 tuple(getattr(p, f) for f in self._STATIC_FIELDS))
+
+    def _make_run_fn(self) -> Callable:
+        """The solo-run program: a plain tick scan, or — telemetry on —
+        the chunked scan-of-scan whose chunk boundaries flush half the
+        metric ring through the io_callback tap (obs/telemetry.py).
+        Exposed so simcheck's jaxpr lint walks the REAL hot-loop program
+        (incl. the declared callback site), not a stand-in."""
+        tick = self._tick
+        n_ticks = self.params.n_ticks
+        if self.params.telemetry != "stream":
+
+            def run_fn(st: SimState, dp: DynParams, app: AppStatic):
+                return jax.lax.scan(lambda s, _: tick(s, dp, app), st,
+                                    None, length=n_ticks)
+
+            return run_fn
+        from ..obs import telemetry as telmod
+        params = self.params
+
+        def run_fn(st: SimState, dp: DynParams, app: AppStatic):
+            return telmod.chunked_scan(lambda s, _: tick(s, dp, app),
+                                       st, params, n_ticks)
+
+        return run_fn
 
     def _get_compiled(self, state: SimState, dyn: DynParams):
         key = (self._static_key(),
@@ -334,12 +429,7 @@ class Simulation:
         if hit is not None:
             return hit, 0.0
         t0 = _time.perf_counter()
-        tick = self._tick
-        n_ticks = self.params.n_ticks
-
-        def run_fn(st: SimState, dp: DynParams, app: AppStatic):
-            return jax.lax.scan(lambda s, _: tick(s, dp, app), st, None,
-                                length=n_ticks)
+        run_fn = self._make_run_fn()
 
         # The input state is consumed: run() builds a fresh one per call,
         # so the [C,*] pool blocks alias the output instead of doubling
@@ -381,6 +471,9 @@ class Simulation:
         out_state, trace = compiled(state, dyn, self.app)
         out_state = jax.block_until_ready(out_state)
         t2 = _time.perf_counter()
+        if self.params.telemetry == "stream":
+            from ..obs import telemetry as telmod
+            telmod.drain_to_exporter(out_state, self.params)
         return SimResult(state=out_state, trace=trace,
                          wall_time_s=t2 - t1, compile_time_s=compile_s)
 
@@ -411,6 +504,14 @@ class Simulation:
         # app axis: batched sweeps vmap over (dyn, app); plain sweeps close
         # over the one shared app (in_axes None keeps it unbatched)
         app_ax = 0 if batched_app else None
+        tel_on = self.params.telemetry == "stream"
+        params = self.params
+        if tel_on:
+            # the flush must NOT sit under a traced cond (vmap-of-cond
+            # rejects IO effects): both batch paths chunk their scans and
+            # flush unconditionally between chunks — under vmap the tap
+            # fires once per sweep point per chunk, rows tagged by lane
+            from ..obs import telemetry as telmod
 
         if hoist:
             tick_on = make_tick(self.caps, self.params, self._has_edges,
@@ -432,8 +533,13 @@ class Simulation:
                     return jax.lax.cond(due, lambda s: on(s, dp_b, app),
                                         lambda s: off(s, dp_b, app), carry)
 
-                states, traces = jax.lax.scan(body, st_b, None,
-                                              length=n_ticks)
+                if tel_on:
+                    flush_b = jax.vmap(lambda s: telmod.flush(s, params))
+                    states, traces = telmod.chunked_scan(
+                        body, st_b, params, n_ticks, flush_fn=flush_b)
+                else:
+                    states, traces = jax.lax.scan(body, st_b, None,
+                                                  length=n_ticks)
                 # traces come out [T, B]; match the scan-inside-vmap layout
                 return states, jax.tree_util.tree_map(
                     lambda x: jnp.swapaxes(x, 0, 1), traces)
@@ -442,8 +548,11 @@ class Simulation:
 
             def run_fn(st: SimState, dp_b: DynParams, app: AppStatic):
                 def one(dp: DynParams, app_p: AppStatic):
-                    return jax.lax.scan(lambda s, _: tick(s, dp, app_p), st,
-                                        None, length=n_ticks)
+                    tick_fn = lambda s, _: tick(s, dp, app_p)
+                    if tel_on:
+                        return telmod.chunked_scan(tick_fn, st, params,
+                                                   n_ticks)
+                    return jax.lax.scan(tick_fn, st, None, length=n_ticks)
                 return jax.vmap(one, in_axes=(0, app_ax))(dp_b, app)
 
         compiled = jax.jit(run_fn).lower(state, dyn_b, app_arg).compile()
@@ -514,6 +623,13 @@ class Simulation:
                         "Simulation's app; shape-changing graphs need a "
                         "separate Simulation")
             app_b = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *apps)
+        if self.params.telemetry == "stream":
+            # auto-tag streamed rows by sweep point unless the caller
+            # already assigned tags (tag is a traced DynParams scalar)
+            tags = np.asarray(dyn_batch.tel_tag)
+            if np.all(tags == 0.0):
+                dyn_batch = dyn_batch._replace(
+                    tel_tag=jnp.arange(B, dtype=jnp.float32))
         state = self.init_state(seed)
         compiled, compile_s = self._get_compiled_batch(state, dyn_batch,
                                                        app_b)
@@ -522,6 +638,9 @@ class Simulation:
                                     app_b if app_b is not None else self.app)
         out_state = jax.block_until_ready(out_state)
         t2 = _time.perf_counter()
+        if self.params.telemetry == "stream":
+            from ..obs import telemetry as telmod
+            telmod.drain_to_exporter(out_state, self.params)
         return SimResult(state=out_state, trace=trace,
                          wall_time_s=t2 - t1, compile_time_s=compile_s)
 

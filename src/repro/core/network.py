@@ -110,6 +110,14 @@ def sample_payload(mean: jnp.ndarray, std: jnp.ndarray, rng: jnp.ndarray
     return jnp.maximum(mean + std * noise, MIN_PAYLOAD_MB)
 
 
+def inflight_mb(cl) -> jnp.ndarray:
+    """Σ remaining MB of transfers on the fabric — the telemetry
+    gauge behind the ``net_mb_inflight`` metric column (obs, §9)."""
+    transit_m = cl.status == CL_TRANSIT
+    return jnp.sum(jnp.where(transit_m, cl.rem_bytes,
+                             jnp.zeros_like(cl.rem_bytes)))
+
+
 def transit(state: SimState, caps: SimCaps, params: SimParams,
             dyn: DynParams, app: AppStatic | None = None) -> SimState:
     """One fabric tick: water-fill every NIC port, advance transfers,

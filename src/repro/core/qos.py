@@ -73,6 +73,10 @@ class QoSReport:
     partitions: int = 0               # zone-pair partitions opened
     slow_episodes: int = 0            # host fail-slow episodes
     slow_time_s: float = 0.0          # Σ host-slow seconds
+    # observability (all-zero unless telemetry="stream", DESIGN.md §9)
+    tel_windows: int = 0              # metric windows closed
+    tel_spans: int = 0                # spans recorded (sampled requests)
+    tel_span_drops: int = 0           # spans dropped at ring capacity
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
@@ -158,6 +162,15 @@ def summarize(sim: Simulation, result: SimResult,
     retries = int(fst.retries)
     recoveries = int(fst.host_recoveries)
 
+    # --- observability (zero-width buffers under telemetry="none") -------
+    tel = st.telemetry
+    tel_windows = int(np.asarray(tel.win).reshape(-1)[0]) \
+        if tel.win.size else 0
+    tel_spans = int(np.asarray(tel.span_n).reshape(-1)[0]) \
+        if tel.span_n.size else 0
+    tel_span_drops = int(np.asarray(tel.span_drops).reshape(-1)[0]) \
+        if tel.span_drops.size else 0
+
     completed = int(st.counters.completed)
     return QoSReport(
         generated_requests=int(st.requests.count),
@@ -207,6 +220,9 @@ def summarize(sim: Simulation, result: SimResult,
         partitions=int(fst.partitions),
         slow_episodes=int(fst.slow_episodes),
         slow_time_s=float(fst.slow_time_s),
+        tel_windows=tel_windows,
+        tel_spans=tel_spans,
+        tel_span_drops=tel_span_drops,
     )
 
 

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import streams
+
 # --------------------------------------------------------------------------
 # Cloudlet status codes (paper §4.2: waiting / execution / finished queues).
 # --------------------------------------------------------------------------
@@ -170,6 +172,21 @@ class SimParams:
     vs_overhead_frac: float = 0.0 # resize churn: vertically-scaled
                                   # instances pay a usage surcharge
 
+    # --- observability (DESIGN.md §9) ------------------------------------
+    telemetry: str = "none"       # "none": zero telemetry state, program
+                                  # bit-identical to the pre-obs engine;
+                                  # "stream": per-window metric rows ring
+                                  # out through a double-buffered
+                                  # io_callback tap + sampled span tracing
+    tel_window_ticks: int = 16    # ticks per metric-row window
+    tel_windows: int = 8          # metric ring capacity W (even; one
+                                  # io_callback flush per W/2 windows)
+    tel_span_k: int = 100         # trace 1 request in k (seeded Bernoulli)
+    tel_span_cap: int = 1024      # span ring capacity (overflow drops
+                                  # are counted exactly, never overwrite)
+    tel_tag: float = 0.0          # row tag (traced; run_batch auto-tags
+                                  # sweep points when left at 0)
+
     # --- backend ---------------------------------------------------------
     use_pallas_tick: bool = False # fused cloudlet_step TPU kernel for the
                                   # execution phase (CPU runs the jnp ref)
@@ -236,6 +253,7 @@ class DynParams(NamedTuple):
     eject_err_thresh: jnp.ndarray
     eject_lat_factor: jnp.ndarray
     eject_cooldown_s: jnp.ndarray
+    tel_tag: jnp.ndarray
 
     @staticmethod
     def from_params(p: "SimParams") -> "DynParams":
@@ -274,7 +292,8 @@ class DynParams(NamedTuple):
             zone_partition_mttr_s=f(p.zone_partition_mttr_s),
             eject_err_thresh=f(p.eject_err_thresh),
             eject_lat_factor=f(p.eject_lat_factor),
-            eject_cooldown_s=f(p.eject_cooldown_s))
+            eject_cooldown_s=f(p.eject_cooldown_s),
+            tel_tag=f(p.tel_tag))
 
 
 class Clients(NamedTuple):
@@ -372,6 +391,15 @@ PHASE_COLUMNS = {
     # (same checker catch as Execute/chaos: the column was riding on
     # Transit's declaration; resolved layouts are unchanged).
     "Disruption/fabric": ("src_host",),
+    # Telemetry (telemetry="stream", DESIGN.md §9) reads finished rows
+    # into the span ring and samples end-of-tick gauges; it only ever
+    # RE-reads columns other phases already pulled into the layout, so
+    # every resolved layout is unchanged and telemetry="none" stays
+    # bit-identical by construction.
+    "Telemetry": ("status", "req", "service", "wait_ticks", "arrival",
+                  "start"),
+    "Telemetry/chaos": ("edge", "attempt"),
+    "Telemetry/fabric": ("src_host", "rem_bytes"),
 }
 
 
@@ -421,8 +449,8 @@ class PoolLayout:
 
 
 @functools.lru_cache(maxsize=None)
-def _layout_for(network: str, faults: str, egress_shaping: bool
-                ) -> PoolLayout:
+def _layout_for(network: str, faults: str, egress_shaping: bool,
+                telemetry: bool = False) -> PoolLayout:
     phases = ["Generation", "Dispatch", "Execute", "Derive"]
     if faults == "chaos":
         phases.append("Disruption")
@@ -433,7 +461,26 @@ def _layout_for(network: str, faults: str, egress_shaping: bool
             phases.append("Disruption/fabric")
         if egress_shaping:
             phases.append("Transit/egress_shaping")
-    need = {c for p in phases for c in PHASE_COLUMNS[p]}
+    if telemetry:
+        # observation-only: the Telemetry declarations are a subset of the
+        # union above in every mode, so the resolved layout never grows
+        phases.append("Telemetry")
+        if faults == "chaos":
+            phases.append("Telemetry/chaos")
+        if network == "fabric":
+            phases.append("Telemetry/fabric")
+    need = set()
+    for p in phases:
+        cols = set(PHASE_COLUMNS[p])
+        if p.startswith("Telemetry"):
+            extra = cols - need
+            if extra:
+                raise ValueError(
+                    f"PHASE_COLUMNS[{p!r}] declares column(s) "
+                    f"{sorted(extra)} that no simulating phase carries in "
+                    "this mode — telemetry is observation-only and must "
+                    "not grow the pool layout")
+        need |= cols
     return PoolLayout(
         i_fields=tuple(n for n in CL_I_FIELDS if n in need),
         f_fields=tuple(n for n in CL_F_FIELDS if n in need))
@@ -442,7 +489,8 @@ def _layout_for(network: str, faults: str, egress_shaping: bool
 def resolve_layout(params: "SimParams") -> PoolLayout:
     """The static pool layout a SimParams' enabled phases require."""
     return _layout_for(params.network, params.faults,
-                       params.network == "fabric" and params.egress_shaping)
+                       params.network == "fabric" and params.egress_shaping,
+                       params.telemetry == "stream")
 
 
 FULL_LAYOUT = _layout_for("fabric", "chaos", True)   # every column
@@ -693,6 +741,76 @@ class FaultStats(NamedTuple):
     slow_time_s: jnp.ndarray     # f32 Σ host-slow seconds
 
 
+# --------------------------------------------------------------------------
+# Telemetry schemas (DESIGN.md §9).  Declared here, next to POOL_COLUMNS,
+# because zeros_state sizes the TelemetryState buffers off them; the
+# host-side renderers (repro/obs) re-export these tuples.
+# --------------------------------------------------------------------------
+
+# One metric row per closed window, in ring-storage order.
+TEL_METRIC_COLUMNS = (
+    "window",            # window index (monotone, 0-based)
+    "time_s",            # sim time at window close
+    "tag",               # sweep-point tag (dyn.tel_tag)
+    "completed",         # requests completed in the window (sum)
+    "generated",         # requests generated in the window (sum)
+    "n_waiting",         # gauges sampled at window close ↓
+    "n_exec",
+    "n_transit",
+    "used_mips",
+    "active_instances",
+    "net_mb_inflight",   # Σ rem_bytes in TRANSIT (fabric mode; else 0)
+    "failed_attempts",   # cumulative FaultStats at close (0 faults off)
+    "retries",           # cumulative FaultStats at close
+    "spans",             # spans recorded so far (cumulative)
+    "span_drops",        # spans dropped at ring capacity (cumulative)
+)
+# Window-summed accumulators (prefix of the row's sum section).
+TEL_ACC_COLUMNS = ("completed", "generated")
+# One span per sampled finished cloudlet (hop), split by block dtype.
+TEL_SPAN_I_COLUMNS = ("req", "service", "inst", "host", "src_host",
+                      "edge", "attempt", "wait_ticks")
+TEL_SPAN_F_COLUMNS = ("arrival", "start", "finish")
+
+
+class TelemetryState(NamedTuple):
+    """Device-side observability state (telemetry="stream", DESIGN.md §9).
+
+    Mode-keyed like :class:`FaultState`: every buffer is zero-width under
+    ``telemetry="none"`` so the default scan carry pays nothing.  The
+    metric ring is double-buffered — ticks write rows into half the ring
+    while the io_callback tap flushes the other, just-completed half.
+    The span ring is append-until-full: overflow never overwrites, it
+    increments the exact drop counter instead.
+    """
+
+    ring: jnp.ndarray        # [W, K] f32 metric rows (K = TEL_METRIC_…)
+    acc: jnp.ndarray         # [len(TEL_ACC_COLUMNS)] f32 open-window sums
+    win: jnp.ndarray         # [1] i32 windows closed so far
+    span_i: jnp.ndarray      # [SP, NSI] i32 span ints
+    span_f: jnp.ndarray      # [SP, NSF] f32 span timestamps
+    span_n: jnp.ndarray      # [1] i32 spans recorded (≤ SP)
+    span_drops: jnp.ndarray  # [1] i32 spans dropped at capacity
+    sample: jnp.ndarray      # [R] u8 1 = request is traced (seeded 1-in-k)
+
+
+def validate_telemetry(params: "SimParams") -> None:
+    if params.telemetry not in ("none", "stream"):
+        raise ValueError(
+            f"SimParams.telemetry must be 'none' or 'stream', "
+            f"got {params.telemetry!r}")
+    if params.telemetry == "stream":
+        if params.tel_windows < 2 or params.tel_windows % 2:
+            raise ValueError(
+                "SimParams.tel_windows must be an even int ≥ 2 (the ring "
+                f"flushes in halves), got {params.tel_windows!r}")
+        for f in ("tel_window_ticks", "tel_span_k", "tel_span_cap"):
+            v = getattr(params, f)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"SimParams.{f} must be an int ≥ 1, got {v!r}")
+
+
 class SchedState(NamedTuple):
     """Service→replica dispatch tables, maintained incrementally.
 
@@ -748,6 +866,7 @@ class SimState(NamedTuple):
     counters: Counters
     fault: FaultState
     fstats: FaultStats
+    telemetry: TelemetryState
 
 
 class TickTrace(NamedTuple):
@@ -792,6 +911,7 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
     partition state) is zero-width.
     """
     caps.validate()
+    validate_telemetry(params)
     f32 = jnp.float32
     i32 = jnp.int32
     Nc, R, C, I, V = (caps.n_clients, caps.max_requests, caps.max_cloudlets,
@@ -901,6 +1021,45 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
                             + [jnp.zeros((), f32)]
                             + [jnp.zeros((), i32)] * 5
                             + [jnp.zeros((), f32)])),
+        telemetry=_zeros_telemetry(params, R, rng),
+    )
+
+
+def _zeros_telemetry(params: SimParams, R: int, rng) -> TelemetryState:
+    """Initial telemetry state: zero-width under ``telemetry="none"``
+    (the FaultState pattern — the default carry pays nothing), sized from
+    the tel_* knobs under ``"stream"``.
+
+    The 1-in-k span sample mask is drawn once here from a child key
+    *folded off* the root rng under the named label ``"tel_sample"``:
+    ``fold_in`` leaves the parent key untouched, so ``state.rng`` — and
+    with it every simulation stream — is bit-identical with telemetry on
+    or off (the golden-matrix fifth combo), and the RNG auditor sees a
+    named derivation if the init path is ever recorded.
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    on = params.telemetry == "stream"
+    K = len(TEL_METRIC_COLUMNS)
+    NA = len(TEL_ACC_COLUMNS)
+    NSI = len(TEL_SPAN_I_COLUMNS)
+    NSF = len(TEL_SPAN_F_COLUMNS)
+    W = params.tel_windows if on else 0
+    SP = params.tel_span_cap if on else 0
+    if on:
+        k_sample = streams.fold_in(rng, 0, name="tel_sample")
+        sample = (jax.random.uniform(k_sample, (R,))
+                  < 1.0 / params.tel_span_k).astype(jnp.uint8)
+    else:
+        sample = jnp.zeros((0,), jnp.uint8)
+    return TelemetryState(
+        ring=jnp.zeros((W, K), f32),
+        acc=jnp.zeros((NA if on else 0,), f32),
+        win=jnp.zeros((1 if on else 0,), i32),
+        span_i=jnp.zeros((SP, NSI), i32),
+        span_f=jnp.zeros((SP, NSF), f32),
+        span_n=jnp.zeros((1 if on else 0,), i32),
+        span_drops=jnp.zeros((1 if on else 0,), i32),
+        sample=sample,
     )
 
 

@@ -1,0 +1,31 @@
+"""Opt-in observability for the tensor DES (DESIGN.md §9).
+
+Three coordinated pieces, all default-off and bit-identical when off:
+
+- :mod:`.telemetry` — device-side metric-row ring + sampled span ring,
+  double-buffered io_callback flush (the paper's Exporter, §3.1).
+- :mod:`.export` — host-side exporter registry rendering OTel /
+  Prometheus-style rows live during runs.
+- :mod:`.spans` — host-side trace-tree reconstruction for the seeded
+  1-in-k request sample, cross-checked against the tropical-closure
+  critical path (paper §4.3.2).
+- :mod:`.profile` — per-phase wall/cost attribution via prefix programs
+  (ROADMAP item b).
+
+Submodules import lazily: ``profile`` imports ``core.engine`` (which
+itself imports ``obs.telemetry``), so an eager package import would
+cycle.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("telemetry", "export", "spans", "profile")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

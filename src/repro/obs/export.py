@@ -1,0 +1,161 @@
+"""Host-side metric exporter (paper §3.1 Exporter/Reporter, §9).
+
+:func:`dispatch` is the io_callback landing zone: every flush hands it a
+``[n, K]`` float32 block of sealed metric rows (K columns =
+``types.TEL_METRIC_COLUMNS``; batched runs deliver one block per sweep
+point per flush, tagged by the ``tag`` column).  Registered sinks see
+each row as a plain dict; the built-in renderers format them as
+Prometheus exposition lines or OTel-style JSON.
+
+The default sink just accumulates rows in memory
+(:class:`RowCollector`), so tests and `QoSReport` cross-checks can
+compare the streamed view against end-of-run aggregates.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+from typing import Callable, List
+
+import numpy as np
+
+from ..core.types import TEL_METRIC_COLUMNS
+
+_COUNTERS = ("completed", "generated")      # per-window sums
+_CUMULATIVE = ("failed_attempts", "retries", "spans", "span_drops")
+
+_lock = threading.Lock()
+_sinks: List[Callable[[dict], None]] = []
+
+
+def install(sink: Callable[[dict], None]) -> None:
+    """Register a sink; it receives one dict per streamed metric row."""
+    with _lock:
+        _sinks.append(sink)
+
+
+def uninstall(sink: Callable[[dict], None]) -> None:
+    with _lock:
+        with contextlib.suppress(ValueError):
+            _sinks.remove(sink)
+
+
+def dispatch(rows) -> None:
+    """Deliver a flushed row block to every installed sink.
+
+    Called from the io_callback tap (device thread) and from the
+    end-of-run drain; tolerant of any leading batching — rows are
+    reshaped to ``[-1, K]``.
+    """
+    rows = np.asarray(rows, np.float32).reshape(-1,
+                                                len(TEL_METRIC_COLUMNS))
+    with _lock:
+        sinks = list(_sinks)
+    if not sinks:
+        return
+    for r in rows:
+        d = {n: float(v) for n, v in zip(TEL_METRIC_COLUMNS, r)}
+        for s in sinks:
+            s(d)
+
+
+class RowCollector:
+    """Thread-safe accumulating sink (the default test/report consumer)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._rows: List[dict] = []
+
+    def __call__(self, row: dict) -> None:
+        with self._lock:
+            self._rows.append(row)
+
+    @property
+    def rows(self) -> List[dict]:
+        with self._lock:
+            return list(self._rows)
+
+    def rows_np(self) -> np.ndarray:
+        """[n, K] float32 in column order TEL_METRIC_COLUMNS."""
+        rows = self.rows
+        out = np.zeros((len(rows), len(TEL_METRIC_COLUMNS)), np.float32)
+        for i, r in enumerate(rows):
+            out[i] = [r[n] for n in TEL_METRIC_COLUMNS]
+        return out
+
+
+@contextlib.contextmanager
+def collecting():
+    """``with export.collecting() as rows:`` — scoped RowCollector."""
+    c = RowCollector()
+    install(c)
+    try:
+        yield c
+    finally:
+        uninstall(c)
+
+
+# ----------------------------------------------------------------------
+# Renderers
+# ----------------------------------------------------------------------
+def prometheus_line(row: dict, prefix: str = "repro") -> str:
+    """One Prometheus exposition block per row (gauge per column)."""
+    tag = int(row.get("tag", 0.0))
+    win = int(row.get("window", 0.0))
+    ts = row.get("time_s", 0.0)
+    labels = f'{{point="{tag}",window="{win}"}}'
+    lines = []
+    for n in TEL_METRIC_COLUMNS:
+        if n in ("window", "tag", "time_s"):
+            continue
+        kind = "counter" if n in _COUNTERS + _CUMULATIVE else "gauge"
+        lines.append(f"# TYPE {prefix}_{n} {kind}")
+        lines.append(f"{prefix}_{n}{labels} {row[n]:g} {ts:g}")
+    return "\n".join(lines)
+
+
+def otel_json(row: dict) -> str:
+    """OTel-style JSON datapoint for the whole row."""
+    return json.dumps({
+        "resource": {"point": int(row.get("tag", 0.0))},
+        "time_s": row.get("time_s", 0.0),
+        "window": int(row.get("window", 0.0)),
+        "metrics": {n: row[n] for n in TEL_METRIC_COLUMNS
+                    if n not in ("window", "tag", "time_s")},
+    }, sort_keys=True)
+
+
+def printer(render: Callable[[dict], str] = otel_json,
+            out=None) -> Callable[[dict], None]:
+    """Sink that renders each row and prints it (live streaming view)."""
+    import sys
+    stream = out or sys.stdout
+
+    def sink(row: dict) -> None:
+        print(render(row), file=stream, flush=True)
+
+    return sink
+
+
+def validate_rows(rows: List[dict]) -> None:
+    """Schema check for CI: every row carries every column, finite,
+    with monotone non-negative window ids per tag."""
+    if not rows:
+        raise ValueError("no telemetry rows streamed")
+    per_tag: dict = {}
+    for i, r in enumerate(rows):
+        missing = [n for n in TEL_METRIC_COLUMNS if n not in r]
+        if missing:
+            raise ValueError(f"row {i} missing columns {missing}")
+        bad = [n for n in TEL_METRIC_COLUMNS if not np.isfinite(r[n])]
+        if bad:
+            raise ValueError(f"row {i} non-finite columns {bad}")
+        if r["window"] < 0:
+            raise ValueError(f"row {i} negative window id")
+        per_tag.setdefault(r["tag"], []).append(r["window"])
+    for tag, wins in per_tag.items():
+        if sorted(wins) != list(range(len(wins))):
+            raise ValueError(
+                f"tag {tag}: windows {sorted(wins)} are not the "
+                f"contiguous range 0..{len(wins) - 1}")

@@ -1,0 +1,152 @@
+"""Per-phase profiling via prefix programs (ROADMAP item b, §9).
+
+XLA fuses the whole tick into one executable, so no in-program timer
+can attribute wall cost to a phase.  Instead we build a *family* of
+programs with ``make_tick(stop_after=...)`` — each truncates the tick
+right after one phase (keeping that phase's outputs live in the carry,
+so DCE cannot strip the work being timed) — scan each for the same
+number of ticks, and difference the best-of-N walls:
+
+    cost(phase_i) ≈ wall(prefix through i) − wall(prefix through i−1)
+
+The same trick descends INTO the Disruption phase through
+``faults.disruption(stop_after=<stage>)`` (schedule / doom / respawn /
+breaker / ejection), which is what finally attributes the ~1.7× chaos
+wall overhead (DESIGN.md §7 cost table).
+
+Caveats: prefix programs re-fuse, so deltas are estimates of marginal
+cost, not exact slices — small negative deltas mean the longer prefix
+fused better than the shorter one; treat |delta| below a few percent of
+total as noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from ..core.engine import Simulation, make_tick
+from ..core.faults import DISRUPTION_STAGES
+from ..core.types import DynParams
+
+
+@dataclasses.dataclass
+class PhaseCost:
+    """One row of a profile: marginal wall attributed to ``label``."""
+
+    label: str
+    wall_s: float     # best wall of the prefix ENDING at this phase
+    delta_s: float    # wall(this prefix) − wall(previous prefix)
+    share: float      # delta_s / wall(full program)
+
+
+def _time_program(sim: Simulation, stop_after: Optional[str],
+                  n_ticks: int, reps: int) -> float:
+    """Best-of-N wall of the prefix program (compile excluded)."""
+    tick = make_tick(sim.caps, sim.params, sim._has_edges,
+                     stop_after=stop_after)
+
+    def run_fn(st, dp, app):
+        return jax.lax.scan(lambda s, _: tick(s, dp, app), st, None,
+                            length=n_ticks)
+
+    fn = jax.jit(run_fn)
+    dyn = DynParams.from_params(sim.params)
+    state = sim._unalias(sim.init_state())
+    jax.block_until_ready(fn(state, dyn, sim.app))    # compile + warm
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        state = sim._unalias(sim.init_state())
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(state, dyn, sim.app))
+        best = min(best, _time.perf_counter() - t0)
+    return best
+
+
+def tick_phases(sim: Simulation) -> List[str]:
+    """The phases this sim's mode combo actually builds, in tick order."""
+    p = sim.params
+    ph = ["Generation"]
+    if p.faults == "chaos":
+        ph.append("Disruption")
+    if p.network == "fabric":
+        ph.append("Transit")
+    ph += ["Dispatch", "Execute"]
+    if sim._has_edges:
+        ph.append("Derive")
+    ph.append("Response")
+    if p.scaling_policy or p.migration_enabled:
+        ph.append("Scaling")
+    return ph
+
+
+def _diff(labels: List[str], walls: List[float], base: float,
+          total: float) -> List[PhaseCost]:
+    out, prev = [], base
+    for label, wall in zip(labels, walls):
+        out.append(PhaseCost(label=label, wall_s=wall,
+                             delta_s=wall - prev,
+                             share=(wall - prev) / max(total, 1e-12)))
+        prev = wall
+    return out
+
+
+def phase_breakdown(sim: Simulation, reps: int = 3,
+                    n_ticks: Optional[int] = None) -> List[PhaseCost]:
+    """Wall cost per tick phase (prefix-difference, best-of-``reps``).
+
+    The final row ("Trace+rest") is the full program minus the longest
+    prefix: trace assembly plus whatever the mode adds after Scaling.
+    """
+    T = n_ticks or sim.params.n_ticks
+    phases = tick_phases(sim)
+    walls = [_time_program(sim, ph, T, reps) for ph in phases]
+    full = _time_program(sim, None, T, reps)
+    costs = _diff(phases, walls, base=0.0, total=full)
+    costs.append(PhaseCost(label="Trace+rest", wall_s=full,
+                           delta_s=full - walls[-1],
+                           share=(full - walls[-1]) / max(full, 1e-12)))
+    return costs
+
+
+def disruption_breakdown(sim: Simulation, reps: int = 3,
+                         n_ticks: Optional[int] = None) -> List[PhaseCost]:
+    """Stage-level cost attribution INSIDE the Disruption phase.
+
+    Baseline = prefix through Generation (the phase just before
+    Disruption); stages then cut after schedule / doom / respawn /
+    breaker, and the full-phase prefix adds the outlier-ejection tail.
+    """
+    if sim.params.faults != "chaos":
+        raise ValueError("disruption_breakdown needs faults='chaos'")
+    T = n_ticks or sim.params.n_ticks
+    base = _time_program(sim, "Generation", T, reps)
+    full = _time_program(sim, "Disruption", T, reps)
+    stages = [f"Disruption/{s}" for s in DISRUPTION_STAGES]
+    walls = [_time_program(sim, s, T, reps) for s in stages]
+    costs = _diff(list(DISRUPTION_STAGES), walls, base=base,
+                  total=full - base)
+    costs.append(PhaseCost(label="ejection", wall_s=full,
+                           delta_s=full - walls[-1],
+                           share=(full - walls[-1])
+                           / max(full - base, 1e-12)))
+    return costs
+
+
+def format_table(costs: List[PhaseCost], title: str = "phase") -> str:
+    """Markdown cost table (DESIGN.md §7 / example output)."""
+    lines = [f"| {title} | prefix wall (s) | delta (s) | share |",
+             "|---|---|---|---|"]
+    for c in costs:
+        lines.append(f"| {c.label} | {c.wall_s:.4f} | {c.delta_s:+.4f} "
+                     f"| {100.0 * c.share:+.1f}% |")
+    return "\n".join(lines)
+
+
+def profile_np(costs: List[PhaseCost]) -> np.ndarray:
+    """[n, 3] (wall, delta, share) float64 — programmatic consumers."""
+    return np.array([[c.wall_s, c.delta_s, c.share] for c in costs],
+                    np.float64)

@@ -1,0 +1,233 @@
+"""Device-side telemetry: metric-row ring + sampled span ring (§9).
+
+Two fixed-capacity buffers ride the scan carry (``TelemetryState``):
+
+- the **metric ring** ``[W, K]`` holds one row per closed window of
+  ``tel_window_ticks`` ticks; it is double-buffered — while ticks write
+  rows into one half, :func:`flush` hands the other, just-completed half
+  to the host exporter through ``jax.experimental.io_callback``;
+- the **span ring** ``[SP, NSI|NSF]`` appends one span per finished
+  cloudlet (hop) of a seeded 1-in-k request sample; at capacity it never
+  overwrites — it counts every dropped span exactly instead.
+
+Everything here is observation-only: no tick RNG is consumed (the sample
+mask is drawn once at init from a named ``fold_in`` stream), no sim
+column is written, and the pool layout is provably unchanged
+(``types._layout_for`` rejects any Telemetry phase column outside the
+mode's existing set).  ``telemetry="none"`` carries zero-width buffers
+and builds the exact pre-observability program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from ..analysis import jaxpr_lint
+from ..core import network as netmod
+from ..core.types import (CL_EXEC, CL_TRANSIT, CL_WAITING,
+                          TEL_METRIC_COLUMNS, DynParams, SimParams,
+                          SimState, TickTrace)
+from . import export
+
+_COL = {n: i for i, n in enumerate(TEL_METRIC_COLUMNS)}
+
+
+def flush_ticks(params: SimParams) -> int:
+    """Ticks between io_callback flushes: half the ring's windows."""
+    return params.tel_window_ticks * (params.tel_windows // 2)
+
+
+def _telemetry_tap(rows) -> None:
+    """Host-side flush target — the ONE declared callback in the hot
+    loop (jaxpr lint's allowlist is keyed on this function's name)."""
+    export.dispatch(np.asarray(rows))
+
+
+jaxpr_lint.declare_callback("_telemetry_tap")
+
+
+# ----------------------------------------------------------------------
+# In-tick recording (pure; traced inside the scan body)
+# ----------------------------------------------------------------------
+def record_spans(state: SimState, info, params: SimParams) -> SimState:
+    """Append one span per finished cloudlet of a sampled request.
+
+    Runs between Execute and Derive: ``execute`` clears only
+    status/rem/inst on finish, so the descriptive columns (req, service,
+    wait_ticks, arrival, start — plus edge/attempt/src_host where the
+    mode carries them) are still readable, and Derive has not yet
+    respawned over the freed slots.  The ring is append-until-full with
+    an exact overflow counter (never a silent cap).
+    """
+    cl, tel = state.cloudlets, state.telemetry
+    i32, f32 = jnp.int32, jnp.float32
+    C = info.fin.shape[0]
+    SP = tel.span_i.shape[0]
+
+    r_safe = jnp.maximum(info.pre_req, 0)
+    sampled = info.fin & (info.pre_req >= 0) & (tel.sample[r_safe] > 0)
+    # rank-compact the sampled finishers onto ring slots [span_n, …)
+    rank = jnp.cumsum(sampled.astype(i32)) - 1
+    dst = tel.span_n[0] + rank
+    keep = sampled & (dst < SP)
+    n_want = jnp.sum(sampled.astype(i32))
+    n_keep = jnp.sum(keep.astype(i32))
+    idx = jnp.where(keep, dst, SP)          # SP = drop sentinel
+
+    host = jnp.where(info.pre_inst >= 0,
+                     state.instances.host[jnp.maximum(info.pre_inst, 0)],
+                     -1)
+    cols = cl.layout.columns
+    neg1 = jnp.full((C,), -1, i32)
+    edge = cl.edge if "edge" in cols else neg1
+    attempt = cl.attempt if "attempt" in cols else jnp.zeros((C,), i32)
+    src_host = cl.src_host if "src_host" in cols else neg1
+    # column order == TEL_SPAN_I_COLUMNS / TEL_SPAN_F_COLUMNS
+    rows_i = jnp.stack([cl.req, cl.service, info.pre_inst, host, src_host,
+                        edge, attempt, cl.wait_ticks], axis=1)
+    rows_f = jnp.stack([cl.arrival, cl.start, info.tfin], axis=1)
+
+    tel = tel._replace(
+        span_i=tel.span_i.at[idx].set(rows_i, mode="drop"),
+        span_f=tel.span_f.at[idx].set(rows_f, mode="drop"),
+        span_n=tel.span_n + n_keep,
+        span_drops=tel.span_drops + (n_want - n_keep))
+    return state._replace(telemetry=tel)
+
+
+def close_window(state: SimState, params: SimParams, dyn: DynParams,
+                 trace: TickTrace) -> SimState:
+    """Accumulate this tick into the open window; on the window's last
+    tick, seal a metric row into the ring slot ``win % W``."""
+    tel = state.telemetry
+    f32, i32 = jnp.float32, jnp.int32
+    W = params.tel_windows
+    Wt = params.tel_window_ticks
+
+    acc = tel.acc + jnp.stack([trace.completed.astype(f32),
+                               trace.generated.astype(f32)])
+    due = (state.tick % Wt) == (Wt - 1)
+
+    if params.network == "fabric":
+        inflight = netmod.inflight_mb(state.cloudlets)
+    else:
+        inflight = jnp.zeros((), f32)
+    if params.faults == "chaos":
+        failed = state.fstats.failed_attempts.astype(f32)
+        retries = state.fstats.retries.astype(f32)
+    else:
+        failed = retries = jnp.zeros((), f32)
+
+    row = jnp.stack([                       # order == TEL_METRIC_COLUMNS
+        tel.win[0].astype(f32),
+        state.time + dyn.dt,
+        dyn.tel_tag,
+        acc[0], acc[1],
+        trace.n_waiting.astype(f32),
+        trace.n_exec.astype(f32),
+        trace.n_transit.astype(f32),
+        trace.used_mips,
+        trace.active_instances.astype(f32),
+        inflight, failed, retries,
+        tel.span_n[0].astype(f32),
+        tel.span_drops[0].astype(f32)])
+
+    slot = tel.win[0] % W
+    ring = tel.ring.at[slot].set(jnp.where(due, row, tel.ring[slot]))
+    tel = tel._replace(ring=ring,
+                       acc=jnp.where(due, jnp.zeros_like(acc), acc),
+                       win=tel.win + due.astype(i32))
+    return state._replace(telemetry=tel)
+
+
+# ----------------------------------------------------------------------
+# Flush + chunked scan (the io_callback lives OUTSIDE the tick scan)
+# ----------------------------------------------------------------------
+def flush(state: SimState, params: SimParams) -> SimState:
+    """Tap the just-completed half of the metric ring out to the host.
+
+    Called between chunks of :func:`chunked_scan`, i.e. every
+    ``flush_ticks`` ticks — exactly one window half is newly sealed, so
+    the slice alternates [0, W/2) / [W/2, W) and never races the half
+    the next chunk writes.  ``ordered=False``: flushes carry their own
+    window indices, so the exporter can reorder safely.
+    """
+    tel = state.telemetry
+    W = params.tel_windows
+    half = W // 2
+    start = (tel.win[0] - half) % W
+    rows = jax.lax.dynamic_slice_in_dim(tel.ring, start, half, axis=0)
+    io_callback(_telemetry_tap, None, rows, ordered=False)
+    return state
+
+
+def chunked_scan(tick_fn, state, params: SimParams, n_ticks: int,
+                 flush_fn=None):
+    """Scan ``tick_fn`` for ``n_ticks`` with a flush between chunks.
+
+    The flush must NOT sit behind a ``lax.cond`` inside the tick scan —
+    vmap-of-cond rejects IO effects, which would sink ``run_batch``.
+    Instead the run becomes an outer scan over chunks of ``flush_ticks``
+    ticks whose body flushes unconditionally; under vmap the callback
+    then fires once per sweep point per chunk with that point's rows.
+    Traces are reshaped back to the flat [n_ticks, …] layout, so the
+    result is numerically identical to the plain scan.
+    """
+    chunk = flush_ticks(params)
+    n_chunks, rem = divmod(n_ticks, chunk)
+    if flush_fn is None:
+        flush_fn = lambda s: flush(s, params)
+    traces = []
+
+    def chunk_body(s, _):
+        s, tr = jax.lax.scan(tick_fn, s, None, length=chunk)
+        return flush_fn(s), tr
+
+    if n_chunks:
+        state, tr = jax.lax.scan(chunk_body, state, None, length=n_chunks)
+        traces.append(jax.tree_util.tree_map(
+            lambda x: x.reshape((n_chunks * chunk,) + x.shape[2:]), tr))
+    if rem:                       # tail windows drain host-side after run
+        state, tr = jax.lax.scan(tick_fn, state, None, length=rem)
+        traces.append(tr)
+    trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=0), *traces)
+    return state, trace
+
+
+# ----------------------------------------------------------------------
+# Host-side drain (rows sealed but not yet flushed when the run ends)
+# ----------------------------------------------------------------------
+def drain_rows(state: SimState, params: SimParams) -> np.ndarray:
+    """Collect the sealed-but-unflushed tail of the metric ring.
+
+    Returns ``[n, K]`` float32 (empty when telemetry is off).  Batched
+    final states ([B, W, K] rings) drain lane by lane, concatenated.
+    """
+    ring = np.asarray(state.telemetry.ring)
+    win = np.asarray(state.telemetry.win)
+    if ring.size == 0:
+        return np.zeros((0, len(TEL_METRIC_COLUMNS)), np.float32)
+    if ring.ndim == 3:
+        return np.concatenate(
+            [_drain_one(ring[b], int(win[b, 0]), params)
+             for b in range(ring.shape[0])], axis=0)
+    return _drain_one(ring, int(win[0]), params)
+
+
+def _drain_one(ring: np.ndarray, w: int, params: SimParams) -> np.ndarray:
+    W = params.tel_windows
+    half = W // 2
+    flushed = (w // half) * half            # sealed rows already tapped
+    idx = [(flushed + j) % W for j in range(w - flushed)]
+    if not idx:
+        return np.zeros((0, ring.shape[1]), np.float32)
+    return ring[idx]
+
+
+def drain_to_exporter(state: SimState, params: SimParams) -> None:
+    rows = drain_rows(state, params)
+    if rows.size:
+        export.dispatch(rows)

@@ -143,7 +143,9 @@ def test_layout_is_static_aux_data():
 from test_network import _digest_f32  # one digest scheme for all goldens
 
 
-def matrix_sim(network: str, faults: str):
+def matrix_sim(network: str, faults: str, **overrides):
+    """The golden-matrix scenario; ``overrides`` lets observation-only
+    knobs (telemetry, tests/test_obs.py) ride the same pinned digests."""
     caps = SimCaps(n_clients=16, max_requests=512, max_cloudlets=512,
                    max_instances=8, n_vms=4, d_max=2, max_replicas=2)
     kw = dict(dt=0.05, n_ticks=300, n_clients=12, spawn_rate=5.0,
@@ -156,6 +158,7 @@ def matrix_sim(network: str, faults: str):
     if faults == "chaos":
         kw.update(host_mtbf_s=20.0, host_mttr_s=5.0, retry_timeout_s=3.0,
                   retry_budget=2, inst_kill_rate=0.01)
+    kw.update(overrides)
     params = SimParams(**kw)
     tmpl = InstanceTemplate(mips=8000.0, limit_mips=16000.0, replicas=2)
     return Simulation(diamond(mi=400.0), caps=caps, params=params,

@@ -35,6 +35,9 @@ GOLDEN_STREAM_DIGESTS = {
     "uniform+chaos": "ef15e81868ba91e7",
     "fabric+none": "3c57f57cd8b23c38",
     "fabric+chaos": "bceab1a96eb2745f",
+    # telemetry is observation-only: NO tick RNG consumed, so the fifth
+    # combo's topology is pinned EQUAL to fabric+chaos (PR 8)
+    "fabric+chaos+telemetry": "bceab1a96eb2745f",
 }
 
 
@@ -141,10 +144,11 @@ def test_layout_checker_clean_on_real_registry():
 # Layout property: absent-column reads raise under every mode combo
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("network,faults,egress", layout_check.COMBOS)
-def test_absent_column_read_raises(network, faults, egress):
+@pytest.mark.parametrize("network,faults,egress,telemetry",
+                         layout_check.COMBOS)
+def test_absent_column_read_raises(network, faults, egress, telemetry):
     full = _layout_for("fabric", "chaos", True)
-    layout = _layout_for(network, faults, egress)
+    layout = _layout_for(network, faults, egress, telemetry)
     for col in full.i_fields:
         if col not in layout.i_fields:
             with pytest.raises(KeyError):
