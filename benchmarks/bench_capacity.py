@@ -40,7 +40,7 @@ def flat_services(n: int, mi: float) -> "ServiceGraph":
 
 def build_case(n_requests, n_services, replicas, fanout=1,
                use_pallas_interpret=False, network=False, faults=False,
-               chaos2=False, telemetry=False):
+               chaos2=False, telemetry=False, slo=False):
     """Build a capacity Simulation sized to the Table 2 object counts;
     returns (sim, meta) where meta records the sizing decisions.
 
@@ -65,6 +65,14 @@ def build_case(n_requests, n_services, replicas, fanout=1,
     metric rows flushed through the io_callback tap every 16 ticks plus
     1-in-100 span sampling — the delta over the telemetry-off case is
     the observation cost (target ≤ 1.05×, tracked as ``<tag>+obs``).
+
+    ``slo=True`` (implies ``telemetry``) additionally compiles the
+    Alerting stage (DESIGN.md §10) with an ENABLED run-wide objective, so
+    the SLI accumulate, window seal, burn rules, state machine and event
+    ring all execute every tick — the delta over ``+obs`` is the alert
+    plane's cost (tracked as ``<tag>+slo``, target ≤ 1.1× telemetry-off:
+    the SLI scatter-add is real per-tick pool work, not pure
+    observation).
     """
     mi = 50.0
     if fanout > 1:
@@ -120,7 +128,15 @@ def build_case(n_requests, n_services, replicas, fanout=1,
     tel_kw = dict(
         telemetry="stream", tel_window_ticks=16, tel_windows=8,
         tel_span_k=100, tel_span_cap=4096,
-    ) if telemetry else {}
+        # staging budget: ~15 sampled finishers/tick expected at case1b —
+        # without it the 4096-slot ring re-inflates the per-tick span
+        # build the rank compaction exists to avoid
+        tel_span_tick_cap=64,
+    ) if (telemetry or slo) else {}
+    if slo:
+        tel_kw.update(alerting="burn", slo_budget=0.05,
+                      slo_short_wins=2, slo_long_wins=4,
+                      slo_for_ticks=2, slo_event_cap=256)
     params = SimParams(
         dt=dt, n_ticks=n_ticks, n_clients=nc,
         spawn_rate=nc / 5.0, wait_lo=2.0, wait_hi=6.0,
@@ -167,7 +183,8 @@ CASES = {
 
 def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
                 network: bool = False, faults: bool = False,
-                chaos2: bool = False, telemetry: bool = False) -> dict:
+                chaos2: bool = False, telemetry: bool = False,
+                slo: bool = False) -> dict:
     """One BENCH_perf.json record: wall seconds + ticks/sec for a Table 2
     case.  ``scale`` shrinks the request count (pallas-interpret runs are
     orders of magnitude slower than compiled backends).  ``network=True``
@@ -175,7 +192,8 @@ def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
     ``<tag>+net``), ``faults=True`` with the Disruption phase on
     (``<tag>+faults``), ``chaos2=True`` with the full gray-failure
     surface on (``<tag>+chaos2``), ``telemetry=True`` with streaming
-    observability on (``<tag>+obs``), so each phase's overhead is
+    observability on (``<tag>+obs``), ``slo=True`` with burn-rate
+    alerting on top (``<tag>+slo``), so each phase's overhead is
     tracked PR-over-PR."""
     n_requests, n_services, replicas, cpr, fanout = CASES[tag]
     n_requests = max(int(n_requests * scale), 100)
@@ -183,11 +201,11 @@ def perf_record(tag: str, backend: str = "jnp", scale: float = 1.0,
                            use_pallas_interpret=(backend
                                                  == "pallas-interpret"),
                            network=network, faults=faults, chaos2=chaos2,
-                           telemetry=telemetry)
+                           telemetry=telemetry, slo=slo)
     res = sim.run()
     suffix = ("+net" if network else "") \
         + ("+chaos2" if chaos2 else ("+faults" if faults else "")) \
-        + ("+obs" if telemetry else "")
+        + ("+slo" if slo else ("+obs" if telemetry else ""))
     return dict(
         case=tag + suffix, backend=backend, scale=scale,
         requests=int(res.state.requests.count),

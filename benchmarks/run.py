@@ -56,70 +56,49 @@ def write_perf_json(path: str, cases, repeats: int = 2) -> None:
         records.append(best)
         print(f"# perf {tag}: {best['wall_s']:.2f}s "
               f"({best['ticks_per_s']:.0f} ticks/s, best of {repeats})")
-    # network-fabric overhead on case1b: same case with the Transit phase
-    # enabled (amply-provisioned NICs) — the wall-time ratio over the
-    # network-off run is the phase's per-tick cost (target ≤ 1.3×)
+    # Per-phase overhead ratios on case1b — each variant re-runs the same
+    # case with one more phase compiled in, and the wall ratio over the
+    # phase-off run prices that phase's per-tick cost:
+    #   +net    Transit (amply-provisioned NICs)           target ≤ 1.3×
+    #   +faults Disruption, mild chaos (DESIGN.md §7)      target ≤ 1.3×
+    #   +chaos2 FULL §7.1 gray surface on top              target ≤ 1.3×
+    #   +obs    streaming telemetry (§9)                   target ≤ 1.05×
+    #   +slo    burn-rate Alerting on top, objectives ON   target ≤ 1.1×
+    #           (its [C,2] SLI scatter-add is real per-tick pool work
+    #           the pure-observation budget doesn't cover)
+    # Baseline and variant repeats are INTERLEAVED (base, variant, base,
+    # variant, …) and each side takes its own best: the container's wall
+    # clock drifts several percent over the minutes a sequential protocol
+    # spans (case2b churns 50M cloudlets between the one-off baseline and
+    # the variants), which used to swamp the small ratios.  The
+    # interleaved baseline rides along as ``base_wall_s``.
+    variants = [
+        ("net", dict(network=True), "net_overhead_ratio", "network-off"),
+        ("faults", dict(faults=True), "faults_overhead_ratio",
+         "fault-free"),
+        ("chaos2", dict(chaos2=True), "chaos2_overhead_ratio",
+         "fault-free"),
+        ("obs", dict(telemetry=True), "obs_overhead_ratio",
+         "telemetry-off"),
+        ("slo", dict(slo=True), "slo_overhead_ratio", "telemetry-off"),
+    ]
     if "case1b" in cases:
-        best = None
-        for _ in range(max(repeats, 1)):
-            rec = bench_capacity.perf_record("case1b", backend="jnp",
-                                             network=True)
-            if best is None or rec["wall_s"] < best["wall_s"]:
-                best = rec
-        base_rec = next(r for r in records if r["case"] == "case1b")
-        best["net_overhead_ratio"] = round(
-            best["wall_s"] / max(base_rec["wall_s"], 1e-9), 3)
-        records.append(best)
-        print(f"# perf case1b+net: {best['wall_s']:.2f}s "
-              f"({best['net_overhead_ratio']}x of network-off)")
-    # Disruption-phase overhead on case1b: same case with mild chaos on
-    # (DESIGN.md §7) — the wall-time ratio over the fault-free run is the
-    # phase's per-tick cost (target ≤ 1.3×)
-    if "case1b" in cases:
-        best = None
-        for _ in range(max(repeats, 1)):
-            rec = bench_capacity.perf_record("case1b", backend="jnp",
-                                             faults=True)
-            if best is None or rec["wall_s"] < best["wall_s"]:
-                best = rec
-        base_rec = next(r for r in records if r["case"] == "case1b")
-        best["faults_overhead_ratio"] = round(
-            best["wall_s"] / max(base_rec["wall_s"], 1e-9), 3)
-        records.append(best)
-        print(f"# perf case1b+faults: {best['wall_s']:.2f}s "
-              f"({best['faults_overhead_ratio']}x of fault-free)")
-    # Second-generation chaos overhead on case1b: the FULL gray-failure
-    # surface (§7.1 fail-slow, zones, partitions, outlier ejection) on top
-    # of the mild chaos — ratio over the fault-free run (target ≤ 1.3×)
-    if "case1b" in cases:
-        best = None
-        for _ in range(max(repeats, 1)):
-            rec = bench_capacity.perf_record("case1b", backend="jnp",
-                                             chaos2=True)
-            if best is None or rec["wall_s"] < best["wall_s"]:
-                best = rec
-        base_rec = next(r for r in records if r["case"] == "case1b")
-        best["chaos2_overhead_ratio"] = round(
-            best["wall_s"] / max(base_rec["wall_s"], 1e-9), 3)
-        records.append(best)
-        print(f"# perf case1b+chaos2: {best['wall_s']:.2f}s "
-              f"({best['chaos2_overhead_ratio']}x of fault-free)")
-    # Streaming-observability overhead on case1b (DESIGN.md §9): metric
-    # rows flushed through the io_callback tap every 16 ticks + 1-in-100
-    # span sampling — ratio over the telemetry-off run (target ≤ 1.05×)
-    if "case1b" in cases:
-        best = None
-        for _ in range(max(repeats, 1)):
-            rec = bench_capacity.perf_record("case1b", backend="jnp",
-                                             telemetry=True)
-            if best is None or rec["wall_s"] < best["wall_s"]:
-                best = rec
-        base_rec = next(r for r in records if r["case"] == "case1b")
-        best["obs_overhead_ratio"] = round(
-            best["wall_s"] / max(base_rec["wall_s"], 1e-9), 3)
-        records.append(best)
-        print(f"# perf case1b+obs: {best['wall_s']:.2f}s "
-              f"({best['obs_overhead_ratio']}x of telemetry-off)")
+        for name, kw, ratio_key, vs in variants:
+            best, base_wall = None, float("inf")
+            for _ in range(max(repeats, 1)):
+                base_wall = min(base_wall, bench_capacity.perf_record(
+                    "case1b", backend="jnp")["wall_s"])
+                rec = bench_capacity.perf_record("case1b", backend="jnp",
+                                                 **kw)
+                if best is None or rec["wall_s"] < best["wall_s"]:
+                    best = rec
+            best[ratio_key] = round(best["wall_s"] / max(base_wall, 1e-9),
+                                    3)
+            best["base_wall_s"] = round(base_wall, 4)
+            records.append(best)
+            print(f"# perf case1b+{name}: {best['wall_s']:.2f}s "
+                  f"({best[ratio_key]}x of {vs}, interleaved base "
+                  f"{base_wall:.2f}s)")
     # interpret-mode kernel trend on a scaled-down case (interpret is
     # orders of magnitude slower — the trend matters, not the magnitude)
     rec = bench_capacity.perf_record("case1a", backend="pallas-interpret",

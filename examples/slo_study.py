@@ -1,0 +1,140 @@
+"""Closing the QoS feedback loop on SockShop (DESIGN.md §10).
+
+The observability stack (PR 8) only *watched* the simulation; this study
+wires it back into the control plane.  Per-service SLO objectives turn
+the streamed latency windows into burn-rate alerts (Google-SRE fast/slow
+multi-window rules), and the alerts gate two actuators:
+
+* ``hs_mode="slo_burn"`` — the horizontal autoscaler scales OUT on a
+  firing alert (with a stabilization window) and refuses to scale IN
+  while any alert is pending or firing, instead of thresholding the
+  utilization EMA;
+* ``slo_eject_tighten`` — while a service's alert fires, the LB outlier
+  ejector trips at a tightened threshold, draining the fail-slow
+  replica faster.
+
+Both knobs are traced (``DynParams``), so the util-vs-burn comparison is
+ONE ``run_batch`` call — identical chaos schedule, identical load, one
+compile.  Under zone fail-slow chaos the utilization signal is a *liar*:
+a degraded replica executes fewer MI, so measured util stays low while
+latency explodes, and threshold HS either does nothing or scales the
+wrong way.  The burn-gated loop watches the SLI itself.
+
+Expected output (default scale): the slo_burn arm ends with a strictly
+lower SLO violation rate than the util arm at equal or lower
+replica-seconds.
+
+    PYTHONPATH=src python examples/slo_study.py
+    PYTHONPATH=src python examples/slo_study.py --duration 20  # toy smoke
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import sockshop
+from repro.core import batch_item, policies, summarize
+from repro.obs import export
+
+N_HOSTS = 10
+
+# observability + SLO plane: 5 s windows, short lookback 15 s, long
+# lookback 60 s, alerts need 0.5 s of sustained burn to fire.
+OBS_KW = dict(telemetry="stream", tel_window_ticks=50, tel_windows=4,
+              tel_span_k=50, tel_span_cap=1024,
+              alerting="burn", slo_budget=0.05,
+              slo_short_wins=3, slo_long_wins=12, slo_for_ticks=5,
+              slo_stabilize_s=10.0)
+
+
+def make_sim(duration_s: float, n_clients: int):
+    """SockShop x2 replicas under zone fail-slow chaos with HS enabled.
+
+    The chaos plane reuses the gray-failure study's scenario (crash-free,
+    episodes degrade a whole 2-host zone to 10 % MIPS); the scaling plane
+    runs plain horizontal scaling whose out/in gate is the swept knob.
+    """
+    zones = (np.arange(N_HOSTS) // 2).astype(np.int32)
+    return sockshop.make_sim(
+        n_clients=n_clients, duration_s=duration_s, replicas=2,
+        share=900.0, seed=11, placement_policy=policies.PLACE_SPREAD,
+        scaling_policy=policies.SCALE_HORIZONTAL,
+        hs_util_hi=0.5, hs_util_lo=0.05,
+        faults="chaos", host_mtbf_s=float("inf"), inst_kill_rate=0.0,
+        retry_timeout_s=2.5, retry_budget=2,
+        cb_err_thresh=0.5, cb_cooldown_s=5.0, cb_alpha=0.3,
+        zone_slow_rate=0.015, host_slow_factor=0.1, host_slow_mttr_s=15.0,
+        eject_err_thresh=0.35, eject_cooldown_s=8.0,
+        host_zone=zones, **OBS_KW)
+
+
+def replica_seconds(item, dt: float) -> float:
+    """∫ active replicas dt — the cost axis of the comparison."""
+    return float(np.asarray(item.trace.active_instances,
+                            np.float64).sum()) * dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=240.0)
+    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--points", type=int, default=2,
+                    help="kept for smoke-CLI parity; the sweep always "
+                         "runs the util and slo_burn arms")
+    args = ap.parse_args()
+
+    sim = make_sim(args.duration, args.clients)
+    # re-evaluate HS every 5 s (scale_interval is traced, so the
+    # override rides the sweep points instead of the Simulation)
+    base = dataclasses.replace(sim.params, scale_interval=50)
+    # the two control planes; the util arm keeps plain ejection
+    # (tighten=1.0 is an exact identity), the burn arm tightens it 2x
+    # while alerts fire.
+    arms = [("util", dataclasses.replace(base, hs_mode="util",
+                                         slo_eject_tighten=1.0)),
+            ("slo_burn", dataclasses.replace(base, hs_mode="slo_burn",
+                                             slo_eject_tighten=0.3))]
+    points = [p for _, p in arms]
+
+    with export.alert_collecting() as alerts:
+        res = sim.run_batch(points)
+    export.validate_alert_rows(alerts.rows)
+    print(f"# sockshop x2 replicas, zone fail-slow chaos, HS on "
+          f"(batched sweep: compile {res.compile_time_s:.1f}s, "
+          f"run {res.wall_time_s:.1f}s)")
+
+    reps = {}
+    print(f"{'hs_mode':>9s} {'viol_rate':>9s} {'repl_sec':>9s} "
+          f"{'out':>4s} {'in':>4s} {'fires':>5s} {'firing_s':>8s} "
+          f"{'ejects':>6s} {'p95_ms':>8s}")
+    for b, (name, p) in enumerate(arms):
+        item = batch_item(res, b)
+        rep = summarize(sim, item, params=p)
+        rs = replica_seconds(item, p.dt)
+        reps[name] = (rep, rs)
+        print(f"{name:>9s} {rep.slo_violation_rate:9.3f} {rs:9.0f} "
+              f"{rep.scale_out:4d} {rep.scale_in:4d} {rep.alert_fires:5d} "
+              f"{rep.alert_firing_time_s:8.1f} {rep.ejections:6d} "
+              f"{rep.p95_response_ms:8.0f}")
+        assert rep.alert_event_drops == 0
+
+    print("\nfirst alert transitions (Prometheus ALERTS convention):")
+    for ev in alerts.rows[:6]:
+        print(export.prometheus_alert_line(ev).splitlines()[-1])
+
+    (rep_u, rs_u), (rep_b, rs_b) = reps["util"], reps["slo_burn"]
+    print(f"\n-> slo_burn vs util: violation rate "
+          f"{rep_b.slo_violation_rate:.3f} vs {rep_u.slo_violation_rate:.3f}"
+          f", replica-seconds {rs_b:.0f} vs {rs_u:.0f}")
+    if args.duration >= 120.0:
+        assert rep_b.slo_violation_rate < rep_u.slo_violation_rate, \
+            "burn-gated scaling did not reduce the SLO violation rate"
+        assert rs_b <= rs_u * 1.001, \
+            "burn-gated scaling spent more replica-seconds than util HS"
+        print("   burn-gated control wins on both axes.")
+    else:
+        print("   (toy duration — skipping the win assertions)")
+
+
+if __name__ == "__main__":
+    main()

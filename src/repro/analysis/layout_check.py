@@ -49,14 +49,17 @@ from repro.core.types import (DynParams, PHASE_COLUMNS, Cloudlets,
 # four golden combos plus the egress-shaping variant (the only consumer
 # of the Transit/egress_shaping sub-entry) plus the telemetry combo
 # (the only one tracing the Telemetry phase — full-mode so both its
-# chaos and fabric sub-entries activate).
-COMBOS: Tuple[Tuple[str, str, bool, bool], ...] = (
+# chaos and fabric sub-entries activate) plus the alerting combo
+# (telemetry="alert" shorthand: stream + alerting="burn", the only one
+# tracing the Alerting phase).
+COMBOS: Tuple[Tuple[str, str, bool, object], ...] = (
     ("uniform", "none", False, False),
     ("uniform", "chaos", False, False),
     ("fabric", "none", False, False),
     ("fabric", "chaos", False, False),
     ("fabric", "chaos", True, False),
     ("fabric", "chaos", False, True),
+    ("fabric", "chaos", False, "alert"),
 )
 
 # Registry sub-entries ("Phase/feature") activate with these flags.
@@ -137,11 +140,14 @@ def _tiny_sim(network: str, faults: str, egress: bool,
               telemetry: bool | str = False) -> Simulation:
     caps = SimCaps(n_clients=8, max_requests=128, max_cloudlets=128,
                    max_instances=8, n_vms=2, d_max=2, max_replicas=2)
-    tel_on = telemetry in (True, "stream")
+    alert_on = telemetry == "alert"
+    tel_on = alert_on or telemetry in (True, "stream")
     # telemetry knobs shrunk so a 4-tick replay closes windows (Wt=2)
     # and a 4-tick lint program contains a real chunk flush (W=2 →
     # flush every 2 ticks); k=1 samples every request so the span path
-    # traces its chaos/fabric column reads.
+    # traces its chaos/fabric column reads.  "alert" compiles the
+    # Alerting stage on top (tiny lookbacks, enabled objectives, tight
+    # hysteresis — the rule math traces whether or not anything fires).
     params = SimParams(dt=0.05, n_ticks=4, n_clients=6, spawn_rate=10.0,
                        wait_lo=0.1, wait_hi=0.3, seed=7,
                        scaling_policy=1,  # exercise the Scaling phase too
@@ -149,7 +155,11 @@ def _tiny_sim(network: str, faults: str, egress: bool,
                        egress_shaping=egress,
                        telemetry="stream" if tel_on else "none",
                        tel_window_ticks=2, tel_windows=2,
-                       tel_span_k=1, tel_span_cap=64)
+                       tel_span_k=1, tel_span_cap=64,
+                       alerting="burn" if alert_on else "none",
+                       slo_budget=0.05 if alert_on else 0.0,
+                       slo_short_wins=1, slo_long_wins=2,
+                       slo_for_ticks=1, slo_event_cap=16)
     return Simulation(diamond(mi=200.0), caps=caps, params=params)
 
 
@@ -204,7 +214,8 @@ def check_layout_access(phase_columns: dict | None = None) -> List[str]:
     for network, faults, egress, telemetry in COMBOS:
         combo = f"network={network} faults={faults}" \
             + (" egress_shaping" if egress else "") \
-            + (" telemetry" if telemetry else "")
+            + (" telemetry+alerting" if telemetry == "alert"
+               else " telemetry" if telemetry else "")
         actual = replay_accesses(network, faults, egress, telemetry)
         for phase, accs in actual.items():
             spawns = {c for c, kind in accs if kind == "spawn"}

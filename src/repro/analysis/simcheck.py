@@ -22,10 +22,16 @@ GOLDEN_COMBOS = (("uniform", "none"), ("uniform", "chaos"),
 # init-time fold_in), so its stream digest must EQUAL fabric+chaos —
 # checked below, pinning the observation-only contract.
 TELEMETRY_COMBO = ("fabric", "chaos", "stream")
+# Sixth combo (PR 9): alerting="burn" on top of streaming telemetry.
+# The Alerting stage is pure arithmetic over sealed SLI windows — it
+# must consume no tick RNG either, so its digest is pinned to the
+# fabric+chaos digest exactly like the telemetry combo.
+ALERTING_COMBO = ("fabric", "chaos", "alert")
 
 
 def record_tick_streams(network: str, faults: str,
-                        telemetry: bool = False) -> streams.StreamRecorder:
+                        telemetry: bool | str = False
+                        ) -> streams.StreamRecorder:
     """Replay one eager tick with stream recording; the state's rng is
     the registered root, so every wrapped derivation resolves a path."""
     sim = layout_check._tiny_sim(network, faults, False, telemetry)
@@ -38,7 +44,7 @@ def record_tick_streams(network: str, faults: str,
 
 
 def check_streams() -> Dict[str, object]:
-    """Audit all five combos; returns {'problems': [...], 'digests': {...}}."""
+    """Audit all six combos; returns {'problems': [...], 'digests': {...}}."""
     problems: List[str] = []
     digests: Dict[str, str] = {}
     for net, fl in GOLDEN_COMBOS:
@@ -62,6 +68,17 @@ def check_streams() -> Dict[str, object]:
             f"[{combo}] tick stream topology differs from {net}+{fl} — "
             "the Telemetry phase must not consume tick RNG (its sample "
             "mask is an init-time named fold_in)")
+    net, fl, alert = ALERTING_COMBO
+    rec = record_tick_streams(net, fl, telemetry=alert)
+    combo = f"{net}+{fl}+alerting"
+    digests[combo] = streams.topology_digest(rec)
+    for p in streams.audit_events(rec):
+        problems.append(f"[{combo}] {p}")
+    if digests[combo] != digests[f"{net}+{fl}"]:
+        problems.append(
+            f"[{combo}] tick stream topology differs from {net}+{fl} — "
+            "the Alerting phase must not consume tick RNG (burn-rate "
+            "rules are pure arithmetic over sealed SLI windows)")
     return {"problems": problems, "digests": digests}
 
 
@@ -103,6 +120,10 @@ def run_simcheck(only: Optional[Set[str]] = None,
         for p in jaxpr_lint.lint_combo(net, fl, waive=waive,
                                        telemetry=tel):
             lint.append(f"[{net}+{fl}+telemetry] {p}")
+        net, fl, alert = ALERTING_COMBO
+        for p in jaxpr_lint.lint_combo(net, fl, waive=waive,
+                                       telemetry=alert):
+            lint.append(f"[{net}+{fl}+alerting] {p}")
         sections["lint"] = lint
     if run("layout"):
         sections["layout"] = layout_check.check_layout_access()

@@ -62,6 +62,13 @@ class AppStatic(NamedTuple):
     #                             — zone-correlated fault draws hit every
     #                             host sharing an id (DESIGN.md §7.1);
     #                             default: each host its own zone
+    slo_target_ms: jnp.ndarray  # [S] f32 per-service SLO latency target
+    #                             (ms) for burn-rate SLIs, -1 = run-wide
+    #                             default (dyn.slo_ms); DESIGN.md §10
+    slo_budget: jnp.ndarray     # [S] f32 per-service error-budget
+    #                             fraction, -1 = run-wide default
+    #                             (dyn.slo_budget); budget ≤ 0 after
+    #                             fallback disables the objective
 
     @property
     def n_services(self) -> int:
@@ -85,7 +92,9 @@ def build_app(graph: ServiceGraph,
               default_template: InstanceTemplate | None = None,
               api_entries: Sequence[Sequence[str]] | None = None,
               n_hosts: int = 0,
-              host_zone: Sequence[int] | None = None) -> AppStatic:
+              host_zone: Sequence[int] | None = None,
+              slo_target_ms: Sequence[float] | None = None,
+              slo_budget: Sequence[float] | None = None) -> AppStatic:
     """Assemble :class:`AppStatic` from a graph + instance templates.
 
     ``api_entries`` optionally overrides the per-API entry services with a
@@ -95,6 +104,11 @@ def build_app(graph: ServiceGraph,
     ``host_zone`` maps each of the cluster's ``n_hosts`` hosts to a
     failure domain for zone-correlated chaos (registry ``zones:`` key);
     default is one zone per host (no correlation).
+
+    ``slo_target_ms`` / ``slo_budget`` declare per-service SLO objectives
+    for burn-rate alerting (registry per-service ``slo_ms`` /
+    ``slo_budget`` keys); -1 entries fall back to the run-wide traced
+    defaults at evaluation time.
     """
     default_template = default_template or InstanceTemplate()
     templates = templates or {}
@@ -114,6 +128,19 @@ def build_app(graph: ServiceGraph,
             raise ValueError(
                 f"host_zone ids must lie in [0, {n_hosts}): got "
                 f"[{hz.min()}, {hz.max()}]")
+
+    def svc_table(name: str, vals) -> np.ndarray:
+        if vals is None:
+            return np.full((S,), -1.0, dtype=np.float32)
+        arr = np.asarray(vals, dtype=np.float32).reshape(-1)
+        if arr.shape[0] != S:
+            raise ValueError(
+                f"{name} must list one value per service: got "
+                f"{arr.shape[0]} entries for {S} services")
+        return arr
+
+    slo_t = svc_table("slo_target_ms", slo_target_ms)
+    slo_b = svc_table("slo_budget", slo_budget)
 
     def tarr(field: str, dtype=np.float32) -> np.ndarray:
         return np.array(
@@ -160,4 +187,6 @@ def build_app(graph: ServiceGraph,
             [jnp.asarray(graph.edge_timeout, jnp.float32).reshape(-1),
              jnp.asarray(graph.api_timeout, jnp.float32)]),
         host_zone=jnp.asarray(hz),
+        slo_target_ms=jnp.asarray(slo_t),
+        slo_budget=jnp.asarray(slo_b),
     )

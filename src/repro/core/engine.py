@@ -27,11 +27,11 @@ from .placement import initial_allocation, migrate
 from .scaling import scaling_event
 from .types import (CL_EXEC, CL_TRANSIT, CL_WAITING, DynParams, INST_ON,
                     SimCaps, SimParams, SimState, TickTrace,
-                    validate_telemetry, zeros_state)
+                    validate_alerting, validate_telemetry, zeros_state)
 
 # make_tick's phase sequence — ``stop_after`` prefixes must name one.
 TICK_PHASES = ("Generation", "Disruption", "Transit", "Dispatch",
-               "Execute", "Derive", "Response", "Scaling")
+               "Execute", "Alerting", "Derive", "Response", "Scaling")
 
 
 def make_tick(caps: SimCaps, params: SimParams,
@@ -88,11 +88,15 @@ def make_tick(caps: SimCaps, params: SimParams,
             f"SimParams.faults must be 'none' or 'chaos', "
             f"got {params.faults!r}")
     validate_telemetry(params)
+    validate_alerting(params)
     network = params.network == "fabric"
     faults_on = params.faults == "chaos"
     telemetry = params.telemetry == "stream"
+    alerting = telemetry and params.alerting == "burn"
     if telemetry:
         from ..obs import telemetry as telmod
+    if alerting:
+        from ..obs import slo as slomod
     if stop_after is not None \
             and stop_after.split("/", 1)[0] not in TICK_PHASES:
         raise ValueError(
@@ -180,6 +184,14 @@ def make_tick(caps: SimCaps, params: SimParams,
             if probe:
                 probe("Telemetry")
             state = telmod.record_spans(state, fin_info, params)
+
+        # --- Alerting (SLO burn-rate rules + alert state machine) --------
+        if alerting:
+            if probe:
+                probe("Alerting")
+            state = slomod.alert_step(state, fin_info, params, dyn, app)
+        if stop_after == "Alerting":
+            return early(state)
 
         # --- Derivative (spawn successors along the service chain) ------
         if has_edges:  # static: edge-free graphs skip the spawn machinery
@@ -294,15 +306,21 @@ class Simulation:
                  host_ingress_scale: np.ndarray | None = None,
                  placement_policy: int | None = None,
                  host_zone: np.ndarray | None = None,
-                 host_cpu_scale: np.ndarray | None = None):
+                 host_cpu_scale: np.ndarray | None = None,
+                 service_slo_ms: np.ndarray | None = None,
+                 service_slo_budget: np.ndarray | None = None):
         self.graph = graph
         self.caps = caps or SimCaps()
         self.params = params or SimParams()
         V = self.caps.n_vms
         # host→zone table (failure domains for zone-correlated chaos, §7.1);
-        # defaults to one zone per host inside build_app
+        # defaults to one zone per host inside build_app.  The per-service
+        # SLO tables feed burn-rate alerting (DESIGN.md §10); -1 entries
+        # fall back to the run-wide dyn.slo_ms / dyn.slo_budget.
         self.app = build_app(graph, templates, default_template, api_entries,
-                             n_hosts=V, host_zone=host_zone)
+                             n_hosts=V, host_zone=host_zone,
+                             slo_target_ms=service_slo_ms,
+                             slo_budget=service_slo_budget)
         self.vm_mips = np.asarray(
             vm_mips if vm_mips is not None
             else np.full(V, 32_000.0), np.float32)
@@ -391,7 +409,13 @@ class Simulation:
                       "pallas_interpret", "network", "waterfill_iters",
                       "net_hist_bin_s", "faults", "egress_shaping",
                       "telemetry", "tel_window_ticks", "tel_windows",
-                      "tel_span_k", "tel_span_cap")
+                      "tel_span_k", "tel_span_cap", "tel_span_tick_cap",
+                      "alerting",
+                      "slo_short_wins", "slo_long_wins", "slo_for_ticks",
+                      "slo_event_cap")
+    # NOTE: hs_mode is deliberately NOT static — it rides DynParams as an
+    # integer selector so one run_batch sweep compares util-threshold vs
+    # burn-rate control planes without recompiling.
 
     def _static_key(self) -> tuple:
         p = self.params
@@ -474,6 +498,10 @@ class Simulation:
         if self.params.telemetry == "stream":
             from ..obs import telemetry as telmod
             telmod.drain_to_exporter(out_state, self.params)
+            if self.params.alerting == "burn":
+                from ..obs import slo as slomod
+                slomod.drain_to_exporter(out_state, self.params,
+                                         tags=np.asarray(dyn.tel_tag))
         return SimResult(state=out_state, trace=trace,
                          wall_time_s=t2 - t1, compile_time_s=compile_s)
 
@@ -641,6 +669,10 @@ class Simulation:
         if self.params.telemetry == "stream":
             from ..obs import telemetry as telmod
             telmod.drain_to_exporter(out_state, self.params)
+            if self.params.alerting == "burn":
+                from ..obs import slo as slomod
+                slomod.drain_to_exporter(out_state, self.params,
+                                         tags=np.asarray(dyn_batch.tel_tag))
         return SimResult(state=out_state, trace=trace,
                          wall_time_s=t2 - t1, compile_time_s=compile_s)
 

@@ -40,7 +40,7 @@ from . import network as netmod
 from .app import AppStatic
 from .pool import (assign_free_slots, scatter_pool, segment_rank,
                    segment_sum as _segsum)
-from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING,
+from .types import (ALERT_FIRING, CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING,
                     DynParams, FaultState, INST_DOWN, INST_DRAIN, INST_FREE,
                     INST_ON, SimCaps, SimParams, SimState)
 
@@ -410,13 +410,28 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
     lat_cnt_s = _segsum(sig.astype(i32), jnp.where(sig, instances.service,
                                                    -1), S)
     svc_lat = lat_sum_s / jnp.maximum(lat_cnt_s.astype(f32), 1.0)
+    # Alert-driven tightening (DESIGN.md §10): while any burn alert FIRES
+    # on a replica's service, its ejection thresholds multiply by
+    # dyn.slo_eject_tighten (< 1 tightens) — outliers get evicted sooner
+    # exactly when the service is burning its error budget.  Tighten = 1.0
+    # (the default) multiplies exactly, so the sixth golden combo stays
+    # bit-identical; the alert state the stage reads is one tick old
+    # (Disruption precedes Execute/Alerting in the tick).
+    if params.telemetry == "stream" and params.alerting == "burn":
+        firing_s = (state.alerts.astate == ALERT_FIRING).any(axis=1)
+        tighten = jnp.where(firing_s[isvc_safe] & (instances.service >= 0),
+                            dyn.slo_eject_tighten, 1.0)
+    else:
+        tighten = 1.0
+    eff_err_thresh = dyn.eject_err_thresh * tighten
+    eff_lat_factor = dyn.eject_lat_factor * tighten
     lat_trip = (dyn.eject_lat_factor > 0) & (lat_cnt_s[isvc_safe] >= 2) \
-        & (lema > dyn.eject_lat_factor * svc_lat[isvc_safe])
+        & (lema > eff_lat_factor * svc_lat[isvc_safe])
     ej_open = fs.inst_eject_until > t
     ej_half = (fs.inst_eject_until > 0) & ~ej_open
     ej_closed = fs.inst_eject_until <= 0
     want = ej_closed & on_i & traffic_i \
-        & ((iema > dyn.eject_err_thresh) | lat_trip)
+        & ((iema > eff_err_thresh) | lat_trip)
     # last-replica guard: keep at least one admissible (ON, not-ejected)
     # replica per service — cap this tick's ejections at admissible − 1
     n_adm = _segsum((on_i & ~ej_open).astype(i32),

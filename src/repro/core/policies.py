@@ -31,6 +31,11 @@ SCALE_HORIZONTAL = 1
 SCALE_VERTICAL = 2
 SCALE_HYBRID = 3       # HS first, VS when replica cap reached (beyond-paper)
 
+# --- HS scale-out gate (dyn.hs_mode; traced per-sweep-point selector) ------
+HS_UTIL = 0            # threshold on the service utilization EMA (Alg 4)
+HS_SLO_BURN = 1        # firing SLO burn-rate alert + stabilization window
+#                        (alerting="burn" control loop, DESIGN.md §10)
+
 # --- placement (paper §5.1 Alg 3) ------------------------------------------
 PLACE_MOST_AVAILABLE = 0   # sorted queue by descending free PEs (paper)
 PLACE_FIRST_FIT = 1

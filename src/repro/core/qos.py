@@ -77,6 +77,11 @@ class QoSReport:
     tel_windows: int = 0              # metric windows closed
     tel_spans: int = 0                # spans recorded (sampled requests)
     tel_span_drops: int = 0           # spans dropped at ring capacity
+    # SLO alerting (all-zero unless alerting="burn", DESIGN.md §10)
+    alert_fires: int = 0              # pending→firing transitions
+    alert_resolves: int = 0           # firing→resolved transitions
+    alert_firing_time_s: float = 0.0  # Σ (service, rule) seconds firing
+    alert_event_drops: int = 0        # transitions dropped at ring capacity
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
@@ -171,6 +176,16 @@ def summarize(sim: Simulation, result: SimResult,
     tel_span_drops = int(np.asarray(tel.span_drops).reshape(-1)[0]) \
         if tel.span_drops.size else 0
 
+    # --- SLO alerting (zero-width buffers unless alerting="burn") --------
+    al = st.alerts
+    alert_fires = int(np.asarray(al.fires).sum()) if al.fires.size else 0
+    alert_resolves = int(np.asarray(al.resolves).sum()) \
+        if al.resolves.size else 0
+    alert_firing_time_s = float(np.asarray(al.firing_ticks).sum()
+                                * params.dt) if al.firing_ticks.size else 0.0
+    alert_event_drops = int(np.asarray(al.ev_drops).reshape(-1)[0]) \
+        if al.ev_drops.size else 0
+
     completed = int(st.counters.completed)
     return QoSReport(
         generated_requests=int(st.requests.count),
@@ -223,6 +238,10 @@ def summarize(sim: Simulation, result: SimResult,
         tel_windows=tel_windows,
         tel_spans=tel_spans,
         tel_span_drops=tel_span_drops,
+        alert_fires=alert_fires,
+        alert_resolves=alert_resolves,
+        alert_firing_time_s=alert_firing_time_s,
+        alert_event_drops=alert_event_drops,
     )
 
 

@@ -122,11 +122,20 @@ def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
     a top-level ``"zones": [zone_id, ...]`` list (one entry per host) that
     maps hosts to correlated failure domains for zone-level chaos; the
     ``host_zone`` argument overrides it.  Default: one zone per host.
+
+    SLO-objective extension (DESIGN.md §10): a service may declare
+    ``"slo_ms": target`` and ``"slo_budget": fraction`` — the per-service
+    latency target and error-budget fraction burn-rate alerting evaluates
+    (``SimParams.alerting="burn"``); undeclared services fall back to the
+    run-wide ``slo_ms`` / ``slo_budget`` params at evaluation time.
     """
     spec = load_app_json(app_spec)
     graph = graph_from_spec(spec)
     if host_zone is None and "zones" in spec:
         host_zone = np.asarray(spec["zones"], np.int32)
+    services = spec["services"]
+    slo_ms = [float(s.get("slo_ms", -1.0)) for s in services]
+    slo_budget = [float(s.get("slo_budget", -1.0)) for s in services]
     templates = {}
     if instance_spec is not None:
         inst_spec = load_instances_yaml(instance_spec)
@@ -137,4 +146,6 @@ def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
                       host_ingress_scale=host_ingress_scale,
                       placement_policy=placement_policy,
                       host_zone=host_zone,
-                      host_cpu_scale=host_cpu_scale)
+                      host_cpu_scale=host_cpu_scale,
+                      service_slo_ms=slo_ms,
+                      service_slo_budget=slo_budget)

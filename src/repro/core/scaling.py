@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from . import policies
 from .app import AppStatic
-from .types import (DynParams, INST_DRAIN, INST_FREE, INST_ON, SimCaps,
-                    SimParams, SimState)
+from .types import (ALERT_FIRING, ALERT_PENDING, DynParams, INST_DRAIN,
+                    INST_FREE, INST_ON, SimCaps, SimParams, SimState)
 
 
 def _service_util(state: SimState, n_services: int) -> jnp.ndarray:
@@ -40,13 +40,39 @@ def _service_util(state: SimState, n_services: int) -> jnp.ndarray:
 # ===========================================================================
 
 def horizontal(state: SimState, app: AppStatic, caps: SimCaps,
-               dyn: DynParams) -> SimState:
+               dyn: DynParams, params: SimParams | None = None) -> SimState:
     S = app.n_services
     util = _service_util(state, S)
     want_out = ((util > dyn.hs_util_hi)
                 & (state.sched.svc_replicas >= 1)
                 & (state.sched.svc_replicas < caps.max_replicas))
     want_in = (util < dyn.hs_util_lo) & (state.sched.svc_replicas > 1)
+
+    if params is not None and params.telemetry == "stream" \
+            and params.alerting == "burn":
+        # Burn-rate-gated control plane (DESIGN.md §10): with
+        # dyn.hs_mode == HS_SLO_BURN, scale-out triggers on a FIRING burn
+        # alert for the service (any rule) once its stabilization window
+        # expired — not on the util EMA — and scale-in is additionally
+        # vetoed while an alert is pending or firing.  dyn.hs_mode is a
+        # traced selector, so one run_batch sweep compares both control
+        # planes; with hs_mode == HS_UTIL the where() selects the exact
+        # util-gated masks and the program stays bit-identical.
+        al = state.alerts
+        firing = (al.astate == ALERT_FIRING).any(axis=1)
+        active = firing | (al.astate == ALERT_PENDING).any(axis=1)
+        burn = dyn.hs_mode == policies.HS_SLO_BURN
+        want_out_burn = (firing & (state.time >= al.hold_until)
+                         & (state.sched.svc_replicas >= 1)
+                         & (state.sched.svc_replicas < caps.max_replicas))
+        want_out = jnp.where(burn, want_out_burn, want_out)
+        want_in = jnp.where(burn, want_in & ~active, want_in)
+        # stabilization clock arms on the scale-out ATTEMPT (commit may
+        # still fail on capacity) — fixed hold beats re-firing every tick
+        state = state._replace(alerts=al._replace(
+            hold_until=jnp.where(burn & want_out,
+                                 state.time + dyn.slo_stabilize_s,
+                                 al.hold_until)))
 
     def body(s, st: SimState) -> SimState:
         st = jax.lax.cond(want_out[s], lambda x: _scale_out(x, s, app),
@@ -200,10 +226,10 @@ def scaling_event(state: SimState, app: AppStatic, caps: SimCaps,
     if params.scaling_policy == policies.SCALE_NONE:
         return state
     if params.scaling_policy == policies.SCALE_HORIZONTAL:
-        return horizontal(state, app, caps, dyn)
+        return horizontal(state, app, caps, dyn, params)
     if params.scaling_policy == policies.SCALE_VERTICAL:
         return vertical(state, app, caps, dyn)
     if params.scaling_policy == policies.SCALE_HYBRID:
-        state = horizontal(state, app, caps, dyn)
+        state = horizontal(state, app, caps, dyn, params)
         return vertical(state, app, caps, dyn)
     raise ValueError(f"unknown scaling policy {params.scaling_policy}")

@@ -184,8 +184,42 @@ class SimParams:
     tel_span_k: int = 100         # trace 1 request in k (seeded Bernoulli)
     tel_span_cap: int = 1024      # span ring capacity (overflow drops
                                   # are counted exactly, never overwrite)
+    tel_span_tick_cap: int = 0    # per-tick span staging budget (0 = the
+                                  # ring capacity; sampled finishers past
+                                  # it drop — counted, never silent)
     tel_tag: float = 0.0          # row tag (traced; run_batch auto-tags
                                   # sweep points when left at 0)
+
+    # --- SLO objectives & burn-rate alerting (DESIGN.md §10) -------------
+    alerting: str = "none"        # "none": no alert state, program
+                                  # bit-identical to the alert-free engine;
+                                  # "burn": Alerting tick stage — per-service
+                                  # multi-window burn-rate rules + alert
+                                  # state machine (requires telemetry="stream")
+    hs_mode: str = "util"         # horizontal scale-out gate: "util"
+                                  # (threshold on the utilization EMA) or
+                                  # "slo_burn" (firing burn alerts + a
+                                  # stabilization window); TRACED — sweep
+                                  # points select per-point, no recompile
+    slo_budget: float = 0.0       # run-wide error-budget fraction (allowed
+                                  # share of slow completions per service);
+                                  # 0 disables every objective without a
+                                  # per-service override (traced)
+    slo_fast_burn: float = 14.4   # fast-rule burn threshold (Google SRE
+                                  # page rule: 14.4× budget burn; traced)
+    slo_slow_burn: float = 6.0    # slow-rule burn threshold (traced)
+    slo_short_wins: int = 3       # short lookback, in CLOSED telemetry
+                                  # windows (static: sizes the rule masks)
+    slo_long_wins: int = 12       # long lookback = SLI ring length (static)
+    slo_for_ticks: int = 5        # hysteresis: rule must hold this many
+                                  # consecutive ticks before pending→firing
+    slo_stabilize_s: float = 30.0 # burn-mode scale-out stabilization window
+                                  # per service (traced)
+    slo_eject_tighten: float = 1.0  # outlier-ejection threshold multiplier
+                                  # applied while a latency alert fires on
+                                  # the replica's service (traced; 1 = off)
+    slo_event_cap: int = 256      # alert-transition ring capacity (overflow
+                                  # drops are counted exactly)
 
     # --- backend ---------------------------------------------------------
     use_pallas_tick: bool = False # fused cloudlet_step TPU kernel for the
@@ -198,6 +232,17 @@ class SimParams:
     mi_per_milicore: float = 0.001  # milicores = used_mips / mi_per_milicore
 
     seed: int = 0
+
+
+# Horizontal scale-out gates (dyn.hs_mode encodes the index; traced so one
+# run_batch sweep compares control planes without recompiling).
+HS_MODES = ("util", "slo_burn")
+
+# Burn-rate rules evaluated per service (axis 1 of AlertState.astate) and
+# the alert state machine's states. Names are the exported label values.
+ALERT_RULES = ("SLOFastBurn", "SLOSlowBurn")
+ALERT_STATES = ("inactive", "pending", "firing", "resolved")
+ALERT_INACTIVE, ALERT_PENDING, ALERT_FIRING, ALERT_RESOLVED = 0, 1, 2, 3
 
 
 class DynParams(NamedTuple):
@@ -253,6 +298,12 @@ class DynParams(NamedTuple):
     eject_err_thresh: jnp.ndarray
     eject_lat_factor: jnp.ndarray
     eject_cooldown_s: jnp.ndarray
+    hs_mode: jnp.ndarray
+    slo_budget: jnp.ndarray
+    slo_fast_burn: jnp.ndarray
+    slo_slow_burn: jnp.ndarray
+    slo_stabilize_s: jnp.ndarray
+    slo_eject_tighten: jnp.ndarray
     tel_tag: jnp.ndarray
 
     @staticmethod
@@ -293,6 +344,12 @@ class DynParams(NamedTuple):
             eject_err_thresh=f(p.eject_err_thresh),
             eject_lat_factor=f(p.eject_lat_factor),
             eject_cooldown_s=f(p.eject_cooldown_s),
+            hs_mode=i(HS_MODES.index(p.hs_mode)),
+            slo_budget=f(p.slo_budget),
+            slo_fast_burn=f(p.slo_fast_burn),
+            slo_slow_burn=f(p.slo_slow_burn),
+            slo_stabilize_s=f(p.slo_stabilize_s),
+            slo_eject_tighten=f(p.slo_eject_tighten),
             tel_tag=f(p.tel_tag))
 
 
@@ -400,6 +457,11 @@ PHASE_COLUMNS = {
                   "start"),
     "Telemetry/chaos": ("edge", "attempt"),
     "Telemetry/fabric": ("src_host", "rem_bytes"),
+    # Alerting (alerting="burn", DESIGN.md §10) folds finished-hop sojourn
+    # times into the per-service SLI accumulators; like Telemetry it is
+    # observation-only — `arrival` rides on Execute's declaration, so no
+    # resolved layout grows.
+    "Alerting": ("arrival",),
 }
 
 
@@ -450,7 +512,7 @@ class PoolLayout:
 
 @functools.lru_cache(maxsize=None)
 def _layout_for(network: str, faults: str, egress_shaping: bool,
-                telemetry: bool = False) -> PoolLayout:
+                telemetry: bool = False, alerting: bool = False) -> PoolLayout:
     phases = ["Generation", "Dispatch", "Execute", "Derive"]
     if faults == "chaos":
         phases.append("Disruption")
@@ -469,17 +531,19 @@ def _layout_for(network: str, faults: str, egress_shaping: bool,
             phases.append("Telemetry/chaos")
         if network == "fabric":
             phases.append("Telemetry/fabric")
+    if alerting:
+        phases.append("Alerting")
     need = set()
     for p in phases:
         cols = set(PHASE_COLUMNS[p])
-        if p.startswith("Telemetry"):
+        if p.startswith("Telemetry") or p == "Alerting":
             extra = cols - need
             if extra:
                 raise ValueError(
                     f"PHASE_COLUMNS[{p!r}] declares column(s) "
                     f"{sorted(extra)} that no simulating phase carries in "
-                    "this mode — telemetry is observation-only and must "
-                    "not grow the pool layout")
+                    "this mode — telemetry/alerting is observation-only "
+                    "and must not grow the pool layout")
         need |= cols
     return PoolLayout(
         i_fields=tuple(n for n in CL_I_FIELDS if n in need),
@@ -490,7 +554,9 @@ def resolve_layout(params: "SimParams") -> PoolLayout:
     """The static pool layout a SimParams' enabled phases require."""
     return _layout_for(params.network, params.faults,
                        params.network == "fabric" and params.egress_shaping,
-                       params.telemetry == "stream")
+                       params.telemetry == "stream",
+                       params.telemetry == "stream"
+                       and params.alerting == "burn")
 
 
 FULL_LAYOUT = _layout_for("fabric", "chaos", True)   # every column
@@ -809,6 +875,76 @@ def validate_telemetry(params: "SimParams") -> None:
             if not isinstance(v, int) or v < 1:
                 raise ValueError(
                     f"SimParams.{f} must be an int ≥ 1, got {v!r}")
+        v = params.tel_span_tick_cap
+        if not isinstance(v, int) or v < 0:
+            raise ValueError(
+                "SimParams.tel_span_tick_cap must be an int ≥ 0 "
+                f"(0 = uncapped), got {v!r}")
+
+
+class AlertState(NamedTuple):
+    """Per-service SLO burn-rate alerting state (alerting="burn",
+    DESIGN.md §10).
+
+    Mode-keyed like :class:`TelemetryState`: every buffer is zero-width
+    unless ``telemetry="stream"`` AND ``alerting="burn"``, so the default
+    carry pays nothing and the sixth golden combo (alerting compiled in,
+    objectives disabled) stays bit-identical by construction.  Axes:
+    ``S`` services, ``NR = len(ALERT_RULES)`` burn rules, ``L`` closed SLI
+    windows (``slo_long_wins``), ``AP`` event-ring rows (``slo_event_cap``).
+    The transition ring is append-until-full with exact drop counting —
+    the span-ring discipline.
+    """
+
+    sli_win: jnp.ndarray      # [L, S, 2] f32 closed windows of (good, bad)
+    sli_acc: jnp.ndarray      # [S, 2] f32 open-window (good, bad) sums
+    win: jnp.ndarray          # [1] i32 SLI windows closed so far
+    astate: jnp.ndarray       # [S, NR] i32 ALERT_INACTIVE..ALERT_RESOLVED
+    pending: jnp.ndarray      # [S, NR] i32 consecutive ticks condition held
+    fires: jnp.ndarray        # [S, NR] i32 pending→firing transitions
+    resolves: jnp.ndarray     # [S, NR] i32 firing→resolved transitions
+    firing_ticks: jnp.ndarray # [S, NR] i32 ticks spent firing
+    hold_until: jnp.ndarray   # [S] f32 burn-mode scale-out stabilization
+    ev_time: jnp.ndarray      # [AP] f32 transition timestamps
+    ev_service: jnp.ndarray   # [AP] i32
+    ev_rule: jnp.ndarray      # [AP] i32 index into ALERT_RULES
+    ev_state: jnp.ndarray     # [AP] i32 new state (index into ALERT_STATES)
+    ev_n: jnp.ndarray         # [1] i32 transitions recorded (≤ AP)
+    ev_drops: jnp.ndarray     # [1] i32 transitions dropped at capacity
+
+
+def validate_alerting(params: "SimParams") -> None:
+    if params.alerting not in ("none", "burn"):
+        raise ValueError(
+            f"SimParams.alerting must be 'none' or 'burn', "
+            f"got {params.alerting!r}")
+    if params.hs_mode not in HS_MODES:
+        raise ValueError(
+            f"SimParams.hs_mode must be one of {HS_MODES}, "
+            f"got {params.hs_mode!r}")
+    if params.alerting == "burn":
+        if params.telemetry != "stream":
+            raise ValueError(
+                "alerting='burn' evaluates rules on the telemetry window "
+                "cadence and requires telemetry='stream'")
+        for f in ("slo_short_wins", "slo_long_wins", "slo_for_ticks",
+                  "slo_event_cap"):
+            v = getattr(params, f)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"SimParams.{f} must be an int ≥ 1, got {v!r}")
+        if params.slo_long_wins < params.slo_short_wins:
+            raise ValueError(
+                "SimParams.slo_long_wins must be ≥ slo_short_wins "
+                f"(got {params.slo_long_wins} < {params.slo_short_wins})")
+        if not params.slo_eject_tighten > 0:
+            raise ValueError(
+                "SimParams.slo_eject_tighten must be > 0 (1 disables "
+                f"tightening), got {params.slo_eject_tighten!r}")
+    elif params.hs_mode == "slo_burn":
+        raise ValueError(
+            "hs_mode='slo_burn' gates scale-out on firing burn alerts and "
+            "requires alerting='burn'")
 
 
 class SchedState(NamedTuple):
@@ -867,6 +1003,7 @@ class SimState(NamedTuple):
     fault: FaultState
     fstats: FaultStats
     telemetry: TelemetryState
+    alerts: AlertState
 
 
 class TickTrace(NamedTuple):
@@ -912,6 +1049,7 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
     """
     caps.validate()
     validate_telemetry(params)
+    validate_alerting(params)
     f32 = jnp.float32
     i32 = jnp.int32
     Nc, R, C, I, V = (caps.n_clients, caps.max_requests, caps.max_cloudlets,
@@ -1022,6 +1160,7 @@ def zeros_state(caps: SimCaps, params: SimParams, rng, n_services: int = 1,
                             + [jnp.zeros((), i32)] * 5
                             + [jnp.zeros((), f32)])),
         telemetry=_zeros_telemetry(params, R, rng),
+        alerts=_zeros_alerts(params, S),
     )
 
 
@@ -1060,6 +1199,37 @@ def _zeros_telemetry(params: SimParams, R: int, rng) -> TelemetryState:
         span_n=jnp.zeros((1 if on else 0,), i32),
         span_drops=jnp.zeros((1 if on else 0,), i32),
         sample=sample,
+    )
+
+
+def _zeros_alerts(params: SimParams, S: int) -> AlertState:
+    """Initial alert state: zero-width unless the Alerting stage is
+    compiled in (``telemetry="stream"`` AND ``alerting="burn"``) — the
+    :func:`_zeros_telemetry` pattern.  Draws no RNG: alert evaluation is
+    fully deterministic recording-rule math."""
+    f32, i32 = jnp.float32, jnp.int32
+    on = params.telemetry == "stream" and params.alerting == "burn"
+    NR = len(ALERT_RULES)
+    Sa = S if on else 0
+    L = params.slo_long_wins if on else 0
+    AP = params.slo_event_cap if on else 0
+    one = 1 if on else 0
+    return AlertState(
+        sli_win=jnp.zeros((L, Sa, 2), f32),
+        sli_acc=jnp.zeros((Sa, 2), f32),
+        win=jnp.zeros((one,), i32),
+        astate=jnp.zeros((Sa, NR), i32),
+        pending=jnp.zeros((Sa, NR), i32),
+        fires=jnp.zeros((Sa, NR), i32),
+        resolves=jnp.zeros((Sa, NR), i32),
+        firing_ticks=jnp.zeros((Sa, NR), i32),
+        hold_until=jnp.zeros((Sa,), f32),
+        ev_time=jnp.zeros((AP,), f32),
+        ev_service=jnp.zeros((AP,), i32),
+        ev_rule=jnp.zeros((AP,), i32),
+        ev_state=jnp.zeros((AP,), i32),
+        ev_n=jnp.zeros((one,), i32),
+        ev_drops=jnp.zeros((one,), i32),
     )
 
 

@@ -11,6 +11,9 @@ Three coordinated pieces, all default-off and bit-identical when off:
   critical path (paper §4.3.2).
 - :mod:`.profile` — per-phase wall/cost attribution via prefix programs
   (ROADMAP item b).
+- :mod:`.slo` — per-service SLO objectives, multi-window burn-rate
+  alerting, and the alert state machine feeding the control plane
+  (DESIGN.md §10).
 
 Submodules import lazily: ``profile`` imports ``core.engine`` (which
 itself imports ``obs.telemetry``), so an eager package import would
@@ -20,7 +23,7 @@ from __future__ import annotations
 
 import importlib
 
-_SUBMODULES = ("telemetry", "export", "spans", "profile")
+_SUBMODULES = ("telemetry", "export", "spans", "profile", "slo")
 
 __all__ = list(_SUBMODULES)
 

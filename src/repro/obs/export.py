@@ -20,13 +20,19 @@ from typing import Callable, List
 
 import numpy as np
 
-from ..core.types import TEL_METRIC_COLUMNS
+from ..core.types import ALERT_RULES, ALERT_STATES, TEL_METRIC_COLUMNS
 
 _COUNTERS = ("completed", "generated")      # per-window sums
 _CUMULATIVE = ("failed_attempts", "retries", "spans", "span_drops")
 
+# Alert-transition row schema (obs/slo.py drain; DESIGN.md §10).  Alert
+# rows are events with string labels, not [n, K] float blocks, so they
+# ride a parallel sink registry instead of the strict metric pipeline.
+ALERT_COLUMNS = ("time_s", "tag", "service", "rule", "state")
+
 _lock = threading.Lock()
 _sinks: List[Callable[[dict], None]] = []
+_alert_sinks: List[Callable[[dict], None]] = []
 
 
 def install(sink: Callable[[dict], None]) -> None:
@@ -97,6 +103,45 @@ def collecting():
 
 
 # ----------------------------------------------------------------------
+# Alert-transition channel (obs/slo.py, DESIGN.md §10)
+# ----------------------------------------------------------------------
+def install_alert(sink: Callable[[dict], None]) -> None:
+    """Register an alert sink; it receives one dict per alert transition
+    (``ALERT_COLUMNS`` schema, rule/state as label strings)."""
+    with _lock:
+        _alert_sinks.append(sink)
+
+
+def uninstall_alert(sink: Callable[[dict], None]) -> None:
+    with _lock:
+        with contextlib.suppress(ValueError):
+            _alert_sinks.remove(sink)
+
+
+def dispatch_alerts(rows: List[dict]) -> None:
+    """Deliver drained alert-transition rows to every alert sink."""
+    with _lock:
+        sinks = list(_alert_sinks)
+    if not sinks:
+        return
+    for r in rows:
+        for s in sinks:
+            s(dict(r))
+
+
+@contextlib.contextmanager
+def alert_collecting():
+    """``with export.alert_collecting() as events:`` — scoped collector
+    on the alert channel (RowCollector semantics)."""
+    c = RowCollector()
+    install_alert(c)
+    try:
+        yield c
+    finally:
+        uninstall_alert(c)
+
+
+# ----------------------------------------------------------------------
 # Renderers
 # ----------------------------------------------------------------------
 def prometheus_line(row: dict, prefix: str = "repro") -> str:
@@ -136,6 +181,50 @@ def printer(render: Callable[[dict], str] = otel_json,
         print(render(row), file=stream, flush=True)
 
     return sink
+
+
+def prometheus_alert_line(ev: dict, prefix: str = "repro") -> str:
+    """Prometheus `ALERTS`-convention exposition line for one transition:
+    ``ALERTS{alertname,service,state,point} 1 <ts>`` — the series a real
+    Alertmanager scrape would show while the alert is in that state."""
+    labels = (f'{{alertname="{ev["rule"]}",service="{ev["service"]}",'
+              f'alertstate="{ev["state"]}",point="{int(ev["tag"])}"}}')
+    return (f"# TYPE ALERTS gauge\n"
+            f"ALERTS{labels} 1 {ev['time_s']:g}")
+
+
+def otel_alert_event(ev: dict) -> str:
+    """OTel span-event JSON for one alert transition."""
+    return json.dumps({
+        "name": ev["rule"],
+        "resource": {"point": int(ev["tag"])},
+        "time_s": ev["time_s"],
+        "attributes": {"service": int(ev["service"]),
+                       "state": ev["state"]},
+    }, sort_keys=True)
+
+
+def validate_alert_rows(rows: List[dict]) -> None:
+    """Schema check for drained alert transitions: every row carries the
+    full ALERT_COLUMNS schema with known rule/state labels and finite,
+    non-decreasing timestamps per (tag, service, rule) lane."""
+    lanes: dict = {}
+    for i, r in enumerate(rows):
+        missing = [n for n in ALERT_COLUMNS if n not in r]
+        if missing:
+            raise ValueError(f"alert row {i} missing columns {missing}")
+        if r["rule"] not in ALERT_RULES:
+            raise ValueError(f"alert row {i} unknown rule {r['rule']!r}")
+        if r["state"] not in ALERT_STATES:
+            raise ValueError(f"alert row {i} unknown state {r['state']!r}")
+        if not np.isfinite(r["time_s"]):
+            raise ValueError(f"alert row {i} non-finite time_s")
+        key = (r["tag"], r["service"], r["rule"])
+        if lanes.get(key, -np.inf) > r["time_s"]:
+            raise ValueError(
+                f"alert row {i} time_s {r['time_s']} decreases within "
+                f"lane {key}")
+        lanes[key] = r["time_s"]
 
 
 def validate_rows(rows: List[dict]) -> None:

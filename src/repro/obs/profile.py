@@ -75,6 +75,10 @@ def tick_phases(sim: Simulation) -> List[str]:
     if p.network == "fabric":
         ph.append("Transit")
     ph += ["Dispatch", "Execute"]
+    if p.telemetry == "stream" and p.alerting == "burn":
+        # the Alerting prefix cut also covers the Telemetry span pass
+        # (record_spans traces between Execute and Alerting)
+        ph.append("Alerting")
     if sim._has_edges:
         ph.append("Derive")
     ph.append("Response")

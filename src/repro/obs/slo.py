@@ -1,0 +1,251 @@
+"""SLO objectives + multi-window burn-rate alerting (DESIGN.md §10).
+
+The Alerting tick stage turns the paper's QoS metrics into an in-sim
+feedback signal: per-service latency SLIs accumulate on the telemetry
+window cadence, Google-SRE-style short/long burn-rate rules evaluate over
+the closed windows, and a per-(service, rule) state machine
+(inactive → pending → firing → resolved, with ``for_ticks`` hysteresis)
+carries `AlertState` tensors on the scan carry.  Firing alerts gate the
+``hs_mode="slo_burn"`` autoscaler (scaling.py) and tighten LB outlier
+ejection (faults.py).
+
+Everything here is pure recording-rule math: the stage consumes NO tick
+RNG (simcheck pins the stream digest equal to the alert-free program) and
+only ever re-reads pool columns other phases already carry, so no mode's
+layout grows.  With every objective disabled (budget ≤ 0 after the
+per-service fallback) the rule conditions are constant-false and the
+carried tensors stay zero — the sixth golden combo is bit-identical by
+construction.
+
+Alert transitions append into a fixed ring (exact drop counting, the span
+discipline) and drain host-side at end of run through `export.py`'s alert
+sinks — no second io_callback in the hot loop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import (ALERT_FIRING, ALERT_INACTIVE, ALERT_PENDING,
+                          ALERT_RESOLVED, ALERT_RULES, ALERT_STATES,
+                          AlertState, SimParams, SimState)
+
+N_RULES = len(ALERT_RULES)
+
+
+def enabled(params: SimParams) -> bool:
+    """True when the Alerting stage is compiled into the tick."""
+    return params.telemetry == "stream" and params.alerting == "burn"
+
+
+def objectives(app, dyn):
+    """Resolve per-service (target_ms, budget): AppStatic overrides where
+    declared (> 0), run-wide traced defaults otherwise.  A service whose
+    resolved budget is ≤ 0 has no objective — its rules never fire."""
+    target_ms = jnp.where(app.slo_target_ms > 0, app.slo_target_ms,
+                          dyn.slo_ms)
+    budget = jnp.where(app.slo_budget > 0, app.slo_budget, dyn.slo_budget)
+    return target_ms, budget
+
+
+def _lookback_frac(sli_win: jnp.ndarray, w_closed: jnp.ndarray,
+                   n: int) -> jnp.ndarray:
+    """Per-service bad-completion fraction over the last ``n`` CLOSED
+    windows of the [L, S, 2] SLI ring (0 where no completions landed)."""
+    L = sli_win.shape[0]
+    idx = jnp.arange(L, dtype=jnp.int32)
+    # window id currently stored at ring slot p: the largest m < w_closed
+    # with m % L == p (negative = slot never written)
+    m = w_closed - 1 - ((w_closed - 1 - idx) % L)
+    mask = ((m >= w_closed - n) & (m >= 0)).astype(jnp.float32)   # [L]
+    good = jnp.sum(sli_win[:, :, 0] * mask[:, None], axis=0)      # [S]
+    bad = jnp.sum(sli_win[:, :, 1] * mask[:, None], axis=0)       # [S]
+    return bad / jnp.maximum(good + bad, 1.0)
+
+
+def evaluate_rules(sli_win: jnp.ndarray, w_closed: jnp.ndarray,
+                   budget: jnp.ndarray, params: SimParams, dyn):
+    """Burn-rate rule conditions, [S, N_RULES] bool.
+
+    Rule 0 (fast / page): burn over the short lookback AND over the last
+    single window both ≥ ``slo_fast_burn``.  Rule 1 (slow / ticket): burn
+    over the long lookback AND over the short lookback both ≥
+    ``slo_slow_burn``.  The second clause of each pair is the SRE
+    "still-burning" guard that stops alerts from trailing long after the
+    incident ended.  Services with budget ≤ 0 are objective-free.
+    """
+    active = budget > 0
+    safe_budget = jnp.maximum(budget, 1e-9)
+    frac1 = _lookback_frac(sli_win, w_closed, 1)
+    frac_s = _lookback_frac(sli_win, w_closed, params.slo_short_wins)
+    frac_l = _lookback_frac(sli_win, w_closed, params.slo_long_wins)
+    burn1, burn_s, burn_l = (f / safe_budget for f in (frac1, frac_s, frac_l))
+    fast = active & (burn_s >= dyn.slo_fast_burn) & (burn1 >= dyn.slo_fast_burn)
+    slow = active & (burn_l >= dyn.slo_slow_burn) & (burn_s >= dyn.slo_slow_burn)
+    return jnp.stack([fast, slow], axis=1)
+
+
+def step_machine(astate: jnp.ndarray, pending: jnp.ndarray,
+                 cond: jnp.ndarray, for_ticks: int):
+    """One tick of the per-(service, rule) alert state machine.
+
+    ``held`` counts consecutive ticks (including this one) the condition
+    has held; FIRING needs ``held >= for_ticks``.  RESOLVED is a one-tick
+    state entered from FIRING when the condition clears.
+    """
+    held = jnp.where(cond,
+                     jnp.where(astate == ALERT_PENDING, pending, 0) + 1, 0)
+    firing_now = astate == ALERT_FIRING
+    new_state = jnp.where(
+        firing_now,
+        jnp.where(cond, ALERT_FIRING, ALERT_RESOLVED),
+        jnp.where(cond & (held >= for_ticks), ALERT_FIRING,
+                  jnp.where(cond, ALERT_PENDING, ALERT_INACTIVE)))
+    new_pending = jnp.where(new_state == ALERT_PENDING, held, 0)
+    return new_state, new_pending
+
+
+def firing_mask(alerts: AlertState) -> jnp.ndarray:
+    """[S] bool — any rule firing for the service."""
+    return (alerts.astate == ALERT_FIRING).any(axis=1)
+
+
+def active_mask(alerts: AlertState) -> jnp.ndarray:
+    """[S] bool — any rule pending or firing (burn-mode scale-in guard)."""
+    return ((alerts.astate == ALERT_PENDING)
+            | (alerts.astate == ALERT_FIRING)).any(axis=1)
+
+
+def alert_step(state: SimState, info, params: SimParams, dyn,
+               app) -> SimState:
+    """The Alerting tick stage: accumulate SLIs from this tick's finished
+    hops, seal the SLI window on the telemetry cadence, evaluate the burn
+    rules over closed windows, advance the state machines, and append
+    transitions into the event ring.  Runs right after the span pass
+    (post-Execute) so it sees the same FinishInfo."""
+    al = state.alerts
+    cl = state.cloudlets
+    i32, f32 = jnp.int32, jnp.float32
+    S = al.sli_acc.shape[0]
+
+    target_ms, budget = objectives(app, dyn)
+
+    # --- SLI accumulate: (good, bad) completions per service this tick --
+    fin = info.fin & (info.pre_service >= 0)
+    svc = jnp.where(fin, info.pre_service, S)       # S = drop lane
+    svc_safe = jnp.clip(info.pre_service, 0, S - 1)
+    arrival = cl.flts[:, cl.layout.f("arrival")]
+    sojourn_ms = (info.tfin - arrival) * 1000.0
+    bad = fin & (sojourn_ms > target_ms[svc_safe])
+    # one [C,2] scatter-add, not two [C] ones — CPU scatters serialize
+    gb = jnp.stack([(fin & ~bad).astype(f32), bad.astype(f32)], axis=1)
+    acc = al.sli_acc + jnp.zeros((S, 2), f32).at[svc].add(gb, mode="drop")
+
+    # --- window seal: same cadence as the telemetry metric ring ---------
+    L = al.sli_win.shape[0]
+    Wt = params.tel_window_ticks
+    due = (state.tick % Wt) == (Wt - 1)
+    w = al.win[0]
+    slot = w % L
+    sli_win = al.sli_win.at[slot].set(
+        jnp.where(due, acc, al.sli_win[slot]))
+    acc = jnp.where(due, jnp.zeros_like(acc), acc)
+    w_closed = w + due.astype(i32)
+
+    # --- burn rules + state machine -------------------------------------
+    cond = evaluate_rules(sli_win, w_closed, budget, params, dyn)
+    st0 = al.astate
+    st1, pending1 = step_machine(st0, al.pending, cond, params.slo_for_ticks)
+    fired = (st1 == ALERT_FIRING) & (st0 != ALERT_FIRING)
+    resolved = st1 == ALERT_RESOLVED        # only reachable from FIRING
+
+    # --- transition events into the append-until-full ring --------------
+    changed = (st1 != st0).reshape(-1)                       # [S*NR]
+    svc_id = jnp.repeat(jnp.arange(S, dtype=i32), N_RULES)
+    rule_id = jnp.tile(jnp.arange(N_RULES, dtype=i32), S)
+    AP = al.ev_time.shape[0]
+    rank = jnp.cumsum(changed.astype(i32)) - 1
+    dst = al.ev_n[0] + rank
+    keep = changed & (dst < AP)
+    idx = jnp.where(keep, dst, AP)          # AP = discard sentinel
+    t_now = state.time + dyn.dt
+    return state._replace(alerts=al._replace(
+        sli_win=sli_win,
+        sli_acc=acc,
+        win=al.win + due.astype(i32),
+        astate=st1,
+        pending=pending1,
+        fires=al.fires + fired.astype(i32),
+        resolves=al.resolves + resolved.astype(i32),
+        firing_ticks=al.firing_ticks + (st1 == ALERT_FIRING).astype(i32),
+        ev_time=al.ev_time.at[idx].set(
+            jnp.full((S * N_RULES,), t_now, f32), mode="drop"),
+        ev_service=al.ev_service.at[idx].set(svc_id, mode="drop"),
+        ev_rule=al.ev_rule.at[idx].set(rule_id, mode="drop"),
+        ev_state=al.ev_state.at[idx].set(
+            st1.reshape(-1).astype(i32), mode="drop"),
+        ev_n=al.ev_n + jnp.sum(keep.astype(i32)),
+        ev_drops=al.ev_drops + (jnp.sum(changed.astype(i32))
+                                - jnp.sum(keep.astype(i32))),
+    ))
+
+
+# --------------------------------------------------------------------------
+# Host-side end-of-run drain (no second io_callback in the hot loop)
+# --------------------------------------------------------------------------
+
+def drain_events(alerts: AlertState, tags=None) -> list:
+    """Materialize alert-transition rows from a final AlertState.
+
+    Handles both solo states ([AP] rings) and run_batch stacks
+    ([B, AP] rings); ``tags`` optionally labels each batch lane (defaults
+    to the lane index — matching run_batch's auto tel_tag).  Rows carry
+    the `export.ALERT_COLUMNS` schema with human-readable rule/state
+    label values.
+    """
+    ev_time = np.asarray(alerts.ev_time)
+    if ev_time.size == 0 and ev_time.ndim <= 1:
+        return []
+    batched = ev_time.ndim == 2
+    B = ev_time.shape[0] if batched else 1
+
+    def lane(arr, b):
+        a = np.asarray(arr)
+        return a[b] if batched else a
+
+    if tags is None:
+        tag_of = lambda b: float(b)
+    else:
+        t = np.asarray(tags).reshape(-1)
+        tag_of = lambda b: float(t[b]) if t.size > 1 else float(t[0])
+
+    rows = []
+    for b in range(B):
+        n = int(lane(alerts.ev_n, b).reshape(-1)[0])
+        times = lane(alerts.ev_time, b)
+        svcs = lane(alerts.ev_service, b)
+        rules = lane(alerts.ev_rule, b)
+        states = lane(alerts.ev_state, b)
+        for j in range(min(n, times.shape[0])):
+            rows.append({
+                "time_s": float(times[j]),
+                "tag": tag_of(b),
+                "service": int(svcs[j]),
+                "rule": ALERT_RULES[int(rules[j])],
+                "state": ALERT_STATES[int(states[j])],
+            })
+    return rows
+
+
+def drain_to_exporter(state: SimState, params: SimParams,
+                      tags=None) -> None:
+    """Push the final state's alert transitions to the installed alert
+    sinks (`export.install_alert`).  Called from Simulation.run /
+    run_batch next to the telemetry drain."""
+    if not enabled(params):
+        return
+    from . import export
+    rows = drain_events(state.alerts, tags=tags)
+    if rows:
+        export.dispatch_alerts(rows)

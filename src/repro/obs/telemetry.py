@@ -60,34 +60,63 @@ def record_spans(state: SimState, info, params: SimParams) -> SimState:
     mode carries them) are still readable, and Derive has not yet
     respawned over the freed slots.  The ring is append-until-full with
     an exact overflow counter (never a silent cap).
+
+    Sampled finishers are rank-compacted into a ``[KB = min(SP, C)]``
+    gather FIRST, so the per-tick row build and scatter touch KB slots
+    instead of stacking the full ``[C, 11]`` pool (the PR-8 obs-overhead
+    regression: at case1b scale that was 2^18 × 11 values staged per tick
+    for ≤ a handful of sampled spans).  Identical semantics: a sampled
+    item with compaction rank ≥ KB either can't exist (KB = C) or would
+    have overflowed the ring anyway (KB = SP ≤ dst), so the kept set,
+    write order, and drop counts match the full-pool scatter bit-for-bit.
+
+    ``tel_span_tick_cap`` (> 0) tightens KB further — the ring capacity
+    SP sizes the whole-run budget, so a big ring otherwise re-inflates
+    the per-tick staging it exists to amortize (case1b: SP=4096 rows
+    built every tick for ~15 expected sampled finishers).  A tick with
+    more sampled finishers than the budget drops the excess — counted
+    exactly in ``span_drops``, the ring discipline, never silent.
     """
     cl, tel = state.cloudlets, state.telemetry
     i32, f32 = jnp.int32, jnp.float32
     C = info.fin.shape[0]
     SP = tel.span_i.shape[0]
+    KB = min(SP, C)
+    if params.tel_span_tick_cap:
+        KB = min(KB, params.tel_span_tick_cap)
 
     r_safe = jnp.maximum(info.pre_req, 0)
     sampled = info.fin & (info.pre_req >= 0) & (tel.sample[r_safe] > 0)
-    # rank-compact the sampled finishers onto ring slots [span_n, …)
-    rank = jnp.cumsum(sampled.astype(i32)) - 1
-    dst = tel.span_n[0] + rank
-    keep = sampled & (dst < SP)
-    n_want = jnp.sum(sampled.astype(i32))
+    csum = jnp.cumsum(sampled.astype(i32))
+    n_want = csum[C - 1]
+
+    # invert the ranking: slot j ← pool index of the j-th sampled
+    # finisher.  csum jumps to j+1 exactly at that pool index, so a
+    # searchsorted over the (sorted) cumsum finds all KB slots in
+    # O(KB log C) — not the [C]-length scatter this used to be (CPU
+    # scatters serialize; past-the-end queries return C = invalid).
+    src = jnp.searchsorted(csum, jnp.arange(1, KB + 1, dtype=i32),
+                           side="left").astype(i32)
+    valid = src < C
+    sc = jnp.minimum(src, C - 1)            # safe gather index
+
+    inst_k = info.pre_inst[sc]
+    host = jnp.where(inst_k >= 0,
+                     state.instances.host[jnp.maximum(inst_k, 0)], -1)
+    cols = cl.layout.columns
+    neg1 = jnp.full((KB,), -1, i32)
+    edge = cl.edge[sc] if "edge" in cols else neg1
+    attempt = cl.attempt[sc] if "attempt" in cols else jnp.zeros((KB,), i32)
+    src_host = cl.src_host[sc] if "src_host" in cols else neg1
+    # column order == TEL_SPAN_I_COLUMNS / TEL_SPAN_F_COLUMNS
+    rows_i = jnp.stack([cl.req[sc], cl.service[sc], inst_k, host, src_host,
+                        edge, attempt, cl.wait_ticks[sc]], axis=1)
+    rows_f = jnp.stack([cl.arrival[sc], cl.start[sc], info.tfin[sc]], axis=1)
+
+    dst = tel.span_n[0] + jnp.arange(KB, dtype=i32)
+    keep = valid & (dst < SP)
     n_keep = jnp.sum(keep.astype(i32))
     idx = jnp.where(keep, dst, SP)          # SP = drop sentinel
-
-    host = jnp.where(info.pre_inst >= 0,
-                     state.instances.host[jnp.maximum(info.pre_inst, 0)],
-                     -1)
-    cols = cl.layout.columns
-    neg1 = jnp.full((C,), -1, i32)
-    edge = cl.edge if "edge" in cols else neg1
-    attempt = cl.attempt if "attempt" in cols else jnp.zeros((C,), i32)
-    src_host = cl.src_host if "src_host" in cols else neg1
-    # column order == TEL_SPAN_I_COLUMNS / TEL_SPAN_F_COLUMNS
-    rows_i = jnp.stack([cl.req, cl.service, info.pre_inst, host, src_host,
-                        edge, attempt, cl.wait_ticks], axis=1)
-    rows_f = jnp.stack([cl.arrival, cl.start, info.tfin], axis=1)
 
     tel = tel._replace(
         span_i=tel.span_i.at[idx].set(rows_i, mode="drop"),

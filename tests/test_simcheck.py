@@ -38,6 +38,8 @@ GOLDEN_STREAM_DIGESTS = {
     # telemetry is observation-only: NO tick RNG consumed, so the fifth
     # combo's topology is pinned EQUAL to fabric+chaos (PR 8)
     "fabric+chaos+telemetry": "bceab1a96eb2745f",
+    # alerting is pure arithmetic over sealed SLI windows: same pin (PR 9)
+    "fabric+chaos+alerting": "bceab1a96eb2745f",
 }
 
 
