@@ -1,13 +1,17 @@
-"""CLI: ``python -m repro.analysis [--only SECTION,...] [--waive RULE,...]``
+"""CLI: ``python -m repro.analysis [--only SECTION,...]``
 
 Exit code 0 = every static invariant holds; 1 = violations (printed one
-per line, prefixed by their section).
+per line, prefixed by their section).  Rule waivers live in
+``analysis/waivers.toml`` (DESIGN.md §8) — there is deliberately no
+CLI waive flag: a flag silences forever and invisibly, a file row is
+reviewed in the diff and expires.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from . import shardability
 from .simcheck import run_simcheck
 
 
@@ -17,20 +21,20 @@ def main(argv=None) -> int:
         description="simcheck: static analysis of the jitted tick "
                     "program (DESIGN.md §8)")
     ap.add_argument("--only", default=None,
-                    help="comma list of sections to run "
-                         "(lint,layout,streams,recompile); default all")
-    ap.add_argument("--waive", default=None,
-                    help="comma list of jaxpr-lint rule ids to waive "
-                         "(f64,callback,transfer,donation)")
+                    help="comma list of sections to run (lint,layout,"
+                         "streams,recompile,intervals,shardability); "
+                         "default all")
     ap.add_argument("--sweep-points", type=int, default=8,
                     help="run_batch sweep width for the recompile "
                          "sentinel (default 8)")
+    ap.add_argument("--shard-report", default=None, metavar="PATH",
+                    help="write the full shardability report (per-phase "
+                         "tables + every cross-shard eqn) as JSON to "
+                         "PATH (requires the shardability section)")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
-    waive = set(args.waive.split(",")) if args.waive else None
-    report = run_simcheck(only=only, waive=waive,
-                          sweep_points=args.sweep_points)
+    report = run_simcheck(only=only, sweep_points=args.sweep_points)
 
     for sec, probs in report.sections.items():
         status = "clean" if not probs else f"{len(probs)} violation(s)"
@@ -41,6 +45,18 @@ def main(argv=None) -> int:
         print(f"[simcheck]   compiles: warm="
               f"{report.sentinel.warm_compiles} "
               f"counting={report.sentinel.counting_compiles}")
+    for combo, irep in report.interval_reports.items():
+        print(f"[simcheck]   intervals {irep.summary()}")
+    for combo, srep in report.shard_reports.items():
+        print(f"[simcheck]   shardability {srep.summary()}")
+    if args.shard_report:
+        if not report.shard_reports:
+            print("[simcheck] --shard-report given but the shardability "
+                  "section did not run", file=sys.stderr)
+            return 2
+        shardability.write_report(
+            list(report.shard_reports.values()), args.shard_report)
+        print(f"[simcheck]   shardability report -> {args.shard_report}")
     for p in report.problems:
         print(f"VIOLATION {p}")
     print(f"[simcheck] {'OK' if report.ok else 'FAILED'}")

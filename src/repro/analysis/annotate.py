@@ -1,0 +1,46 @@
+"""Scatter-hazard declarations for the index-safety verifier (DESIGN.md §8).
+
+The interval pass (:mod:`repro.analysis.intervals`) must prove every
+``scatter`` site duplicate-free.  Two escape hatches exist, both spelled as
+:func:`jax.named_scope` wrappers so they are pure metadata — the lowered
+program, goldens, and stream digests are bit-identical with or without them:
+
+* :func:`collide` — collisions are the *point* (segment_sum-style
+  accumulation into shared slots).  The verifier accepts the site and lists
+  it in the report as ``declared-collide``.
+* :func:`disjoint` — the author asserts the index vector is duplicate-free
+  but the abstract domain cannot prove it (e.g. the two-scatter spawn writer,
+  whose slot list is distinct by construction of the free-slot compaction).
+  The verifier accepts it as ``declared-disjoint``; under ``REPRO_CHECKED=1``
+  the same sites carry :mod:`jax.experimental.checkify` runtime asserts, so
+  CI exercises the declared invariant once per combo.
+
+Scopes nest inside the tick-phase scopes emitted by ``engine.make_tick``,
+so a site's name stack reads e.g. ``Dispatch/repro_collide:segment_sum``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+COLLIDE_PREFIX = "repro_collide:"
+DISJOINT_PREFIX = "repro_disjoint:"
+
+
+def collide(label: str):
+    """Declare that scatters in this scope intentionally collide."""
+    return jax.named_scope(COLLIDE_PREFIX + label)
+
+
+def disjoint(label: str):
+    """Declare that scatters in this scope are duplicate-free by
+    construction (runtime-checked under ``REPRO_CHECKED=1``)."""
+    return jax.named_scope(DISJOINT_PREFIX + label)
+
+
+def checked_mode() -> bool:
+    """True when ``REPRO_CHECKED=1``: trace checkify asserts into declared
+    sites and run the program under ``checkify.checkify``.  Read at trace
+    time; the engine folds it into the compile-cache key."""
+    return os.environ.get("REPRO_CHECKED", "") == "1"

@@ -1,0 +1,409 @@
+"""Sharding-readiness auditor (DESIGN.md §8).
+
+ROADMAP's top open item — mega-scale via ``shard_map`` — proposes
+sharding the tick program over the cloudlet axis C and the instance
+axis I.  Before that port exists, this pass answers the question it
+depends on: **which eqns of today's tick program stay shard-local
+under that sharding, and which need communication?**
+
+The analysis is extent-based: the audit sim is built with
+collision-free caps (every labeled axis extent unique among all array
+extents in the program), so a dimension of size ``max_cloudlets`` IS
+the cloudlet axis and can be labeled ``C`` without dataflow tracking.
+Each eqn is then classified from its primitive semantics and the
+labels of its operand/result dims:
+
+* ``local`` — no labeled dim, or the op is elementwise/structural
+  along labeled dims (every shard computes its slice independently);
+* ``gather`` — the op reads or writes *across* a labeled dim in a
+  data-dependent or sequential way (gathers addressed into a sharded
+  dim, scatter-set, cumsum/sort along the dim, reshapes that merge a
+  sharded dim away): the shard_map port needs a gather/permute here;
+* ``all_reduce`` — an associative combine across a labeled dim
+  (reductions over C/I, scatter-add/max/min accumulators): the port
+  keeps a per-shard partial and all-reduces it.
+
+The per-phase report is pinned as a committed baseline
+(``shard_baseline.json``); CI fails when a change ADDS cross-shard
+eqns to any phase — the regression gate the sharding PR lands behind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from .intervals import _PHASES, _phase_of, _site_str
+
+# primitives that are elementwise or structural along every dim they
+# keep: each output lane depends only on the same lanes of the inputs,
+# so a sharded dim passes straight through
+_ELEMENTWISE = frozenset("""
+add sub mul div rem max min pow and or xor not neg sign abs floor ceil
+round exp log log1p expm1 sqrt rsqrt cbrt logistic tanh sin cos erf
+erf_inv integer_pow eq ne lt le gt ge select_n convert_element_type
+stop_gradient shift_left shift_right_logical shift_right_arithmetic
+nextafter is_finite clamp square copy real imag bitcast_convert_type
+population_count clz
+""".split())
+
+_STRUCTURAL = frozenset("""
+broadcast_in_dim squeeze expand_dims slice pad rev transpose iota
+reshape concatenate split copy_p device_put
+""".split())
+
+# reductions: associative combine over `axes` → all-reduce when a
+# labeled axis is reduced
+_REDUCTIONS = frozenset("""
+reduce_sum reduce_max reduce_min reduce_and reduce_or reduce_prod
+reduce_xor argmax argmin reduce_precision
+""".split())
+
+# sequential/prefix ops over `axis` → cross-shard pipeline (gather)
+_SEQUENTIAL = frozenset("""
+cumsum cumprod cummax cummin cumlogsumexp sort
+""".split())
+
+_CONTROL = ("scan", "while", "cond", "pjit", "closed_call", "remat",
+            "custom_jvp_call", "custom_vjp_call", "checkpoint")
+
+_RNG = frozenset("""
+random_bits random_seed random_wrap random_unwrap random_fold_in
+threefry2x32 random_gamma
+""".split())
+
+
+@dataclasses.dataclass
+class ShardEqn:
+    phase: str
+    cls: str        # "gather" | "all_reduce"
+    prim: str
+    site: str
+    why: str
+
+    def __str__(self):
+        return (f"{self.phase:>10s} {self.cls:<10s} {self.prim:<18s} "
+                f"{self.site}  ({self.why})")
+
+
+@dataclasses.dataclass
+class ShardReport:
+    combo: str
+    entries: List[ShardEqn]          # non-local eqns only
+    n_local: int
+    n_total: int
+
+    def phase_table(self) -> Dict[str, Dict[str, int]]:
+        """phase -> {'gather': n, 'all_reduce': n} (phases with no
+        cross-shard eqns map to zeros)."""
+        table = {p: {"gather": 0, "all_reduce": 0} for p in _PHASES}
+        for e in self.entries:
+            table.setdefault(e.phase, {"gather": 0, "all_reduce": 0})
+            table[e.phase][e.cls] += 1
+        return table
+
+    def to_json(self) -> dict:
+        """Baseline shape: per (phase, class, primitive) counts — stable
+        across line-number churn, sensitive to new cross-shard eqns."""
+        counts = Counter((e.phase, e.cls, e.prim) for e in self.entries)
+        return {
+            "combo": self.combo,
+            "n_local": self.n_local,
+            "n_total": self.n_total,
+            "cross_shard": {f"{p}:{c}:{m}": n
+                            for (p, c, m), n in sorted(counts.items())},
+        }
+
+    def summary(self) -> str:
+        t = self.phase_table()
+        hot = sum(v["gather"] + v["all_reduce"] for v in t.values())
+        return (f"{self.combo}: {self.n_total} eqns, "
+                f"{self.n_local} shard-local, {hot} cross-shard "
+                f"({sum(v['gather'] for v in t.values())} gather, "
+                f"{sum(v['all_reduce'] for v in t.values())} all-reduce)")
+
+
+class ShardAudit:
+    """Walks a ClosedJaxpr classifying every eqn against an axis spec
+    ``{label: (extent, ...)}`` — e.g. ``{"C": (4096,), "I": (64, 65)}``
+    labels every dim of extent 4096 as the cloudlet axis and dims of
+    64 or 65 (the [I+1] accumulator rows) as the instance axis."""
+
+    def __init__(self, spec: Dict[str, Tuple[int, ...]]):
+        self.ext2label = {}
+        for label, extents in spec.items():
+            for e in extents:
+                if e in self.ext2label:
+                    raise ValueError(
+                        f"axis extent {e} labeled both "
+                        f"{self.ext2label[e]!r} and {label!r} — pick "
+                        f"collision-free caps for the audit sim")
+                self.ext2label[e] = label
+        self.entries: List[ShardEqn] = []
+        self.n_local = 0
+        self.n_total = 0
+
+    # -- labeling ----------------------------------------------------------
+
+    def _labels(self, aval) -> Tuple[Optional[str], ...]:
+        shape = getattr(aval, "shape", ())
+        return tuple(self.ext2label.get(int(d)) for d in shape)
+
+    def _labeled_extents(self, aval) -> Counter:
+        shape = getattr(aval, "shape", ())
+        return Counter(int(d) for d in shape
+                       if int(d) in self.ext2label)
+
+    def _label_counts(self, aval) -> Counter:
+        """Counter over axis *labels* (not extents): [I+1] → [I] slices
+        keep the label even though the extent changes."""
+        shape = getattr(aval, "shape", ())
+        return Counter(self.ext2label[int(d)] for d in shape
+                       if int(d) in self.ext2label)
+
+    def _any_labeled(self, eqn) -> bool:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            if any(l is not None for l in self._labels(v.aval)):
+                return True
+        return False
+
+    # -- walk --------------------------------------------------------------
+
+    def run(self, closed, scope: str = "") -> None:
+        jx = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+        for eqn in jx.eqns:
+            self.eqn(eqn, scope)
+
+    def eqn(self, eqn, scope: str) -> None:
+        name = eqn.primitive.name
+        stack = str(eqn.source_info.name_stack)
+        esc = scope + ("/" if scope and stack else "") + stack
+
+        if name in ("scan", "while", "cond") or name in _CONTROL:
+            for key in ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr"):
+                sub = eqn.params.get(key)
+                if sub is not None:
+                    self.run(sub, esc)
+            for br in eqn.params.get("branches", ()):
+                self.run(br, esc)
+            return
+
+        self.n_total += 1
+        cls, why = self._classify(eqn, name)
+        if cls == "local":
+            self.n_local += 1
+            return
+        self.entries.append(ShardEqn(_phase_of(esc), cls, name,
+                                     _site_str(eqn), why))
+
+    # -- classification ----------------------------------------------------
+
+    def _classify(self, eqn, name: str) -> Tuple[str, str]:
+        if not self._any_labeled(eqn):
+            return "local", ""
+        if name in _ELEMENTWISE or name in _RNG:
+            return "local", ""
+
+        if name in _REDUCTIONS:
+            axes = eqn.params.get("axes", ())
+            shape = getattr(eqn.invars[0].aval, "shape", ())
+            hit = [a for a in axes
+                   if int(shape[a]) in self.ext2label]
+            if hit:
+                lbl = self.ext2label[int(shape[hit[0]])]
+                return "all_reduce", f"reduces the {lbl} axis"
+            return "local", ""
+
+        if name in _SEQUENTIAL:
+            ax = eqn.params.get("axis", eqn.params.get("dimension", 0))
+            shape = getattr(eqn.invars[0].aval, "shape", ())
+            if shape and int(shape[ax]) in self.ext2label:
+                lbl = self.ext2label[int(shape[ax])]
+                return "gather", f"sequential along the {lbl} axis"
+            return "local", ""
+
+        if name == "gather":
+            dnums = eqn.params["dimension_numbers"]
+            op_shape = eqn.invars[0].aval.shape
+            for d in dnums.start_index_map:
+                if int(op_shape[d]) in self.ext2label:
+                    lbl = self.ext2label[int(op_shape[d])]
+                    return "gather", f"indexes into the {lbl} axis"
+            return "local", ""
+
+        if name == "dynamic_slice":
+            op_shape = eqn.invars[0].aval.shape
+            sizes = eqn.params["slice_sizes"]
+            for d, (full, win) in enumerate(zip(op_shape, sizes)):
+                if int(win) < int(full) and int(full) in self.ext2label:
+                    lbl = self.ext2label[int(full)]
+                    return "gather", f"dynamic start along the {lbl} axis"
+            return "local", ""
+
+        if name in ("scatter", "scatter-add", "scatter-max", "scatter-min",
+                    "scatter-mul", "dynamic_update_slice"):
+            assoc = name in ("scatter-add", "scatter-max", "scatter-min",
+                             "scatter-mul")
+            op_shape = eqn.invars[0].aval.shape
+            if name == "dynamic_update_slice":
+                upd_shape = eqn.invars[1].aval.shape
+                tgt = [d for d, (full, win) in
+                       enumerate(zip(op_shape, upd_shape))
+                       if int(win) < int(full)
+                       and int(full) in self.ext2label]
+            else:
+                dnums = eqn.params["dimension_numbers"]
+                tgt = [d for d in dnums.scatter_dims_to_operand_dims
+                       if int(op_shape[d]) in self.ext2label]
+            if tgt:
+                lbl = self.ext2label[int(op_shape[tgt[0]])]
+                if assoc:
+                    return ("all_reduce",
+                            f"associative scatter into the {lbl} axis")
+                return "gather", f"scatter-set into the {lbl} axis"
+            # Sharded dims that the operand also carries pass through as
+            # aligned window dims (e.g. a per-lane column write into the
+            # [C, NI] pool) — shard-local.  Only update labels the
+            # operand LACKS cross shards to reach the target.
+            op_lbl = self._label_counts(eqn.invars[0].aval)
+            for v in eqn.invars[1:]:
+                crossing = self._label_counts(v.aval) - op_lbl
+                if crossing:
+                    lbl = next(iter(crossing))
+                    if assoc:
+                        return ("all_reduce",
+                                f"accumulates {lbl}-sharded updates "
+                                f"into a replicated target")
+                    return ("gather",
+                            f"writes {lbl}-sharded updates into a "
+                            f"replicated target")
+            return "local", ""
+
+        if name == "reshape":
+            lost = (self._label_counts(eqn.invars[0].aval)
+                    - self._label_counts(eqn.outvars[0].aval))
+            if lost:
+                lbl = next(iter(lost))
+                return "gather", f"reshape merges the {lbl} axis away"
+            return "local", ""
+
+        if name == "dot_general":
+            dnums = eqn.params["dimension_numbers"]
+            (lc, rc), _ = dnums
+            lshape = eqn.invars[0].aval.shape
+            for d in lc:
+                if int(lshape[d]) in self.ext2label:
+                    lbl = self.ext2label[int(lshape[d])]
+                    return "all_reduce", f"contracts the {lbl} axis"
+            return "local", ""
+
+        if name in _STRUCTURAL:
+            # structural ops that keep every labeled AXIS are local —
+            # the diff runs over labels, not extents, so [I+1] → [I]
+            # slices pass; flattening a labeled axis away does not
+            src = Counter()
+            for v in eqn.invars:
+                src |= self._label_counts(v.aval)
+            dst = Counter()
+            for v in eqn.outvars:
+                dst |= self._label_counts(v.aval)
+            lost = src - dst
+            if lost:
+                lbl = next(iter(lost))
+                return "gather", f"{name} drops the {lbl} axis"
+            return "local", ""
+
+        # unclassified primitive touching a sharded dim: surface it so a
+        # new cross-shard dependency can never slip in silently
+        return "gather", f"unclassified primitive {name!r}"
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+def _audit_sim(network: str, faults: str):
+    """The audit sim: same diamond app as the golden combos but with
+    collision-free caps — C=96 and I=12/13 match no other extent in the
+    program, so extent-based labeling is unambiguous."""
+    from repro.core import SimCaps, SimParams, Simulation, diamond
+
+    caps = SimCaps(n_clients=7, max_requests=40, max_cloudlets=96,
+                   max_instances=12, n_vms=3, d_max=2, max_replicas=4)
+    params = SimParams(dt=0.05, n_ticks=4, n_clients=6, spawn_rate=10.0,
+                       wait_lo=0.1, wait_hi=0.3, seed=7,
+                       scaling_policy=1, network=network, faults=faults)
+    return Simulation(diamond(mi=200.0), caps=caps, params=params)
+
+
+def default_spec(caps) -> Dict[str, Tuple[int, ...]]:
+    """The ROADMAP sharding proposal: cloudlet axis C, instance axis I
+    (including the [I+1]-row finish/ejection accumulators)."""
+    return {"C": (caps.max_cloudlets,),
+            "I": (caps.max_instances, caps.max_instances + 1)}
+
+
+def audit_combo(network: str, faults: str, *, sim=None,
+                spec: Optional[Dict[str, Tuple[int, ...]]] = None
+                ) -> ShardReport:
+    from repro.core.types import DynParams
+
+    sim = sim or _audit_sim(network, faults)
+    state = sim.init_state()
+    dyn = DynParams.from_params(sim.params)
+    closed = jax.make_jaxpr(sim._tick)(state, dyn, sim.app)
+    audit = ShardAudit(spec or default_spec(sim.caps))
+    audit.run(closed)
+    return ShardReport(f"{network}+{faults}", audit.entries,
+                       audit.n_local, audit.n_total)
+
+
+def audit_jaxpr(closed, spec: Dict[str, Tuple[int, ...]],
+                combo: str = "adhoc") -> ShardReport:
+    """Library entry for tests: audit one ClosedJaxpr against a spec."""
+    audit = ShardAudit(spec)
+    audit.run(closed)
+    return ShardReport(combo, audit.entries, audit.n_local, audit.n_total)
+
+
+def compare_to_baseline(reports: List[ShardReport],
+                        baseline: dict) -> List[str]:
+    """Regression gate: a (phase, class, primitive) count may shrink
+    (improvement — re-pin the baseline) but any increase or new key is
+    a violation."""
+    problems: List[str] = []
+    base_combos = baseline.get("combos", {})
+    for rep in reports:
+        cur = rep.to_json()["cross_shard"]
+        base = base_combos.get(rep.combo, {}).get("cross_shard")
+        if base is None:
+            problems.append(
+                f"[{rep.combo}] no committed shardability baseline — "
+                f"re-pin analysis/shard_baseline.json")
+            continue
+        for key, n in cur.items():
+            b = base.get(key, 0)
+            if n > b:
+                problems.append(
+                    f"[{rep.combo}] cross-shard eqns at {key} grew "
+                    f"{b} → {n}: a new cross-shard dependency entered "
+                    f"this phase (re-pin only if intended)")
+    return problems
+
+
+def baseline_json(reports: List[ShardReport]) -> dict:
+    return {"combos": {r.combo: r.to_json() for r in reports}}
+
+
+def write_report(reports: List[ShardReport], path: str) -> None:
+    doc = baseline_json(reports)
+    for rep in reports:
+        doc["combos"][rep.combo]["phase_table"] = rep.phase_table()
+        doc["combos"][rep.combo]["entries"] = [
+            dataclasses.asdict(e) for e in rep.entries]
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")

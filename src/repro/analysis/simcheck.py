@@ -2,18 +2,30 @@
 
 ``python -m repro.analysis`` drives this module: jaxpr lint + donation
 check per golden combo, the layout-access diff, the RNG-stream audit
-(with per-combo topology digests), and the recompile sentinel.  Each
-section returns a list of violation strings; the CLI exits non-zero if
-any survive.  See DESIGN.md §8 for the rule catalog and waiver policy.
+(with per-combo topology digests), the recompile sentinel, the
+interval-based index-safety verifier, and the sharding-readiness
+auditor.  Each section returns a list of violation strings; findings
+from the rule-tagged sections (lint, intervals, shardability) are
+filtered through ``analysis/waivers.toml`` first, and expired or
+unmatched waivers are themselves violations.  The CLI exits non-zero
+if anything survives.  See DESIGN.md §8 for the rule catalog and
+waiver policy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set
+import json
+import pathlib
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.types import DynParams
 
-from . import jaxpr_lint, layout_check, recompile, streams
+from . import (intervals, jaxpr_lint, layout_check, recompile,
+               shardability, streams)
+from .waivers import apply_waivers, load_waivers
+
+SHARD_BASELINE_PATH = pathlib.Path(__file__).with_name(
+    "shard_baseline.json")
 
 GOLDEN_COMBOS = (("uniform", "none"), ("uniform", "chaos"),
                  ("fabric", "none"), ("fabric", "chaos"))
@@ -87,6 +99,10 @@ class SimcheckReport:
     sections: Dict[str, List[str]]
     stream_digests: Dict[str, str]
     sentinel: Optional[recompile.SentinelReport]
+    interval_reports: Dict[str, intervals.ComboReport] = \
+        dataclasses.field(default_factory=dict)
+    shard_reports: Dict[str, shardability.ShardReport] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def problems(self) -> List[str]:
@@ -98,33 +114,53 @@ class SimcheckReport:
         return not self.problems
 
 
+# Sections whose findings carry a rule id and are therefore eligible
+# for a dated waiver in analysis/waivers.toml.  layout/streams/
+# recompile findings are structural and stay unwaivable.
+WAIVABLE_SECTIONS = ("lint", "intervals", "shardability")
+
+
+def _split_waived(waivable: List[Tuple[str, str, str]],
+                  surviving: List[str]) -> Dict[str, List[str]]:
+    """Regroup apply_waivers' surviving texts (an ordered subsequence
+    of the waivable texts) back into their sections."""
+    per_sec: Dict[str, List[str]] = {}
+    si = 0
+    for sec, _rule, text in waivable:
+        if si < len(surviving) and surviving[si] == text:
+            per_sec.setdefault(sec, []).append(text)
+            si += 1
+    return per_sec
+
+
 def run_simcheck(only: Optional[Set[str]] = None,
-                 waive: Optional[Set[str]] = None,
                  sweep_points: int = 8) -> SimcheckReport:
     """Run the requested analyzer sections (default: all).
 
     ``only`` limits to a subset of {'lint', 'layout', 'streams',
-    'recompile'}; ``waive`` forwards jaxpr-lint rule waivers.
+    'recompile', 'intervals', 'shardability'}.  Rule waivers come from
+    ``analysis/waivers.toml`` (DESIGN.md §8), not from arguments.
     """
     run = lambda name: only is None or name in only
     sections: Dict[str, List[str]] = {}
     digests: Dict[str, str] = {}
     sentinel = None
+    # (section, rule, text) findings that waivers.toml may silence
+    waivable: List[Tuple[str, str, str]] = []
+    interval_reports: Dict[str, intervals.ComboReport] = {}
+    shard_reports: Dict[str, shardability.ShardReport] = {}
 
     if run("lint"):
-        lint: List[str] = []
-        for net, fl in GOLDEN_COMBOS:
-            for p in jaxpr_lint.lint_combo(net, fl, waive=waive):
-                lint.append(f"[{net}+{fl}] {p}")
-        net, fl, tel = TELEMETRY_COMBO
-        for p in jaxpr_lint.lint_combo(net, fl, waive=waive,
-                                       telemetry=tel):
-            lint.append(f"[{net}+{fl}+telemetry] {p}")
-        net, fl, alert = ALERTING_COMBO
-        for p in jaxpr_lint.lint_combo(net, fl, waive=waive,
-                                       telemetry=alert):
-            lint.append(f"[{net}+{fl}+alerting] {p}")
-        sections["lint"] = lint
+        lint_combos = [(*c, "none") for c in GOLDEN_COMBOS] \
+            + [TELEMETRY_COMBO, ALERTING_COMBO]
+        lint_tags = {"stream": "telemetry", "alert": "alerting"}
+        for net, fl, tel in lint_combos:
+            tag = f"+{lint_tags[tel]}" if tel in lint_tags else ""
+            for p in jaxpr_lint.lint_combo(net, fl, telemetry=tel):
+                # lint problems are "rule: detail" — the prefix is the
+                # waivable rule id (f64, callback, transfer, donation)
+                waivable.append(("lint", p.split(":", 1)[0],
+                                 f"[{net}+{fl}{tag}] {p}"))
     if run("layout"):
         sections["layout"] = layout_check.check_layout_access()
     if run("streams"):
@@ -134,6 +170,51 @@ def run_simcheck(only: Optional[Set[str]] = None,
     if run("recompile"):
         sentinel = recompile.run_sentinel(n_points=sweep_points)
         sections["recompile"] = sentinel.problems
+    if run("intervals"):
+        for net, fl in GOLDEN_COMBOS:
+            rep = intervals.verify_combo(net, fl)
+            interval_reports[rep.combo] = rep
+            for s in rep.violations:
+                waivable.append(("intervals", s.rule or s.kind,
+                                 f"[{rep.combo}] {s.line()}"))
+            for f in rep.induction_fails:
+                waivable.append((
+                    "intervals", "induction",
+                    f"[{rep.combo}] inductive bound regressed: {f} — "
+                    "a tick output escapes its seeded state bound"))
+            for prim, n in rep.unknown_prims.items():
+                waivable.append((
+                    "intervals", "unknown-prim",
+                    f"[{rep.combo}] {n} eqn(s) use unmodeled primitive "
+                    f"{prim!r} — add a transfer rule in intervals.py"))
+    if run("shardability"):
+        for net, fl in GOLDEN_COMBOS:
+            rep = shardability.audit_combo(net, fl)
+            shard_reports[rep.combo] = rep
+        if SHARD_BASELINE_PATH.exists():
+            baseline = json.loads(SHARD_BASELINE_PATH.read_text())
+        else:
+            baseline = {"combos": {}}
+        for p in shardability.compare_to_baseline(
+                list(shard_reports.values()), baseline):
+            waivable.append(("shardability", "shardability", p))
+
+    ran_waivable = [s for s in WAIVABLE_SECTIONS if run(s)]
+    if ran_waivable:
+        waivers = load_waivers()
+        surviving, wproblems = apply_waivers(
+            [(rule, text) for _, rule, text in waivable], waivers)
+        per_sec = _split_waived(waivable, surviving)
+        for sec in ran_waivable:
+            sections[sec] = per_sec.get(sec, [])
+        if only is not None and set(ran_waivable) != set(WAIVABLE_SECTIONS):
+            # partial runs can't tell a stale waiver from one whose
+            # section was skipped — only expiry stays fatal
+            wproblems = [p for p in wproblems
+                         if "matched no finding" not in p]
+        sections["waivers"] = wproblems
 
     return SimcheckReport(sections=sections, stream_digests=digests,
-                          sentinel=sentinel)
+                          sentinel=sentinel,
+                          interval_reports=interval_reports,
+                          shard_reports=shard_reports)

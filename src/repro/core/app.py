@@ -87,6 +87,106 @@ class AppStatic(NamedTuple):
         return self.host_zone.shape[0]
 
 
+def validate_app(app: AppStatic, caps) -> None:
+    """Build-time bounds validation (DESIGN.md §8).
+
+    Every id table the jitted tick indexes with is range-checked HERE,
+    before tracing, with errors that name the offending entry — the
+    PR-4 bug class (an undersized edge table silently corrupting
+    goldens) becomes a build failure.  The index-safety verifier's
+    seed intervals (``analysis/intervals.py``) assume exactly these
+    bounds, so a validated app makes its proofs sound.
+    """
+    from .types import edge_table_size
+    S, A, H = app.n_services, app.n_apis, app.n_hosts
+    D = int(app.succ.shape[1]) if app.succ.ndim == 2 else 0
+    problems: list[str] = []
+
+    succ = np.asarray(app.succ).reshape(S, -1)
+    if succ.size and (succ.min() < -1 or succ.max() >= S):
+        problems.append(
+            f"succ table ids must lie in [-1, {S - 1}]: got "
+            f"[{succ.min()}, {succ.max()}]")
+    if D > caps.d_max:
+        problems.append(
+            f"service out-degree {D} exceeds caps.d_max={caps.d_max}; "
+            f"the per-edge retry/breaker tables would be undersized — "
+            f"raise SimCaps.d_max to at least {D}")
+    if app.n_edges != S * D + max(A, 1):
+        problems.append(
+            f"edge tables have {app.n_edges} rows but the edge-id space "
+            f"is S*d_max+A = {S}*{D}+{max(A, 1)} = {S * D + max(A, 1)}; "
+            f"edge ids past the table would read out of bounds")
+    if D <= caps.d_max and app.n_edges > edge_table_size(S, caps.d_max, A):
+        problems.append(
+            f"edge tables ({app.n_edges} rows) exceed the caps-derived "
+            f"bound edge_table_size({S}, {caps.d_max}, {A}) = "
+            f"{edge_table_size(S, caps.d_max, A)}")
+
+    entry = np.asarray(app.api_entry).reshape(A, -1)
+    if entry.size and (entry.min() < -1 or entry.max() >= S):
+        problems.append(
+            f"api_entry service ids must lie in [-1, {S - 1}]: got "
+            f"[{entry.min()}, {entry.max()}]")
+    for a in range(A):
+        if entry.size and not (entry[a] >= 0).any():
+            problems.append(f"API {a} has no entry service")
+
+    reps = np.asarray(app.tmpl_replicas)
+    if reps.size and (reps.min() < 1 or reps.max() > caps.max_replicas):
+        bad = int(np.argmax((reps < 1) | (reps > caps.max_replicas)))
+        problems.append(
+            f"service {bad} declares {int(reps[bad])} replicas; replica "
+            f"counts must lie in [1, caps.max_replicas={caps.max_replicas}]")
+    if reps.size and int(reps.sum()) > caps.max_instances:
+        problems.append(
+            f"total initial replicas {int(reps.sum())} exceed "
+            f"caps.max_instances={caps.max_instances}; raise the cap or "
+            f"trim the templates")
+
+    hz = np.asarray(app.host_zone)
+    if hz.size and (hz.min() < 0 or hz.max() >= H):
+        problems.append(
+            f"host_zone ids must lie in [0, {H}): got "
+            f"[{hz.min()}, {hz.max()}]")
+
+    # Reject call-graph cycles reachable from an API entry: derivative
+    # spawning would loop forever, and acyclicity is what caps chain
+    # depth at S-1 hops — the depth column's declared bound
+    # (types.POOL_COLUMN_BOUNDS) behind scheduler.derive's depth clamp.
+    # Only meaningful once both id tables are in range (checked above).
+    ids_ok = ((not succ.size or (succ.min() >= -1 and succ.max() < S))
+              and (not entry.size
+                   or (entry.min() >= -1 and entry.max() < S)))
+    if succ.size and entry.size and ids_ok:
+        depth = np.full((S,), -1, np.int64)
+        roots = entry[entry >= 0]
+        depth[roots] = 0
+        cyclic = False
+        for _ in range(S + 1):
+            changed = False
+            for s in range(S):
+                if depth[s] < 0:
+                    continue
+                for c in succ[s]:
+                    if c >= 0 and depth[c] < depth[s] + 1:
+                        depth[c] = depth[s] + 1
+                        changed = True
+            if not changed:
+                break
+        else:
+            cyclic = True
+        if cyclic:
+            problems.append(
+                "service call graph has a cycle reachable from an API "
+                "entry — derivative spawning would never terminate")
+
+    if problems:
+        raise ValueError(
+            "application failed build-time bounds validation:\n  - "
+            + "\n  - ".join(problems))
+
+
 def build_app(graph: ServiceGraph,
               templates: dict[str, InstanceTemplate] | None = None,
               default_template: InstanceTemplate | None = None,

@@ -20,7 +20,7 @@ from . import faults as faultsmod
 from . import network as netmod
 from . import policies
 from . import scheduler
-from .app import AppStatic, InstanceTemplate, build_app
+from .app import AppStatic, InstanceTemplate, build_app, validate_app
 from .generator import client_phase
 from .graph import ServiceGraph
 from .placement import initial_allocation, migrate
@@ -132,13 +132,17 @@ def make_tick(caps: SimCaps, params: SimParams,
                                time=st.time + dyn.dt), tr
 
         # --- Generation (paper Alg 1) ---------------------------------
+        # Each phase body runs under a jax.named_scope so every eqn in
+        # the lowered program carries its tick phase — pure metadata
+        # (digests identical), consumed by the analysis passes (§8).
         if probe:
             probe("Generation")
-        gen = client_phase(state.clients.wait, state.time,
-                           state.requests.count, app.api_cdf, dyn, k_gen)
-        state, gen_res = scheduler.gen_spawn(
-            state, app, caps, gen.fired, gen.api, gen.wait_proposal, k_gen2,
-            dyn, params=params, net_rng=k_net_g)
+        with jax.named_scope("Generation"):
+            gen = client_phase(state.clients.wait, state.time,
+                               state.requests.count, app.api_cdf, dyn, k_gen)
+            state, gen_res = scheduler.gen_spawn(
+                state, app, caps, gen.fired, gen.api, gen.wait_proposal,
+                k_gen2, dyn, params=params, net_rng=k_net_g)
         if stop_after == "Generation":
             return early(state)
 
@@ -149,9 +153,10 @@ def make_tick(caps: SimCaps, params: SimParams,
             stage = (stop_after.split("/", 1)[1]
                      if stop_after and stop_after.startswith("Disruption/")
                      else None)
-            state = faultsmod.disruption(
-                state, app, caps, params, dyn, keys[-3], keys[-2],
-                keys[-1] if network else None, stop_after=stage)
+            with jax.named_scope("Disruption"):
+                state = faultsmod.disruption(
+                    state, app, caps, params, dyn, keys[-3], keys[-2],
+                    keys[-1] if network else None, stop_after=stage)
         if stop_after and stop_after.startswith("Disruption"):
             return early(state)
 
@@ -159,22 +164,26 @@ def make_tick(caps: SimCaps, params: SimParams,
         if network:
             if probe:
                 probe("Transit")
-            state = netmod.transit(state, caps, params, dyn, app)
+            with jax.named_scope("Transit"):
+                state = netmod.transit(state, caps, params, dyn, app)
         if stop_after == "Transit":
             return early(state)
 
         # --- Dispatching (waiting → execution, load-balanced) ----------
         if probe:
             probe("Dispatch")
-        state = scheduler.dispatch(state, app, caps, params, dyn, k_lb,
-                                   network=network)
+        with jax.named_scope("Dispatch"):
+            state = scheduler.dispatch(state, app, caps, params, dyn, k_lb,
+                                       network=network)
         if stop_after == "Dispatch":
             return early(state)
 
         # --- Scheduling (time-shared execution + finish) ----------------
         if probe:
             probe("Execute")
-        state, fin_info = scheduler.execute(state, app, caps, params, dyn)
+        with jax.named_scope("Execute"):
+            state, fin_info = scheduler.execute(state, app, caps, params,
+                                                dyn)
         if stop_after == "Execute":
             return early(state)
 
@@ -183,13 +192,15 @@ def make_tick(caps: SimCaps, params: SimParams,
         if telemetry:
             if probe:
                 probe("Telemetry")
-            state = telmod.record_spans(state, fin_info, params)
+            with jax.named_scope("Telemetry"):
+                state = telmod.record_spans(state, fin_info, params)
 
         # --- Alerting (SLO burn-rate rules + alert state machine) --------
         if alerting:
             if probe:
                 probe("Alerting")
-            state = slomod.alert_step(state, fin_info, params, dyn, app)
+            with jax.named_scope("Alerting"):
+                state = slomod.alert_step(state, fin_info, params, dyn, app)
         if stop_after == "Alerting":
             return early(state)
 
@@ -197,15 +208,17 @@ def make_tick(caps: SimCaps, params: SimParams,
         if has_edges:  # static: edge-free graphs skip the spawn machinery
             if probe:
                 probe("Derive")
-            state = scheduler.derive(state, app, caps, fin_info, k_der,
-                                     params=params, net_rng=k_net_d)
+            with jax.named_scope("Derive"):
+                state = scheduler.derive(state, app, caps, fin_info, k_der,
+                                         params=params, net_rng=k_net_d)
         if stop_after == "Derive":
             return early(state)
 
         # --- Response (critical-path completion, paper §4.3.2) ----------
         if probe:
             probe("Response")
-        state, n_done = scheduler.complete(state, dyn, faults=faults_on)
+        with jax.named_scope("Response"):
+            state, n_done = scheduler.complete(state, dyn, faults=faults_on)
         if stop_after == "Response":
             return early(state)
 
@@ -221,37 +234,41 @@ def make_tick(caps: SimCaps, params: SimParams,
                     st = migrate(st, app, caps, dyn)
                 return st
 
-            if scaling == "always":
-                state = do_scale(state)
-            else:
-                due = (state.tick % dyn.scale_interval) == \
-                    (dyn.scale_interval - 1)
-                state = jax.lax.cond(due, do_scale, lambda st: st, state)
+            with jax.named_scope("Scaling"):
+                if scaling == "always":
+                    state = do_scale(state)
+                else:
+                    due = (state.tick % dyn.scale_interval) == \
+                        (dyn.scale_interval - 1)
+                    state = jax.lax.cond(due, do_scale, lambda st: st,
+                                         state)
         if stop_after == "Scaling":
             return early(state)
 
         if probe:
             probe("Trace")
-        trace = TickTrace(
-            completed=n_done,
-            generated=gen_res.n_new_requests,
-            n_waiting=jnp.sum((state.cloudlets.status == CL_WAITING)
-                              .astype(jnp.int32)),
-            n_exec=jnp.sum((state.cloudlets.status == CL_EXEC)
-                           .astype(jnp.int32)),
-            n_transit=jnp.sum((state.cloudlets.status == CL_TRANSIT)
-                              .astype(jnp.int32)),
-            used_mips=jnp.sum(state.instances.used_mips),
-            active_instances=jnp.sum((state.instances.status == INST_ON)
-                                     .astype(jnp.int32)),
-            active_clients=gen.n_active,
-        )
+        with jax.named_scope("Trace"):
+            trace = TickTrace(
+                completed=n_done,
+                generated=gen_res.n_new_requests,
+                n_waiting=jnp.sum((state.cloudlets.status == CL_WAITING)
+                                  .astype(jnp.int32)),
+                n_exec=jnp.sum((state.cloudlets.status == CL_EXEC)
+                               .astype(jnp.int32)),
+                n_transit=jnp.sum((state.cloudlets.status == CL_TRANSIT)
+                                  .astype(jnp.int32)),
+                used_mips=jnp.sum(state.instances.used_mips),
+                active_instances=jnp.sum((state.instances.status == INST_ON)
+                                         .astype(jnp.int32)),
+                active_clients=gen.n_active,
+            )
 
         # --- Telemetry: window accumulate/close (observation-only) ------
         if telemetry:
             if probe:
                 probe("Telemetry")
-            state = telmod.close_window(state, params, dyn, trace)
+            with jax.named_scope("Telemetry"):
+                state = telmod.close_window(state, params, dyn, trace)
 
         state = state._replace(tick=state.tick + 1, time=state.time + dyn.dt)
         return state, trace
@@ -321,6 +338,9 @@ class Simulation:
                              n_hosts=V, host_zone=host_zone,
                              slo_target_ms=service_slo_ms,
                              slo_budget=service_slo_budget)
+        # fail on out-of-range ids NOW, with the offending entry named,
+        # instead of silently corrupting goldens at run time (§8)
+        validate_app(self.app, self.caps)
         self.vm_mips = np.asarray(
             vm_mips if vm_mips is not None
             else np.full(V, 32_000.0), np.float32)
@@ -447,7 +467,9 @@ class Simulation:
         return run_fn
 
     def _get_compiled(self, state: SimState, dyn: DynParams):
-        key = (self._static_key(),
+        from ..analysis.annotate import checked_mode
+        checked = checked_mode()
+        key = (self._static_key(), checked,
                self._shape_key((state, dyn, self.app)))
         hit = Simulation._compiled_cache.get(key)
         if hit is not None:
@@ -455,13 +477,23 @@ class Simulation:
         t0 = _time.perf_counter()
         run_fn = self._make_run_fn()
 
-        # The input state is consumed: run() builds a fresh one per call,
-        # so the [C,*] pool blocks alias the output instead of doubling
-        # resident bytes.  (Batch paths can't donate — their [B,...]
-        # outputs don't match the unbatched input shapes.)  simcheck's
-        # jaxpr lint enforces this stays donated.
-        compiled = (jax.jit(run_fn, donate_argnums=0)
-                    .lower(state, dyn, self.app).compile())
+        if checked:
+            # REPRO_CHECKED=1: functionalize the declared-invariant asserts
+            # (annotate.disjoint sites) into a checkify error carried
+            # through the scan; run() throws on the first violated one.
+            # No donation — checkify's error prefix changes the arity.
+            from jax.experimental import checkify
+            run_fn = checkify.checkify(run_fn,
+                                       errors=checkify.user_checks)
+            compiled = jax.jit(run_fn).lower(state, dyn, self.app).compile()
+        else:
+            # The input state is consumed: run() builds a fresh one per
+            # call, so the [C,*] pool blocks alias the output instead of
+            # doubling resident bytes.  (Batch paths can't donate — their
+            # [B,...] outputs don't match the unbatched input shapes.)
+            # simcheck's jaxpr lint enforces this stays donated.
+            compiled = (jax.jit(run_fn, donate_argnums=0)
+                        .lower(state, dyn, self.app).compile())
         dt = _time.perf_counter() - t0
         Simulation._compiled_cache[key] = compiled
         return compiled, dt
@@ -492,7 +524,13 @@ class Simulation:
         dyn = DynParams.from_params(self.params)
         compiled, compile_s = self._get_compiled(state, dyn)
         t1 = _time.perf_counter()
-        out_state, trace = compiled(state, dyn, self.app)
+        out = compiled(state, dyn, self.app)
+        from ..analysis.annotate import checked_mode
+        if checked_mode():
+            err, (out_state, trace) = out
+            err.throw()
+        else:
+            out_state, trace = out
         out_state = jax.block_until_ready(out_state)
         t2 = _time.perf_counter()
         if self.params.telemetry == "stream":

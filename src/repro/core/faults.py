@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from ..analysis import streams
 from . import network as netmod
 from .app import AppStatic
+from ..analysis.annotate import collide
 from .pool import (assign_free_slots, scatter_pool, segment_rank,
                    segment_sum as _segsum)
 from .types import (ALERT_FIRING, CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING,
@@ -283,12 +284,15 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
     # --- permanent failures propagate to the owning request --------------
     # finish is scatter-maxed with the failure time so the request's
     # response (finish - arrival) stays ≥ 0 when it completes as failed.
+    # several cloudlets of one request can fail in the same wave —
+    # accumulation into the shared request row is intended
     rdst = jnp.where(permanent & (cl.req >= 0), cl.req, R)
-    requests = req._replace(
-        outstanding=req.outstanding.at[rdst].add(-1, mode="drop"),
-        failed=req.failed.at[rdst].max(jnp.uint8(1), mode="drop"),
-        finish=req.finish.at[rdst].max(t, mode="drop"),
-    )
+    with collide("request_fail_counts"):
+        requests = req._replace(
+            outstanding=req.outstanding.at[rdst].add(-1, mode="drop"),
+            failed=req.failed.at[rdst].max(jnp.uint8(1), mode="drop"),
+            finish=req.finish.at[rdst].max(t, mode="drop"),
+        )
 
     # --- free failed slots (masked column writes, no per-field scatters) --
     cl2 = cl.with_cols(status=jnp.where(failed, CL_FREE, cl.status),
@@ -349,8 +353,9 @@ def disruption(state: SimState, app: AppStatic, caps: SimCaps,
         rem_bytes=bytes_sp)
 
     rds2 = jnp.where(asg.live, req_new, R)
-    requests = requests._replace(
-        spawned=requests.spawned.at[rds2].add(1, mode="drop"))
+    with collide("spawn_request_counts"):
+        requests = requests._replace(
+            spawned=requests.spawned.at[rds2].add(1, mode="drop"))
     if stop_after == "respawn":
         return state._replace(rr=rr, cloudlets=cloudlets,
                               requests=requests, fault=sched_fault)

@@ -14,6 +14,8 @@ from typing import Protocol
 import jax
 import jax.numpy as jnp
 
+from ..analysis.annotate import checked_mode, disjoint
+
 from .types import INST_ON
 
 # --- load balancing (paper §4.2: "maximum idle resources or random") ------
@@ -106,8 +108,18 @@ def eject_view(sched, eject_until: jnp.ndarray, time: jnp.ndarray
     n_ok = jnp.where(keep, pos + 1, 0).max(axis=1)
     rows = jnp.broadcast_to(jnp.arange(S, dtype=i32)[:, None], (S, Rm))
     cols = jnp.where(keep, pos, Rm)               # Rm = out of bounds → drop
-    iof_eff = jnp.full((S, Rm), -1, i32).at[rows, cols].set(
-        iof, mode="drop")
+    if checked_mode():
+        from jax.experimental import checkify
+        hits = jnp.zeros((S, Rm), i32).at[rows, cols].add(1, mode="drop")
+        checkify.check(jnp.all(hits <= 1),
+                       "eject_view: duplicate compaction target")
+    # Disjointness: within a row the kept positions are a prefix ranking
+    # (cumsum of the keep mask), so (row, pos) pairs never repeat; the
+    # 2-D prefix pattern is outside the 1-D rank tag, hence the
+    # declaration + checked-mode assert.
+    with disjoint("eject_view"):
+        iof_eff = jnp.full((S, Rm), -1, i32).at[rows, cols].set(
+            iof, mode="drop")
     return iof_eff, n_ok
 
 

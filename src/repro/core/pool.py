@@ -12,6 +12,8 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from ..analysis.annotate import checked_mode, collide, disjoint
+
 
 def segment_sum(data: jnp.ndarray, ids: jnp.ndarray, n: int,
                 valid: jnp.ndarray | None = None) -> jnp.ndarray:
@@ -20,8 +22,9 @@ def segment_sum(data: jnp.ndarray, ids: jnp.ndarray, n: int,
     if valid is None:
         valid = ids >= 0
     idx = jnp.where(valid, ids, n)
-    return jnp.zeros((n,), data.dtype).at[idx].add(
-        jnp.where(valid, data, jnp.zeros_like(data)), mode="drop")
+    with collide("segment_sum"):
+        return jnp.zeros((n,), data.dtype).at[idx].add(
+            jnp.where(valid, data, jnp.zeros_like(data)), mode="drop")
 
 
 class SlotAssignment(NamedTuple):
@@ -107,11 +110,29 @@ def scatter_pool(cl, asg: SlotAssignment, **cols):
             [jnp.broadcast_to(jnp.asarray(cols[n], dtype), (K,))
              for n in names], axis=1)
 
-    return cl.replace(
-        ints=ints.at[dst].set(stacked(layout.i_fields, ints.dtype),
-                              mode="drop"),
-        flts=flts.at[dst].set(stacked(layout.f_fields, flts.dtype),
-                              mode="drop"))
+    if checked_mode():
+        # The disjointness declared below is exactly what free-slot
+        # compaction guarantees; REPRO_CHECKED=1 re-verifies it at runtime.
+        from jax.experimental import checkify
+        hits = jnp.zeros((C,), jnp.int32).at[dst].add(1, mode="drop")
+        checkify.check(jnp.all(hits <= 1),
+                       "scatter_pool: duplicate destination slot")
+        checkify.check(
+            jnp.all(jnp.where(asg.live, (asg.dst >= 0) & (asg.dst < C),
+                              True)),
+            "scatter_pool: live destination out of range")
+
+    # Disjointness argument: live lanes carry slot_of_rank values — indices
+    # of DISTINCT free slots by construction of the prefix-sum compaction —
+    # and dead lanes carry the sentinel C, which mode="drop" discards.  The
+    # interval domain cannot see this (the rank→slot gather erases the
+    # rank tag), hence the declaration + the checked-mode assert above.
+    with disjoint("scatter_pool"):
+        return cl.replace(
+            ints=ints.at[dst].set(stacked(layout.i_fields, ints.dtype),
+                                  mode="drop"),
+            flts=flts.at[dst].set(stacked(layout.f_fields, flts.dtype),
+                                  mode="drop"))
 
 
 def segment_rank(keys: jnp.ndarray, mask: jnp.ndarray,
@@ -151,8 +172,9 @@ def segment_rank(keys: jnp.ndarray, mask: jnp.ndarray,
     earlier = jnp.tril(jnp.ones((L, L), bool), k=-1)[None]
     intra = jnp.sum(same & earlier, axis=2).astype(i32)            # [B, L]
     # exclusive per-segment totals of all preceding blocks
-    cnt = jnp.zeros((B, num_segments + 1), i32).at[
-        jnp.arange(B, dtype=i32)[:, None], kb].add(mb.astype(i32))
+    with collide("segment_rank"):
+        cnt = jnp.zeros((B, num_segments + 1), i32).at[
+            jnp.arange(B, dtype=i32)[:, None], kb].add(mb.astype(i32))
     base = jnp.cumsum(cnt, axis=0) - cnt                           # [B, S+1]
     rank = (base[jnp.arange(B)[:, None], kb] + intra).reshape(-1)[:n]
     return jnp.where(mask, rank, n)
@@ -170,6 +192,7 @@ def segment_rank_sorted(keys: jnp.ndarray, mask: jnp.ndarray,
     order = jnp.argsort(k, stable=True)  # stable → slot order within segment
     pos = jnp.zeros((n,), i32).at[order].set(jnp.arange(n, dtype=i32))
     # first position of each segment
-    first = jnp.full((num_segments + 1,), n, i32).at[k].min(pos)
+    with collide("segment_rank_sorted"):
+        first = jnp.full((num_segments + 1,), n, i32).at[k].min(pos)
     rank = pos - first[k]
     return jnp.where(mask, rank, n)

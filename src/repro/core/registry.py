@@ -131,8 +131,23 @@ def register(app_spec, instance_spec=None, caps: SimCaps | None = None,
     """
     spec = load_app_json(app_spec)
     graph = graph_from_spec(spec)
+    # spec-level bounds checks name the offending document entry; the
+    # table-level recheck (app.validate_app) runs inside Simulation
+    caps_eff = caps or SimCaps()
+    for item in (load_instances_yaml(instance_spec).get("instances", [])
+                 if instance_spec is not None else []):
+        r = int(item.get("replicas", 1))
+        if not 1 <= r <= caps_eff.max_replicas:
+            who = item.get("labels", item.get("prefix", "?"))
+            raise ValueError(
+                f"instance group {who!r} declares replicas={r}; must lie "
+                f"in [1, caps.max_replicas={caps_eff.max_replicas}]")
     if host_zone is None and "zones" in spec:
         host_zone = np.asarray(spec["zones"], np.int32)
+        if host_zone.shape[0] != caps_eff.n_vms:
+            raise ValueError(
+                f'app document "zones" lists {host_zone.shape[0]} entries '
+                f"but the cluster has caps.n_vms={caps_eff.n_vms} hosts")
     services = spec["services"]
     slo_ms = [float(s.get("slo_ms", -1.0)) for s in services]
     slo_budget = [float(s.get("slo_budget", -1.0)) for s in services]

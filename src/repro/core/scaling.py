@@ -20,6 +20,7 @@ from . import policies
 from .app import AppStatic
 from .types import (ALERT_FIRING, ALERT_PENDING, DynParams, INST_DRAIN,
                     INST_FREE, INST_ON, SimCaps, SimParams, SimState)
+from ..analysis.annotate import collide
 
 
 def _service_util(state: SimState, n_services: int) -> jnp.ndarray:
@@ -28,10 +29,11 @@ def _service_util(state: SimState, n_services: int) -> jnp.ndarray:
     on = inst.status == INST_ON
     sid = jnp.where(on, inst.service, -1)
     idx = jnp.where(sid >= 0, sid, n_services)
-    tot = jnp.zeros((n_services,), jnp.float32).at[idx].add(
-        jnp.where(on, inst.util_ema, 0.0), mode="drop")
-    cnt = jnp.zeros((n_services,), jnp.float32).at[idx].add(
-        on.astype(jnp.float32), mode="drop")
+    with collide("service_util"):
+        tot = jnp.zeros((n_services,), jnp.float32).at[idx].add(
+            jnp.where(on, inst.util_ema, 0.0), mode="drop")
+        cnt = jnp.zeros((n_services,), jnp.float32).at[idx].add(
+            on.astype(jnp.float32), mode="drop")
     return tot / jnp.maximum(cnt, 1.0)
 
 
@@ -121,9 +123,14 @@ def _scale_out(state: SimState, s, app: AppStatic) -> SimState:
             mips_used=st.vms.mips_used.at[vm].add(need_mips),
             ram_used=st.vms.ram_used.at[vm].add(need_ram))
         rank = st.sched.svc_replicas[s]
+        R = st.sched.inst_of_rank.shape[1]
+        # clamp is a no-op (want_out requires svc_replicas < max_replicas)
+        # but makes svc_replicas ∈ [0, max_replicas] a local invariant the
+        # index-safety verifier can carry through the fori loop
         sc = st.sched._replace(
             inst_of_rank=st.sched.inst_of_rank.at[s, rank].set(slot),
-            svc_replicas=st.sched.svc_replicas.at[s].add(1))
+            svc_replicas=st.sched.svc_replicas.at[s].set(
+                jnp.minimum(st.sched.svc_replicas[s] + 1, R)))
         c = st.counters._replace(scale_out=st.counters.scale_out + 1)
         return st._replace(instances=i, vms=v, sched=sc, counters=c)
 
@@ -156,12 +163,15 @@ def _scale_in(state: SimState, s) -> SimState:
     def commit(st: SimState) -> SimState:
         i = st.instances._replace(
             status=st.instances.status.at[slot].set(INST_DRAIN))
-        last = st.sched.svc_replicas[s] - 1
+        # clamps are no-ops (ok requires rank ≥ 1, hence svc_replicas ≥ 2)
+        # but keep `last` and the new count provably in range
+        last = jnp.clip(st.sched.svc_replicas[s] - 1, 0, R - 1)
         iof = st.sched.inst_of_rank.at[s, rank].set(
             jnp.where(rank == last, -1, st.sched.inst_of_rank[s, last]))
         sc = st.sched._replace(
             inst_of_rank=iof.at[s, last].set(-1),
-            svc_replicas=st.sched.svc_replicas.at[s].add(-1))
+            svc_replicas=st.sched.svc_replicas.at[s].set(
+                jnp.maximum(st.sched.svc_replicas[s] - 1, 0)))
         c = st.counters._replace(scale_in=st.counters.scale_in + 1)
         return st._replace(instances=i, sched=sc, counters=c)
 

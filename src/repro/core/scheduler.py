@@ -39,6 +39,7 @@ from ..kernels.cloudlet_step import cloudlet_finish_pool as _cloudlet_finish_op
 from .app import AppStatic
 from .pool import (assign_free_slots, scatter_pool, segment_rank,
                    segment_sum as _segsum)
+from ..analysis.annotate import collide
 from .types import (CL_EXEC, CL_FREE, CL_TRANSIT, CL_WAITING,
                     DynParams, INST_DRAIN, INST_FREE, INST_ON, SimCaps,
                     SimParams, SimState)
@@ -120,7 +121,10 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
     asg = assign_free_slots(cl.status == CL_FREE, valid)
     Ka = asg.dst.shape[0]
     svc_new = svc_flat[asg.src]          # rank-level gather (for sampling)
-    req_new = req_flat[asg.src]
+    # clamp is a no-op on live lanes (has_slot ⇒ slot < R, and only
+    # has_slot descriptors are compacted into live ranks) but makes
+    # req ∈ [-1, R-1] a pool-column invariant the verifier can carry
+    req_new = jnp.minimum(req_flat[asg.src], R - 1)
     api_flat = jnp.broadcast_to(api_r[:, None], (K, E)).reshape(-1)
     api_new = api_flat[asg.src]
     # client→entry edge id: after the S*d_max call edges (resilience, §7)
@@ -157,12 +161,15 @@ def gen_spawn(state: SimState, app: AppStatic, caps: SimCaps,
         arrival=jnp.full((Ka,), 0.0, f32) + state.time, start=-1.0,
         rem_bytes=bytes_new)
 
-    # direct scatter-adds: no [R]-sized temporaries on the spawn path
+    # direct scatter-adds: no [R]-sized temporaries on the spawn path.
+    # A request with several entry cloudlets hits its counters repeatedly —
+    # accumulation is the point.
     rdst = jnp.where(asg.live, req_new, R)
-    requests = requests._replace(
-        outstanding=requests.outstanding.at[rdst].add(1, mode="drop"),
-        spawned=requests.spawned.at[rdst].add(1, mode="drop"),
-    )
+    with collide("spawn_request_counts"):
+        requests = requests._replace(
+            outstanding=requests.outstanding.at[rdst].add(1, mode="drop"),
+            spawned=requests.spawned.at[rdst].add(1, mode="drop"),
+        )
     counters = ctr._replace(
         spawned=ctr.spawned + asg.n_assigned,
         dropped_cloudlets=ctr.dropped_cloudlets + asg.n_dropped,
@@ -377,8 +384,10 @@ def execute(state: SimState, app: AppStatic, caps: SimCaps,
     svc_rows = jnp.concatenate(
         [(acct_mips * dt)[:, None], out.inst_acc[:I, 1:5]], axis=1)
     sidx = jnp.where(svc_of_inst >= 0, svc_of_inst, S)
-    svc_acc = jnp.zeros((S + 1, 5), f32).at[sidx].add(
-        jnp.where((svc_of_inst >= 0)[:, None], svc_rows, 0.0), mode="drop")
+    with collide("svc_acc"):
+        svc_acc = jnp.zeros((S + 1, 5), f32).at[sidx].add(
+            jnp.where((svc_of_inst >= 0)[:, None], svc_rows, 0.0),
+            mode="drop")
     svc_stats = st._replace(
         usage_sum=st.usage_sum + svc_acc[:S, 0],
         finished=st.finished + svc_acc[:S, 1].astype(i32),
@@ -459,7 +468,9 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
     D = app.succ.shape[1]
     i32, f32 = jnp.int32, jnp.float32
 
-    parent_svc = jnp.where(info.fin, info.pre_service, 0)
+    # maximum() is a no-op (fin ⇒ the slot held a real service id) but
+    # pins parent_svc ∈ [0, S-1] for the succ-table row gather below
+    parent_svc = jnp.where(info.fin, jnp.maximum(info.pre_service, 0), 0)
     child = app.succ[parent_svc]                      # [C, D]
     valid = (info.fin[:, None] & (child >= 0)).reshape(-1)
     svc_flat = child.reshape(-1)
@@ -473,7 +484,11 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
     Ka = asg.dst.shape[0]
     svc_new = svc_flat[asg.src]          # rank-level gathers
     req_new = req_flat[asg.src]
-    dep_new = dep_flat[asg.src]
+    # clamp is a no-op (build validation rejects call-graph cycles, so a
+    # parent at depth S-1 has exhausted every service and can have no
+    # successors) but keeps the depth column inside its declared
+    # [0, S-1] bound
+    dep_new = jnp.minimum(dep_flat[asg.src], app.succ.shape[0] - 1)
     tf_new = tf_flat[asg.src]
     # Edge id: row = parent service, column = successor slot (§7).
     psvc_new = jnp.broadcast_to(parent_svc[:, None],
@@ -519,10 +534,12 @@ def derive(state: SimState, app: AppStatic, caps: SimCaps,
         length=length, rem=length, arrival=tf_new, start=-1.0,
         rem_bytes=bytes_new)
 
+    # several successors of one parent share a request — intended collisions
     rdst = jnp.where(asg.live, req_new, R)
-    requests = req._replace(
-        outstanding=req.outstanding.at[rdst].add(1, mode="drop"),
-        spawned=req.spawned.at[rdst].add(1, mode="drop"))
+    with collide("spawn_request_counts"):
+        requests = req._replace(
+            outstanding=req.outstanding.at[rdst].add(1, mode="drop"),
+            spawned=req.spawned.at[rdst].add(1, mode="drop"))
 
     # Outbound-RPC bandwidth (linear usage model, paper §5.2).
     live_pinst = jnp.where(asg.live, pin_flat[asg.src], -1)

@@ -422,6 +422,33 @@ CL_F_FIELDS = tuple(n for n, b, _ in POOL_COLUMNS if b == "f")
 _COL_BLOCK = {n: b for n, b, _ in POOL_COLUMNS}
 _COL_INIT = {n: v for n, _, v in POOL_COLUMNS}
 
+# Declared per-column invariant bounds, keyed like POOL_COLUMNS.  These are
+# the *inductive* invariants the index-safety verifier (analysis/intervals.py,
+# DESIGN.md §8) seeds the tick jaxpr with and re-checks on the tick's output
+# state: every value a column can hold at a tick boundary lies in
+# ``fn(caps, app) -> (lo, hi)``.  Id-like columns are what make pool
+# gathers/scatters provable; unbounded counters use ``inf``.
+_INF = float("inf")
+POOL_COLUMN_BOUNDS = {
+    "status":     lambda caps, app: (CL_FREE, CL_TRANSIT),
+    "req":        lambda caps, app: (-1, caps.max_requests - 1),
+    "service":    lambda caps, app: (-1, app.n_services - 1),
+    "inst":       lambda caps, app: (-1, caps.max_instances - 1),
+    "wait_ticks": lambda caps, app: (0, _INF),
+    # acyclicity (validate_app) caps any call chain at n_services hops
+    "depth":      lambda caps, app: (0, max(app.n_services - 1, 0)),
+    "src_host":   lambda caps, app: (-1, app.n_hosts - 1),
+    "attempt":    lambda caps, app: (0, _INF),
+    "edge":       lambda caps, app: (
+        -1, edge_table_size(app.n_services, caps.d_max, app.n_apis) - 1),
+    "src_inst":   lambda caps, app: (-1, caps.max_instances - 1),
+    "length":     lambda caps, app: (0.0, _INF),
+    "rem":        lambda caps, app: (-_INF, _INF),
+    "arrival":    lambda caps, app: (0.0, _INF),
+    "start":      lambda caps, app: (-1.0, _INF),
+    "rem_bytes":  lambda caps, app: (-_INF, _INF),
+}
+
 # Tick phase → columns it reads/writes (the registry the layout is keyed
 # on).  The first four phases exist in every mode; Transit only under
 # network="fabric", Disruption only under faults="chaos", and the

@@ -26,6 +26,8 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from ...analysis.annotate import collide
+
 CL_EXEC = 2
 
 
@@ -86,9 +88,10 @@ def cloudlet_finish(status, rem, inst, req, arrival, start, depth,
     exec_t = jnp.where(fin, tfin - started, 0.0)
     wait_t = jnp.where(fin, started - arrival, 0.0)
     iidx = jnp.where(execm & (inst >= 0), inst, n_inst)
-    inst_acc = jnp.zeros((n_inst + 1, 5), f32).at[iidx].add(
-        jnp.stack([consumed / dt, finf, sojourn, exec_t, wait_t], axis=1),
-        mode="drop")
+    with collide("inst_acc"):
+        inst_acc = jnp.zeros((n_inst + 1, 5), f32).at[iidx].add(
+            jnp.stack([consumed / dt, finf, sojourn, exec_t, wait_t], axis=1),
+            mode="drop")
 
     # per-request finish aggregates.  Two static strategies, same results:
     #  * small request pool (R ≤ C, Table 2 services-dominated cases):
@@ -98,16 +101,17 @@ def cloudlet_finish(status, rem, inst, req, arrival, start, depth,
     #  * large request pool (R > C, requests-dominated cases): update in
     #    place, so the [R] arrays are never re-streamed.
     ridx = jnp.where(fin & (req >= 0), req, n_req)
-    if n_req <= status.shape[0]:
-        critf = jnp.where(fin, (depth + 1).astype(f32), 0.0)
-        mx = jnp.zeros((n_req + 1, 2), f32).at[ridx].max(
-            jnp.stack([tfin, critf], axis=1), mode="drop")
-        req_finish = jnp.maximum(req_finish, mx[:n_req, 0])
-        req_crit = jnp.maximum(req_crit, mx[:n_req, 1].astype(i32))
-    else:
-        req_finish = req_finish.at[ridx].max(tfin, mode="drop")
-        req_crit = req_crit.at[ridx].max(depth + 1, mode="drop")
-    req_out = req_out.at[ridx].add(-fin.astype(i32), mode="drop")
+    with collide("req_finish_acc"):
+        if n_req <= status.shape[0]:
+            critf = jnp.where(fin, (depth + 1).astype(f32), 0.0)
+            mx = jnp.zeros((n_req + 1, 2), f32).at[ridx].max(
+                jnp.stack([tfin, critf], axis=1), mode="drop")
+            req_finish = jnp.maximum(req_finish, mx[:n_req, 0])
+            req_crit = jnp.maximum(req_crit, mx[:n_req, 1].astype(i32))
+        else:
+            req_finish = req_finish.at[ridx].max(tfin, mode="drop")
+            req_crit = req_crit.at[ridx].max(depth + 1, mode="drop")
+        req_out = req_out.at[ridx].add(-fin.astype(i32), mode="drop")
 
     return FinishOut(new_rem=new_rem, fin=fin, tfin=tfin, consumed=consumed,
                      inst_acc=inst_acc, req_finish=req_finish,

@@ -1,0 +1,188 @@
+"""Index-safety verifier self-tests (DESIGN.md §8).
+
+Seeded-violation layer for the interval pass: each rule is fed a small
+jaxpr containing a deliberate hazard and must fire — plus acceptance
+tests proving the escape hatches (declared collisions, proven-unique
+index vectors) do NOT fire.  The full golden-combo proof runs in the CI
+simcheck job (``python -m repro.analysis --only intervals``); this file
+keeps the analyzer honest on inputs where the verdict is known by
+construction.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.intervals import (analyze_jaxpr, from_concrete, ival,
+                                      top_for, verify_combo)
+from repro.core import pool
+
+
+def _sites(fn, seeds, *example_args):
+    closed = jax.make_jaxpr(fn)(*example_args)
+    sites, _outs, _it = analyze_jaxpr(closed, list(seeds))
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# Seeded violations: bounds rules
+# ---------------------------------------------------------------------------
+
+def test_oob_gather_flagged():
+    tbl = jnp.zeros((8,), jnp.float32)
+    idx = jnp.zeros((4,), jnp.int32)
+
+    def f(t, i):
+        # promise_in_bounds makes an unproven index undefined behaviour
+        return t.at[i].get(mode="promise_in_bounds")
+
+    bad = _sites(f, [ival(0.0, 1.0), ival(0, 9)], tbl, idx)
+    assert any(not s.ok and s.rule == "oob-gather" for s in bad)
+
+    ok = _sites(f, [ival(0.0, 1.0), ival(0, 7)], tbl, idx)
+    assert all(s.ok and s.bounds == "in-bounds" for s in ok)
+
+
+def test_oob_dynamic_slice_flagged():
+    tbl = jnp.zeros((8,), jnp.float32)
+
+    def f(t, start):
+        return jax.lax.dynamic_slice(t, (start,), (2,))
+
+    # start ∈ [0, 7] but the window needs start ≤ 6: wrong-window read
+    bad = _sites(f, [ival(0.0, 1.0), ival(0, 7)], tbl, jnp.int32(0))
+    assert any(not s.ok and s.rule == "oob-dslice" for s in bad)
+
+    ok = _sites(f, [ival(0.0, 1.0), ival(0, 6)], tbl, jnp.int32(0))
+    assert all(s.ok for s in ok)
+
+
+def test_oob_scatter_flagged_unless_dropped():
+    tbl = jnp.zeros((8,), jnp.float32)
+    idx = jnp.arange(4, dtype=jnp.int32)
+    val = jnp.ones((4,), jnp.float32)
+
+    def clipped(t, i, v):
+        return t.at[i].set(v, mode="clip", unique_indices=True)
+
+    # mode="clip" lands OOB writes in the WRONG slot — a violation
+    bad = _sites(clipped, [ival(0.0, 1.0), ival(0, 9), ival(1.0, 1.0)],
+                 tbl, idx, val)
+    assert any(not s.ok and s.rule == "oob-scatter" for s in bad)
+
+    def dropped(t, i, v):
+        return t.at[i].set(v, mode="drop", unique_indices=True)
+
+    # mode="drop" discards OOB writes — sound, reported as 'drop'
+    ok = _sites(dropped, [ival(0.0, 1.0), ival(0, 9), ival(1.0, 1.0)],
+                tbl, idx, val)
+    assert all(s.ok for s in ok)
+    assert any(s.bounds == "drop" for s in ok)
+
+
+# ---------------------------------------------------------------------------
+# Seeded violations: duplicate-freedom rules
+# ---------------------------------------------------------------------------
+
+def test_duplicate_index_scatter_flagged():
+    tbl = jnp.zeros((8,), jnp.float32)
+    idx = jnp.zeros((4,), jnp.int32)
+    val = jnp.ones((4,), jnp.float32)
+
+    def f(t, i, v):
+        return t.at[i].set(v, mode="drop")
+
+    # idx ∈ [0, 7] with no uniqueness evidence: last-write-wins races
+    bad = _sites(f, [ival(0.0, 1.0), ival(0, 7), ival(1.0, 1.0)],
+                 tbl, idx, val)
+    assert any(not s.ok and s.rule == "dup-scatter" and s.dups == "DUP"
+               for s in bad)
+
+
+def test_proven_unique_scatter_accepted():
+    tbl = jnp.zeros((8,), jnp.float32)
+    idx = jnp.arange(4, dtype=jnp.int32)
+    val = jnp.ones((4,), jnp.float32)
+
+    def f(t, i, v):
+        return t.at[i].set(v, mode="drop")
+
+    # the index SEED carries the pairwise-distinct tag (what the
+    # prefix-sum slot compaction establishes): accepted without a flag
+    ok = _sites(f, [ival(0.0, 1.0), ival(0, 7, unique=True),
+                    ival(1.0, 1.0)], tbl, idx, val)
+    assert any(s.ok and s.dups == "unique(proven)" for s in ok)
+
+
+def test_constant_index_scatter_accepted():
+    tbl = jnp.zeros((8,), jnp.float32)
+    val = jnp.ones((4,), jnp.float32)
+    idx = jnp.asarray([0, 2, 4, 6], jnp.int32)
+
+    def f(t, v):
+        return t.at[idx].set(v, mode="drop")
+
+    ok = _sites(f, [ival(0.0, 1.0), ival(1.0, 1.0)], tbl, val)
+    assert any(s.ok and s.dups in ("unique(const)", "unique(jnp)")
+               for s in ok)
+
+
+def test_declared_segment_sum_collision_accepted():
+    data = jnp.ones((16,), jnp.float32)
+    ids = jnp.zeros((16,), jnp.int32)
+
+    def f(d, i):
+        return pool.segment_sum(d, i, 4)
+
+    # ids may repeat AND stray out of range: the collide("segment_sum")
+    # scope + mode="drop" make the site acceptable by declaration
+    sites = _sites(f, [ival(0.0, 1.0), ival(-1, 99)], data, ids)
+    scatters = [s for s in sites if s.kind.startswith("scatter")]
+    assert scatters
+    assert all(s.ok for s in scatters)
+    assert any(s.dups == "declared-collide" for s in scatters)
+
+
+def test_undeclared_segment_sum_equivalent_flagged():
+    # The SAME computation without the collide() declaration must fail —
+    # the declaration is load-bearing, not decorative.
+    data = jnp.ones((16,), jnp.float32)
+    ids = jnp.zeros((16,), jnp.int32)
+
+    def f(d, i):
+        idx = jnp.where(i >= 0, i, 4)
+        return jnp.zeros((4,), d.dtype).at[idx].add(d, mode="drop")
+
+    sites = _sites(f, [ival(0.0, 1.0), ival(-1, 99)], data, ids)
+    assert any(not s.ok and s.rule == "dup-scatter" for s in sites)
+
+
+# ---------------------------------------------------------------------------
+# Seed helpers
+# ---------------------------------------------------------------------------
+
+def test_from_concrete_tracks_uniqueness():
+    v = from_concrete(jnp.asarray([3, 1, 2], jnp.int32))
+    assert (v.lo, v.hi, v.unique) == (1.0, 3.0, True)
+    w = from_concrete(jnp.asarray([1, 1, 2], jnp.int32))
+    assert not w.unique
+
+
+def test_top_for_is_dtype_wide():
+    t = top_for(jax.ShapeDtypeStruct((4,), jnp.int32))
+    assert t.lo == float(jnp.iinfo(jnp.int32).min)
+    assert t.hi == float(jnp.iinfo(jnp.int32).max)
+    b = top_for(jax.ShapeDtypeStruct((4,), jnp.bool_))
+    assert (b.lo, b.hi) == (0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# One full-combo proof (the other combos run in the CI simcheck job)
+# ---------------------------------------------------------------------------
+
+def test_verify_combo_uniform_none_fully_proven():
+    rep = verify_combo("uniform", "none")
+    assert rep.violations == []
+    assert rep.induction_fails == []
+    assert rep.unknown_prims == {}
+    assert all(s.ok for s in rep.sites)
+    # every site is attributed to a real tick phase by named_scope
+    assert all(s.phase != "?" for s in rep.sites)

@@ -1,0 +1,144 @@
+"""Sharding-readiness auditor self-tests (DESIGN.md §8).
+
+Seeded-violation layer: small jaxprs with a planted cross-shard
+dependency must be classified gather/all-reduce, purely shard-local
+programs must stay clean, and the baseline comparator must catch
+growth.  The full golden-combo audit (and its diff against the
+committed ``analysis/shard_baseline.json``) runs in the CI simcheck
+job (``python -m repro.analysis --only shardability``).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.shardability import (ShardAudit, audit_jaxpr,
+                                         baseline_json,
+                                         compare_to_baseline, default_spec)
+
+C = 16          # pretend cloudlet-axis extent for these tests
+SPEC = {"C": (C,)}
+
+
+def _audit(fn, *example_args, spec=SPEC):
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return audit_jaxpr(closed, spec)
+
+
+# ---------------------------------------------------------------------------
+# Classification
+# ---------------------------------------------------------------------------
+
+def test_elementwise_on_sharded_axis_is_local():
+    rep = _audit(lambda x: x * 2.0 + 1.0, jnp.ones((C,), jnp.float32))
+    assert rep.entries == []
+    assert rep.n_local == rep.n_total > 0
+
+
+def test_planted_cross_shard_gather_reported():
+    x = jnp.ones((C,), jnp.float32)
+    idx = jnp.zeros((C,), jnp.int32)
+
+    # lanes read OTHER lanes of the C-sharded operand: needs a gather
+    rep = _audit(lambda t, i: t[i], x, idx)
+    assert any(e.cls == "gather" and e.prim == "gather"
+               for e in rep.entries)
+
+
+def test_planted_cross_shard_reduction_reported():
+    rep = _audit(lambda x: jnp.sum(x), jnp.ones((C,), jnp.float32))
+    assert any(e.cls == "all_reduce" for e in rep.entries)
+
+
+def test_reduction_over_unsharded_axis_is_local():
+    # reducing the UNLABELED trailing axis keeps every lane independent
+    rep = _audit(lambda x: jnp.sum(x, axis=1),
+                 jnp.ones((C, 5), jnp.float32))
+    assert rep.entries == []
+
+
+def test_scatter_add_into_sharded_target_is_all_reduce():
+    tbl = jnp.zeros((C,), jnp.float32)
+    ids = jnp.zeros((8,), jnp.int32)
+    vals = jnp.ones((8,), jnp.float32)
+
+    rep = _audit(lambda t, i, v: t.at[i].add(v, mode="drop"),
+                 tbl, ids, vals)
+    assert any(e.cls == "all_reduce" and "scatter" in e.prim
+               for e in rep.entries)
+
+
+def test_cumsum_along_sharded_axis_needs_gather():
+    rep = _audit(lambda x: jnp.cumsum(x), jnp.ones((C,), jnp.float32))
+    assert any(e.cls == "gather" for e in rep.entries)
+
+
+# ---------------------------------------------------------------------------
+# Spec handling
+# ---------------------------------------------------------------------------
+
+def test_extent_collision_rejected():
+    with pytest.raises(ValueError, match="labeled both"):
+        ShardAudit({"C": (8,), "I": (8,)})
+
+
+def test_default_spec_separates_axes():
+    class Caps:
+        max_cloudlets = 96
+        max_instances = 12
+
+    spec = default_spec(Caps())
+    assert spec["C"] == (96,)
+    assert spec["I"] == (12, 13)      # [I] rows and [I+1] accumulators
+    ShardAudit(spec)                  # collision-free by construction
+
+
+# ---------------------------------------------------------------------------
+# Baseline comparator
+# ---------------------------------------------------------------------------
+
+def _report_for(fn, *example_args):
+    closed = jax.make_jaxpr(fn)(*example_args)
+    rep = audit_jaxpr(closed, SPEC, combo="test+combo")
+    return rep
+
+
+def test_baseline_roundtrip_is_clean():
+    rep = _report_for(lambda x: jnp.sum(x), jnp.ones((C,), jnp.float32))
+    baseline = baseline_json([rep])
+    assert compare_to_baseline([rep], baseline) == []
+
+
+def test_baseline_catches_new_cross_shard_eqn():
+    clean = _report_for(lambda x: x * 2.0, jnp.ones((C,), jnp.float32))
+    baseline = baseline_json([clean])
+    grown = _report_for(lambda x: x * jnp.sum(x),
+                        jnp.ones((C,), jnp.float32))
+    probs = compare_to_baseline([grown], baseline)
+    assert probs and any("grew" in p for p in probs)
+
+
+def test_baseline_catches_missing_combo():
+    rep = _report_for(lambda x: jnp.sum(x), jnp.ones((C,), jnp.float32))
+    probs = compare_to_baseline([rep], {"combos": {}})
+    assert probs and any("no committed shardability baseline" in p
+                         for p in probs)
+
+
+def test_committed_baseline_covers_golden_combos():
+    import json
+
+    from repro.analysis.simcheck import GOLDEN_COMBOS, SHARD_BASELINE_PATH
+
+    doc = json.loads(SHARD_BASELINE_PATH.read_text())
+    for net, fl in GOLDEN_COMBOS:
+        assert f"{net}+{fl}" in doc["combos"]
+
+
+def test_report_json_and_phase_table_shapes():
+    rep = _report_for(lambda x: jnp.sum(x), jnp.ones((C,), jnp.float32))
+    doc = rep.to_json()
+    assert doc["combo"] == "test+combo"
+    assert doc["n_total"] == rep.n_local + len(rep.entries)
+    assert all(isinstance(n, int) for n in doc["cross_shard"].values())
+    table = rep.phase_table()
+    assert all(set(v) == {"gather", "all_reduce"} for v in table.values())

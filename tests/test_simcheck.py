@@ -18,11 +18,13 @@ counter counts.
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
-from jax.experimental import enable_x64
+from jax.experimental import checkify, enable_x64
 
 from repro.analysis import jaxpr_lint, layout_check, recompile, streams
 from repro.analysis.simcheck import check_streams, run_simcheck
+from repro.core.pool import SlotAssignment, scatter_pool
 from repro.core.types import PHASE_COLUMNS, _layout_for
 
 # Pinned stream-derivation topologies (see analysis/streams.py).  If an
@@ -236,3 +238,60 @@ def test_compile_counter_silent_on_cache_hits():
         for s in range(5):
             f(jnp.float32(s))                  # value changes, shape fixed
     assert hits[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# REPRO_CHECKED=1: checkify lowering of declared-disjoint sites
+# ---------------------------------------------------------------------------
+
+def test_checked_mode_is_value_neutral(monkeypatch):
+    # The checkify asserts must not perturb the simulation: same seeds,
+    # same results, checked or not.
+    monkeypatch.delenv("REPRO_CHECKED", raising=False)
+    res0 = layout_check._tiny_sim("fabric", "chaos", False, False).run()
+    monkeypatch.setenv("REPRO_CHECKED", "1")
+    res1 = layout_check._tiny_sim("fabric", "chaos", False, False).run()
+    np.testing.assert_array_equal(
+        np.asarray(res0.state.requests.response),
+        np.asarray(res1.state.requests.response))
+    assert int(res0.state.counters.finished) == \
+        int(res1.state.counters.finished)
+
+
+def _forged_scatter(dst):
+    """scatter_pool call with a hand-forged (invalid) slot assignment."""
+    sim = layout_check._tiny_sim("uniform", "none", False, False)
+    cl = sim.init_state().cloudlets
+    cols = {n: 0 for n in cl.layout.columns}
+    i32 = jnp.int32
+    asg = SlotAssignment(dst=jnp.asarray(dst, i32),
+                         src=jnp.arange(len(dst), dtype=i32),
+                         live=jnp.ones((len(dst),), bool),
+                         n_assigned=jnp.asarray(len(dst), i32),
+                         n_dropped=jnp.asarray(0, i32))
+    return cl, lambda c: scatter_pool(c, asg, **cols)
+
+
+def test_checked_mode_catches_duplicate_slots(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKED", "1")
+    cl, fn = _forged_scatter([3, 3])    # two live lanes, one slot
+    err, _out = checkify.checkify(fn, errors=checkify.user_checks)(cl)
+    with pytest.raises(Exception, match="duplicate destination slot"):
+        err.throw()
+
+
+def test_checked_mode_catches_oob_live_destination(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKED", "1")
+    cl, fn = _forged_scatter([-5])      # live lane below the pool
+    err, _out = checkify.checkify(fn, errors=checkify.user_checks)(cl)
+    with pytest.raises(Exception, match="destination out of range"):
+        err.throw()
+
+
+def test_unchecked_mode_traces_no_asserts(monkeypatch):
+    # Without REPRO_CHECKED the same forged call is assert-free (the
+    # production program carries zero checkify overhead).
+    monkeypatch.delenv("REPRO_CHECKED", raising=False)
+    cl, fn = _forged_scatter([3, 3])
+    err, _out = checkify.checkify(fn, errors=checkify.user_checks)(cl)
+    assert err.get() is None

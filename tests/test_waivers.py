@@ -1,0 +1,93 @@
+"""Waiver-file tests (DESIGN.md §8): a waiver is a dated loan against
+the analyzers — matching suppresses, expiry and staleness both fail."""
+import datetime
+
+import pytest
+
+from repro.analysis.waivers import Waiver, apply_waivers, load_waivers
+
+TODAY = datetime.date(2026, 8, 8)
+
+
+def _w(rule, site="", expires=datetime.date(2026, 12, 31),
+       reason="tracked in #1"):
+    return Waiver(rule=rule, site=site, reason=reason, expires=expires)
+
+
+# ---------------------------------------------------------------------------
+# apply_waivers
+# ---------------------------------------------------------------------------
+
+def test_matching_waiver_suppresses_finding():
+    findings = [("donation", "[uniform+none] donation: 3/9 not donated"),
+                ("f64", "[uniform+none] f64: widening")]
+    surviving, probs = apply_waivers(findings, [_w("donation")], today=TODAY)
+    assert surviving == ["[uniform+none] f64: widening"]
+    assert probs == []
+
+
+def test_site_pins_waiver_to_one_finding():
+    findings = [("dup-scatter", "FAIL pool.py:26 ..."),
+                ("dup-scatter", "FAIL scheduler.py:99 ...")]
+    surviving, probs = apply_waivers(
+        findings, [_w("dup-scatter", site="pool.py:26")], today=TODAY)
+    assert surviving == ["FAIL scheduler.py:99 ..."]
+    assert probs == []
+
+
+def test_expired_waiver_fails_and_finding_survives():
+    findings = [("donation", "donation: not donated")]
+    surviving, probs = apply_waivers(
+        findings, [_w("donation", expires=datetime.date(2026, 1, 1))],
+        today=TODAY)
+    assert surviving == ["donation: not donated"]
+    assert len(probs) == 1 and "expired 2026-01-01" in probs[0]
+
+
+def test_unused_waiver_fails():
+    surviving, probs = apply_waivers([], [_w("oob-gather")], today=TODAY)
+    assert surviving == []
+    assert len(probs) == 1 and "matched no finding" in probs[0]
+
+
+# ---------------------------------------------------------------------------
+# load_waivers
+# ---------------------------------------------------------------------------
+
+def test_load_waivers_parses_toml(tmp_path):
+    p = tmp_path / "waivers.toml"
+    p.write_text(
+        '[[waiver]]\n'
+        'rule = "donation"\n'
+        'site = "pool.py:111"\n'
+        'reason = "tracked in #42"\n'
+        'expires = 2026-12-31\n')
+    ws = load_waivers(p)
+    assert ws == [Waiver("donation", "pool.py:111", "tracked in #42",
+                         datetime.date(2026, 12, 31))]
+
+
+def test_load_waivers_missing_key_raises(tmp_path):
+    p = tmp_path / "waivers.toml"
+    p.write_text('[[waiver]]\nrule = "donation"\nexpires = 2026-12-31\n')
+    with pytest.raises(ValueError, match="missing required"):
+        load_waivers(p)
+
+
+def test_load_waivers_bad_expiry_type_raises(tmp_path):
+    p = tmp_path / "waivers.toml"
+    p.write_text('[[waiver]]\nrule = "x"\nreason = "y"\n'
+                 'expires = "2026-12-31"\n')
+    with pytest.raises(ValueError, match="TOML date"):
+        load_waivers(p)
+
+
+def test_load_waivers_missing_file_is_empty(tmp_path):
+    assert load_waivers(tmp_path / "absent.toml") == []
+
+
+def test_committed_waiver_file_is_currently_empty():
+    # Acceptance bar for this PR: every site proven/declared, ZERO
+    # non-expiring waivers.  If this fails, someone added a waiver —
+    # make sure it carries a real reason and a near expiry.
+    assert load_waivers() == []
